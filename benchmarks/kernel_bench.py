@@ -1,0 +1,61 @@
+"""Kernel micro-bench: wall time of the Pallas kernels (interpret mode on CPU —
+these numbers validate correctness-path overhead, NOT TPU performance; the
+roofline derivation for real TPU lives in benchmarks/roofline.py) and of the
+pure-JAX equivalents the models use on CPU."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, csv_row, save_json
+from repro.kernels import ops, ref
+
+
+def _bench(fn, *args, iters=3):
+    fn(*args)  # compile/interpret warmup
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return 1e6 * (time.time() - t0) / iters
+
+
+def run() -> dict:
+    rng = np.random.RandomState(0)
+    out = {}
+
+    B, S, H, hd = 1, 512, 4, 64
+    q, k, v = [jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
+               for _ in range(3)]
+    out["flash_pallas_interp_us"] = _bench(
+        lambda a, b, c: ops.flash_attention(a, b, c, block_q=128, block_k=128),
+        q, k, v, iters=2)
+    out["flash_ref_us"] = _bench(
+        jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)), q, k, v)
+
+    x = jnp.asarray(rng.randn(1 << 20).astype(np.float32))
+    out["block_topk_pallas_interp_us"] = _bench(
+        lambda t: ops.block_topk(t, block=1024, k=16), x, iters=2)
+    out["block_topk_ref_us"] = _bench(
+        jax.jit(lambda t: ref.block_topk_ref(t, 1024, 16)), x)
+
+    g, vv, gg = [jnp.asarray(rng.randn(1 << 20).astype(np.float32))
+                 for _ in range(3)]
+    out["ef_update_fused_interp_us"] = _bench(
+        lambda a, b, c: ops.ef21_sgdm_update(a, b, c, eta=0.1), g, vv, gg,
+        iters=2)
+    out["ef_update_ref_us"] = _bench(
+        jax.jit(lambda a, b, c: ref.ef21_sgdm_update_ref(
+            a, b, c, eta=0.1, block=1024, k=16)), g, vv, gg)
+
+    save_json("kernel_bench", out)
+    csv_row("kernel_bench", out["flash_pallas_interp_us"],
+            f"topk_ref_us={out['block_topk_ref_us']:.0f};"
+            f"ef_ref_us={out['ef_update_ref_us']:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Benchmark suite entry point — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,exp1,...]
+
+Each module prints a ``name,us_per_call,derived`` CSV row and writes the full
+payload to results/<name>.json. The roofline module consumes the dry-run JSON
+(run ``python -m repro.launch.dryrun --all --out results/dryrun_baseline_1pod.json``
+first; a checked-in copy is used if present).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ALL = ["fig1", "exp1", "exp2", "exp3", "exp4", "complexity", "kernels",
+       "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    args = ap.parse_args()
+    chosen = args.only.split(",") if args.only else ALL
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in chosen:
+        try:
+            if name == "fig1":
+                from benchmarks import fig1_divergence as m
+            elif name == "exp1":
+                from benchmarks import exp1_batchsize as m
+            elif name == "exp2":
+                from benchmarks import exp2_nspeedup as m
+            elif name == "exp3":
+                from benchmarks import exp3_quadratic as m
+            elif name == "exp4":
+                from benchmarks import exp4_neuralnet as m
+            elif name == "complexity":
+                from benchmarks import complexity_check as m
+            elif name == "kernels":
+                from benchmarks import kernel_bench as m
+            elif name == "roofline":
+                from benchmarks import roofline as m
+                if os.path.exists("results/dryrun_baseline_1pod.json"):
+                    m.run()
+                else:
+                    print("roofline,0,SKIP(no dry-run json; run "
+                          "repro.launch.dryrun --all first)")
+                continue
+            else:
+                print(f"{name},0,UNKNOWN")
+                continue
+            m.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name},0,FAILED({type(e).__name__})")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""npz-based pytree checkpointing with step metadata and atomic writes."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+_NATIVE_KINDS = set("biufc")
+
+
+def save(path: str, tree: PyTree, step: int = 0, meta: Optional[dict] = None
+         ) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    # extension dtypes (bfloat16, fp8) round-trip poorly through npz: store as
+    # f32 — restore() casts back to the target leaf dtype (lossless for bf16)
+    flat = {k: (v if v.dtype.kind in _NATIVE_KINDS
+                else np.asarray(jax.device_get(v), np.float32))
+            for k, v in flat.items()}
+    flat["__meta__"] = np.frombuffer(
+        json.dumps({"step": step, **(meta or {})}).encode(), dtype=np.uint8)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp.npz")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp if tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, like: PyTree) -> Tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        for path_keys, leaf in leaves_like:
+            key = _SEP.join(_part(p) for p in path_keys)
+            arr = z[key]
+            if arr.shape != leaf.shape:
+                raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+            # cast via jax (numpy lacks native bf16 cast support)
+            out.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out), meta
+
+
+def latest(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    cands = [f for f in os.listdir(ckpt_dir) if f.endswith(".npz")]
+    if not cands:
+        return None
+    return os.path.join(ckpt_dir, max(cands))

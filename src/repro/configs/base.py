@@ -1,0 +1,194 @@
+"""Architecture & run configuration system.
+
+Every assigned architecture gets one module ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` (full size, exercised only via the dry-run) and ``smoke_config()``
+(reduced variant for CPU tests: ≤2 layers, d_model ≤ 512, ≤4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    citation: str
+
+    num_layers: int = 12
+    d_model: int = 1024
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: Optional[int] = None   # default d_model // num_heads
+    d_ff: int = 4096
+    vocab_size: int = 32000
+
+    # attention flavour
+    sliding_window: Optional[int] = None     # SWA width (h2o-danube, gemma2 local)
+    local_global: bool = False               # gemma2: alternate local/global layers
+    logit_softcap: Optional[float] = None    # gemma2 attn softcap
+    final_softcap: Optional[float] = None    # gemma2 final-logit softcap
+    rope_theta: float = 10000.0
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_impl: str = "dispatch"        # 'dispatch' | 'dense' (see moe.py §Perf)
+
+    # SSM
+    ssm_variant: Optional[str] = None        # 'mamba1' | 'mamba2'
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64                   # mamba2 head size
+    ssm_dt_rank: Optional[int] = None        # mamba1: default ceil(d_model/16)
+
+    # hybrid (zamba2): one SHARED attention block applied every k SSM layers
+    hybrid_attn_every: int = 0
+
+    # modality frontend stub: None | 'audio' | 'vision'
+    frontend: Optional[str] = None
+    frontend_tokens: int = 0                 # vision: # patch embeddings prepended
+
+    # TP head padding (beyond-paper §Perf): when num_heads/num_kv_heads don't
+    # divide the model axis, pad q heads to a multiple of `tp_pad_heads` and
+    # MHA-expand kv (replicate each kv head over its query group; padded q
+    # heads get zero output rows → function preserved exactly, and attention
+    # shards over TP instead of replicating). 0 = off.
+    tp_pad_heads: int = 0
+
+    # numerics / memory
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    norm_eps: float = 1e-6
+    remat: bool = True                       # activation checkpoint each block
+    attn_chunk: int = 512                    # chunked-attention block size
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def eff_heads(self) -> Tuple[int, int]:
+        """(H_eff, KV_eff) after optional TP head padding (MHA-expand)."""
+        H, KV = self.num_heads, self.num_kv_heads
+        t = self.tp_pad_heads
+        if not t or H == 0 or (H % t == 0 and KV % t == 0):
+            return H, KV
+        Hp = -(-H // t) * t
+        return Hp, Hp
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank if self.ssm_dt_rank is not None \
+            else -(-self.d_model // 16)
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """Sub-quadratic state at 500k decode: SSM/hybrid or sliding-window dense."""
+        return (self.family in ("ssm", "hybrid")
+                or self.sliding_window is not None or self.local_global)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS = 6·N·D)."""
+        d, L = self.d_model, self.num_layers
+        hd = self.head_dim_
+        n = self.vocab_size * d                     # embedding (tied output head)
+        per_layer = 0
+        if self.family in ("dense", "moe", "audio", "vlm", "hybrid"):
+            attn = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) \
+                + (self.num_heads * hd) * d
+        if self.family in ("dense", "audio", "vlm"):
+            per_layer = attn + 3 * d * self.d_ff + 2 * d
+        elif self.family == "moe":
+            ff = self.d_ff
+            per_layer = attn + self.num_experts * 3 * d * ff + d * self.num_experts + 2 * d
+        elif self.family == "ssm":
+            di = self.d_inner
+            per_layer = (2 * d * di + self.ssm_conv * di
+                         + di * (self.dt_rank + 2 * self.ssm_state)
+                         + self.dt_rank * di + di * self.ssm_state + di
+                         + di * d + d)
+        elif self.family == "hybrid":
+            di = self.d_inner
+            nh = di // self.ssm_head_dim
+            per_layer = (d * (2 * di + 2 * self.ssm_state + nh) + self.ssm_conv
+                         * (di + 2 * self.ssm_state) + nh + nh + di + di * d + d)
+            n += attn + 3 * d * self.d_ff   # one shared attention(+mlp) block
+        n += per_layer * L + d               # final norm
+        if self.frontend is not None:
+            n += d * d                       # frontend projector stub
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        total = self.param_count()
+        moe_all = L * self.num_experts * 3 * d * self.d_ff
+        moe_active = L * self.num_experts_per_tok * 3 * d * self.d_ff
+        return total - moe_all + moe_active
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "falcon_mamba_7b", "musicgen_medium", "granite_34b", "zamba2_1p2b",
+    "smollm_360m", "gemma2_9b", "internvl2_76b", "h2o_danube3_4b",
+    "olmoe_1b_7b", "grok1_314b",
+]
+
+# public --arch ids (hyphenated) → module names
+ARCH_ALIASES = {
+    "falcon-mamba-7b": "falcon_mamba_7b", "musicgen-medium": "musicgen_medium",
+    "granite-34b": "granite_34b", "zamba2-1.2b": "zamba2_1p2b",
+    "smollm-360m": "smollm_360m", "gemma2-9b": "gemma2_9b",
+    "internvl2-76b": "internvl2_76b", "h2o-danube-3-4b": "h2o_danube3_4b",
+    "olmoe-1b-7b": "olmoe_1b_7b", "grok-1-314b": "grok1_314b",
+}
+
+
+def get(arch: str) -> ArchConfig:
+    mod_name = ARCH_ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_smoke(arch: str) -> ArchConfig:
+    mod_name = ARCH_ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.smoke_config()

@@ -1,0 +1,266 @@
+"""Compression operators from the paper (Definitions 1 & 2) and production variants.
+
+Contractive compressors (Definition 1):   E‖C(x) − x‖² ≤ (1 − α)‖x‖²
+Absolute compressors  (Definition 2):     E‖C(x) − x‖² ≤ Δ²
+
+All compressors operate on flat 1-D arrays; the EF layer (core/ef.py) flattens /
+unflattens pytree leaves. Each compressor returns a *dense* array of the same shape
+(the canonical mathematical object C(x)); TopK-family compressors additionally expose
+``sparse()`` returning a fixed-size ``(values, indices)`` carrier used by the
+wire-optimized collective path (core/distributed.py).
+
+Randomized compressors accept a PRNG key; deterministic ones ignore it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _k_for(size: int, ratio: float, k: Optional[int]) -> int:
+    if k is not None:
+        return max(1, min(int(k), size))
+    return max(1, min(size, int(round(ratio * size))))
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base class. Subclasses must implement ``__call__``."""
+
+    def __call__(self, x: Array, rng: Optional[Array] = None) -> Array:
+        raise NotImplementedError
+
+    def alpha(self, d: int) -> float:
+        """Contraction parameter α for a d-dimensional input (1.0 = lossless)."""
+        return 1.0
+
+    @property
+    def is_contractive(self) -> bool:
+        return True
+
+    @property
+    def has_sparse_carrier(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    """C(x) = x. α = 1; EF21-SGDM with Identity reduces to plain SGDM (App. J)."""
+
+    def __call__(self, x: Array, rng=None) -> Array:
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Greedy TopK sparsifier [Stich et al., 2018]: keep K largest |x|. α = K/d."""
+
+    ratio: float = 0.01
+    k: Optional[int] = None
+
+    def _k(self, d: int) -> int:
+        return _k_for(d, self.ratio, self.k)
+
+    def alpha(self, d: int) -> float:
+        return self._k(d) / d
+
+    @property
+    def has_sparse_carrier(self) -> bool:
+        return True
+
+    def sparse(self, x: Array, rng=None) -> Tuple[Array, Array]:
+        k = self._k(x.size)
+        _, idx = jax.lax.top_k(jnp.abs(x), k)
+        return x[idx], idx.astype(jnp.int32)
+
+    def __call__(self, x: Array, rng=None) -> Array:
+        # threshold-mask form (no scatter — shards cleanly under vmap, and is
+        # exactly what the Pallas bisection kernel computes); ties may keep a
+        # few extra coordinates, which only *reduces* the compression error
+        k = self._k(x.size)
+        ax = jnp.abs(x)
+        vals = jax.lax.top_k(ax, k)[0]
+        thresh = vals[..., -1]
+        return jnp.where(ax >= thresh, x, jnp.zeros_like(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    """Uniformly random K-sparsification.
+
+    scaled=False: contractive (Def 1) with α = K/d (plain coordinate keep).
+    scaled=True:  multiplies kept coords by d/K → *unbiased* (used by MARINA-style
+                  methods); E‖C(x)−x‖² = (d/K − 1)‖x‖², NOT contractive for K < d/2.
+    """
+
+    ratio: float = 0.01
+    k: Optional[int] = None
+    scaled: bool = False
+
+    def _k(self, d: int) -> int:
+        return _k_for(d, self.ratio, self.k)
+
+    def alpha(self, d: int) -> float:
+        return self._k(d) / d if not self.scaled else 0.0
+
+    @property
+    def is_contractive(self) -> bool:
+        return not self.scaled
+
+    @property
+    def has_sparse_carrier(self) -> bool:
+        return True
+
+    def sparse(self, x: Array, rng=None) -> Tuple[Array, Array]:
+        assert rng is not None, "RandK requires a PRNG key"
+        k = self._k(x.size)
+        idx = jax.random.choice(rng, x.size, shape=(k,), replace=False).astype(jnp.int32)
+        vals = x[idx]
+        if self.scaled:
+            vals = vals * (x.size / k)
+        return vals, idx
+
+    def __call__(self, x: Array, rng=None) -> Array:
+        vals, idx = self.sparse(x, rng)
+        return jnp.zeros_like(x).at[idx].set(vals)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockTopK(Compressor):
+    """TPU-native TopK: exact TopK *within* contiguous blocks (DESIGN.md §4).
+
+    Satisfies Definition 1 with α = K_b/B = ratio (per-block TopK discards, within
+    every block, the smallest-magnitude mass: ‖C(x)−x‖² ≤ (1−K_b/B)‖x‖² summed over
+    blocks). The fixed per-block budget produces an aligned (values, indices) carrier.
+    The Pallas kernel (kernels/topk_compress.py) implements this selection via
+    threshold bisection; this class is the pure-jnp reference semantics.
+    """
+
+    ratio: float = 0.01
+    block: int = 1024
+    k_per_block: Optional[int] = None
+
+    def _kb(self) -> int:
+        if self.k_per_block is not None:
+            return max(1, min(self.k_per_block, self.block))
+        return max(1, int(round(self.ratio * self.block)))
+
+    def alpha(self, d: int) -> float:
+        return self._kb() / self.block
+
+    @property
+    def has_sparse_carrier(self) -> bool:
+        return True
+
+    def _blocks(self, x: Array) -> Tuple[Array, int]:
+        d = x.size
+        nb = -(-d // self.block)
+        pad = nb * self.block - d
+        xb = jnp.pad(x, (0, pad)).reshape(nb, self.block)
+        return xb, pad
+
+    def sparse(self, x: Array, rng=None) -> Tuple[Array, Array]:
+        xb, _ = self._blocks(x)
+        kb = self._kb()
+        _, idx = jax.lax.top_k(jnp.abs(xb), kb)              # (nb, kb) local indices
+        vals = jnp.take_along_axis(xb, idx, axis=1)
+        gidx = idx + jnp.arange(xb.shape[0])[:, None] * self.block
+        return vals.reshape(-1), gidx.reshape(-1).astype(jnp.int32)
+
+    def __call__(self, x: Array, rng=None) -> Array:
+        # per-block threshold mask (scatter-free; the Pallas kernel's semantics)
+        xb, _ = self._blocks(x)
+        ab = jnp.abs(xb)
+        vals = jax.lax.top_k(ab, self._kb())[0]
+        thresh = vals[:, -1:]
+        out = jnp.where(ab >= thresh, xb, jnp.zeros_like(xb))
+        return out.reshape(-1)[: x.size].reshape(x.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class HardThreshold(Compressor):
+    """Hard-threshold sparsifier [Sahu et al., 2021]: C(x) = x·1{|x| ≥ λ}.
+
+    An *absolute* compressor (Definition 2) with Δ = λ√d (each dropped coordinate
+    contributes < λ²). Used by EF21-SGDM-abs (Algorithm 4 / Theorem 6).
+    """
+
+    lam: float = 1e-3
+
+    @property
+    def is_contractive(self) -> bool:
+        return False
+
+    def delta(self, d: int) -> float:
+        return self.lam * (d ** 0.5)
+
+    def __call__(self, x: Array, rng=None) -> Array:
+        return jnp.where(jnp.abs(x) >= self.lam, x, jnp.zeros_like(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class NaturalCompression(Compressor):
+    """Natural compression [Horváth et al., 2019a]: stochastic rounding of |x| to a
+    power of two (keeps sign + exponent, drops mantissa). Unbiased; contractive-type
+    bound E‖C(x) − x‖² ≤ (1/8)‖x‖² → satisfies Definition 1 with α = 7/8 (wire: 9
+    bits/coord instead of 32)."""
+
+    def alpha(self, d: int) -> float:
+        return 7.0 / 8.0
+
+    def __call__(self, x: Array, rng=None) -> Array:
+        assert rng is not None, "NaturalCompression requires a PRNG key"
+        ax = jnp.abs(x)
+        lo = jnp.where(ax > 0, jnp.exp2(jnp.floor(jnp.log2(jnp.maximum(ax, 1e-38)))), 0.0)
+        hi = 2.0 * lo
+        p_hi = jnp.where(lo > 0, (ax - lo) / jnp.maximum(hi - lo, 1e-38), 0.0)
+        u = jax.random.uniform(rng, x.shape)
+        mag = jnp.where(u < p_hi, hi, lo)
+        return (jnp.sign(x) * mag).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rank1(Compressor):
+    """PowerSGD-style rank-1 approximation [Vogels et al., 2019] via one round of
+    power iteration on the (n×m) reshape of x. Contractive (greedy best rank-1 would
+    give α = σ₁²/‖x‖²; one power-iteration is a practical surrogate — projection onto
+    a rank-1 subspace never increases the error above ‖x‖²)."""
+
+    rows: int = 64
+
+    def alpha(self, d: int) -> float:
+        return 1.0 / max(2, min(self.rows, d // max(1, self.rows)))  # conservative
+
+    def __call__(self, x: Array, rng=None) -> Array:
+        d = x.size
+        r = min(self.rows, d)
+        m = -(-d // r)
+        M = jnp.pad(x.reshape(-1), (0, r * m - d)).reshape(r, m)
+        v = jnp.ones((m,), x.dtype) / jnp.sqrt(m)
+        u = M @ v
+        u = u / jnp.maximum(jnp.linalg.norm(u), 1e-12)
+        v = M.T @ u
+        approx = jnp.outer(u, v).reshape(-1)[:d]
+        return approx.reshape(x.shape)
+
+
+REGISTRY = {
+    "identity": Identity,
+    "topk": TopK,
+    "randk": RandK,
+    "block_topk": BlockTopK,
+    "hard_threshold": HardThreshold,
+    "natural": NaturalCompression,
+    "rank1": Rank1,
+}
+
+
+def make(name: str, **kwargs) -> Compressor:
+    if name not in REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name](**kwargs)

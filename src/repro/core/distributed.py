@@ -1,0 +1,274 @@
+"""Distributed EF gradient synchronization on a (pod, data, model) mesh.
+
+Mapping (DESIGN.md §3): the paper's n clients are the data-parallel groups of the
+mesh. Per-client EF state carries a leading ``dp`` axis sharded over the data mesh
+axes, so client i's (vᵢ, gᵢ, …) live exactly on client i's chips. Per-client
+gradients are obtained *inside* the jitted step by reshaping the global batch to
+(dp, B/dp, …) and vmapping the loss gradient — no collective is needed to keep them
+per-client, because batch and state shardings agree on the leading axis.
+
+Aggregation carriers:
+
+  'dense'  — paper-faithful semantics with a dense wire format: meanᵢ(cᵢ) lowers to
+             a d-word all-reduce over the data axes (what the paper's own
+             simulations do; no wire savings — the baseline for §Perf).
+  'sparse' — beyond-paper optimized carrier for TopK/BlockTopK: each client ships
+             its fixed-K (values, indices); an explicit sharding constraint forces
+             an all-gather of (dp·K) words over the data axes, followed by a local
+             scatter-add. Collective bytes drop by ~d/(dp·K) on the gradient-sync
+             path. Identical math (validated in tests against 'dense').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import compressors as comp_lib
+from repro.core import ef as ef_lib
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class EFConfig:
+    method: ef_lib.Method
+    carrier: str = "dense"                 # 'dense' | 'sparse'
+    data_axes: Tuple[str, ...] = ("data",)  # mesh axes forming the client dim
+    b_init_scale: bool = True              # Alg 1 line 2: init v⁰=g⁰ to first grads
+
+
+def _maybe_shard(x, spec):
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(jax.sharding.get_mesh(), spec))
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# per-client gradients
+# ---------------------------------------------------------------------------
+
+def per_client_value_and_grad(loss_fn: Callable, params: PyTree, batch: PyTree,
+                              dp: int) -> Tuple[jax.Array, PyTree, PyTree]:
+    """loss_fn(params, sub_batch) -> (loss, aux). Returns (mean loss, aux,
+    per-client grads with a leading dp axis)."""
+    def reshape(leaf):
+        b = leaf.shape[0]
+        assert b % dp == 0, f"global batch {b} not divisible by dp={dp}"
+        return leaf.reshape(dp, b // dp, *leaf.shape[1:])
+
+    batch_g = jax.tree_util.tree_map(reshape, batch)
+
+    def one(b):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+        return loss, aux, grads
+
+    losses, auxs, grads = jax.vmap(one)(batch_g)
+    aux = jax.tree_util.tree_map(lambda a: a.mean(0), auxs)
+    return losses.mean(), aux, grads
+
+
+# ---------------------------------------------------------------------------
+# EF state init
+# ---------------------------------------------------------------------------
+
+def init_ef_state(efc: EFConfig, params: PyTree, dp: int,
+                  init_grads: Optional[PyTree] = None) -> Dict:
+    """init_grads: optional per-client grads (dp leading) for Alg 1 line 2."""
+    method = efc.method
+    if init_grads is None:
+        clients = jax.vmap(lambda _: method.init(params))(jnp.arange(dp))
+        server = ef_lib.server_init(method, params)
+    else:
+        clients = jax.vmap(lambda g: method.init(params, init_grads=g))(init_grads)
+        server = ef_lib.server_init(
+            method, params,
+            jax.tree_util.tree_map(lambda g: g.mean(0), init_grads))
+    return {"clients": clients, "server": server}
+
+
+# ---------------------------------------------------------------------------
+# one synchronization round
+# ---------------------------------------------------------------------------
+
+def _sparse_aggregate(comp, deltas_flat: jax.Array, dp: int, d: int) -> Tuple[
+        jax.Array, jax.Array]:
+    """deltas_flat: (dp, d). Returns (agg (d,), c_dense (dp, d))."""
+    vals, idx = jax.vmap(comp.sparse)(deltas_flat)          # (dp, K) ×2
+    # local dense cᵢ (stays client-local; needed for the gᵢ state update)
+    c_dense = jax.vmap(
+        lambda v, i: jnp.zeros((d,), deltas_flat.dtype).at[i].set(v))(vals, idx)
+    # wire: ship only (values, indices) — force the all-gather of the small arrays
+    vals_g = _maybe_shard(vals, P(None, None))
+    idx_g = _maybe_shard(idx, P(None, None))
+    # scatter-ADD tolerates index collisions across clients (we want the sum)
+    agg = jnp.zeros((d,), deltas_flat.dtype).at[idx_g.reshape(-1)].add(
+        vals_g.reshape(-1)) / dp
+    return agg, c_dense
+
+
+def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
+                     rng: Optional[jax.Array], mesh, grads_specs: PyTree,
+                     state_specs: Dict, eta: Optional[float] = None
+                     ) -> Tuple[PyTree, Dict]:
+    """shard_map EF sync: each device runs its client's update on its LOCAL param
+    shard (per-shard Block-TopK — contractive with the same α, DESIGN.md §4), then
+    the aggregation collective is issued *explicitly*:
+
+      dense carrier : psum(cᵢ)/n over the client axes — an all-reduce of d/tp
+                      words per device (the paper-faithful wire format)
+      sparse carrier: all_gather of the local (values, indices) over the client
+                      axes — dp·K/tp words per device — followed by a local
+                      scatter-add (the beyond-paper wire format)
+
+    This keeps compression 100% collective-free (no flatten-induced gathers) and
+    makes the collective schedule ours rather than the SPMD partitioner's.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    method = efc.method
+    c_axes = efc.data_axes
+
+    def body(grads_l, clients_l, server_l, rng_l):
+        # local client index for rng decorrelation
+        if rng_l is not None:
+            idx = 0
+            for a in c_axes:
+                idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            rng_l = jax.random.fold_in(rng_l, idx)
+        sq = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
+        ex = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
+        g, cl = sq(grads_l), sq(clients_l)        # strip the client dim (local=1)
+        deltas, ctx = method.pre_compress(g, cl, eta=eta)
+
+        if efc.carrier == "sparse" and method.compressor.has_sparse_carrier:
+            # block-wise carriers: (nb, kb) values + BLOCK-LOCAL int32 indices —
+            # no flat index ever exceeds the block size, so leaves > 2³¹
+            # elements (grok expert weights) are safe, and the local cᵢ is a
+            # scatter-free threshold mask.
+            comp = method.compressor
+            block = getattr(comp, "block", 1024)
+            kb = comp._kb() if hasattr(comp, "_kb") else max(
+                1, int(getattr(comp, "ratio", 0.01) * block))
+            n = 1
+            for a in c_axes:
+                n *= jax.lax.axis_size(a)
+            c_loc, agg = [], []
+            dleaves, dtree = jax.tree_util.tree_flatten(deltas)
+            for leaf in dleaves:
+                d = leaf.size
+                nb = -(-d // block)
+                xb = jnp.pad(leaf.reshape(-1), (0, nb * block - d)
+                             ).reshape(nb, block)
+                ab = jnp.abs(xb)
+                vals, idx_ = jax.lax.top_k(ab, kb)           # (nb, kb)
+                thresh = vals[:, -1:]
+                c_loc.append(jnp.where(ab >= thresh, xb, 0.0)
+                             .reshape(-1)[:d].reshape(leaf.shape))
+                vv = jnp.take_along_axis(xb, idx_, axis=1)
+                vg, ig = vv, idx_.astype(jnp.int32)
+                for a in c_axes:                             # explicit wire
+                    vg = jax.lax.all_gather(vg, a)
+                    ig = jax.lax.all_gather(ig, a)
+                vg = vg.reshape(-1, nb, kb)                  # (n, nb, kb)
+                ig = ig.reshape(-1, nb, kb)
+                rows = jnp.broadcast_to(
+                    jnp.arange(nb, dtype=jnp.int32)[None, :, None], ig.shape)
+                buf = jnp.zeros((nb, block), xb.dtype
+                                ).at[rows, ig].add(vg) / n
+                agg.append(buf.reshape(-1)[:d].reshape(leaf.shape))
+            c_tree = jax.tree_util.tree_unflatten(dtree, c_loc)
+            msg_mean = jax.tree_util.tree_unflatten(dtree, agg)
+        else:
+            c_tree = ef_lib.tree_compress(method.compressor, deltas, rng_l)
+            msg_mean = jax.tree_util.tree_map(
+                lambda c: jax.lax.pmean(c, c_axes), c_tree)
+
+        msg, new_cl = method.post_compress(c_tree, ctx)
+        new_server = ef_lib.server_step(method, server_l, msg_mean)
+        return ex(new_cl), new_server, msg_mean
+
+    server_specs = state_specs["server"]
+    out_specs = (state_specs["clients"], server_specs, server_specs)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(grads_specs, state_specs["clients"], server_specs, P()),
+        out_specs=out_specs, check_rep=False)
+    new_clients, new_server, msg_mean = fn(
+        grads, ef_state["clients"], ef_state["server"], rng)
+    return new_server, {"clients": new_clients, "server": new_server}
+
+
+def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
+             rng: Optional[jax.Array], eta: Optional[float] = None
+             ) -> Tuple[PyTree, Dict]:
+    """grads: per-client (dp leading). Returns (gᵗ⁺¹ estimate, new ef_state)."""
+    method, dp = efc.method, jax.tree_util.tree_leaves(grads)[0].shape[0]
+    clients, server = ef_state["clients"], ef_state["server"]
+    rngs = jax.random.split(rng, dp) if rng is not None else None
+
+    if efc.carrier == "dense" or not method.compressor.has_sparse_carrier:
+        def upd(g, s, r):
+            return method.update(g, s, r, eta=eta)
+        if rngs is None:
+            msgs, new_clients = jax.vmap(lambda g, s: upd(g, s, None))(
+                grads, clients)
+        else:
+            msgs, new_clients = jax.vmap(upd)(grads, clients, rngs)
+        msg_mean = jax.tree_util.tree_map(lambda m: m.mean(0), msgs)
+    else:
+        deltas, ctxs = jax.vmap(
+            lambda g, s: method.pre_compress(g, s, eta=eta))(grads, clients)
+        comp = method.compressor
+        agg_leaves, c_leaves = [], []
+        dleaves, dtree = jax.tree_util.tree_flatten(deltas)
+        for leaf in dleaves:
+            d = int(leaf[0].size)
+            agg, c_dense = _sparse_aggregate(comp, leaf.reshape(dp, d), dp, d)
+            agg_leaves.append(agg.reshape(leaf.shape[1:]))
+            c_leaves.append(c_dense.reshape(leaf.shape))
+        msg_mean = jax.tree_util.tree_unflatten(dtree, agg_leaves)
+        c_tree = jax.tree_util.tree_unflatten(dtree, c_leaves)
+        _, new_clients = jax.vmap(method.post_compress)(c_tree, ctxs)
+
+    new_server = ef_lib.server_step(method, server, msg_mean)
+    return new_server, {"clients": new_clients, "server": new_server}
+
+
+# ---------------------------------------------------------------------------
+# full train step (composed in launch/train.py; kept here for reuse/tests)
+# ---------------------------------------------------------------------------
+
+def make_train_step(loss_fn: Callable, efc: EFConfig, optimizer, dp: int,
+                    eta: Optional[float] = None, mesh=None,
+                    grads_specs: Optional[PyTree] = None,
+                    state_specs: Optional[Dict] = None):
+    """Returns train_step(params, opt_state, ef_state, batch, rng, step).
+    With mesh+specs, the EF sync runs in explicit shard_map (production path);
+    otherwise the vmap path (single-device tests, exact global-TopK semantics)."""
+    from repro.optim.optimizer import apply_updates
+
+    def train_step(params, opt_state, ef_state, batch, rng, step):
+        loss, aux, grads = per_client_value_and_grad(loss_fn, params, batch, dp)
+        r_comp = jax.random.fold_in(rng, 1)
+        if mesh is not None and grads_specs is not None:
+            g_est, ef_state = ef_round_sharded(
+                efc, grads, ef_state, r_comp, mesh, grads_specs, state_specs,
+                eta=eta)
+        else:
+            g_est, ef_state = ef_round(efc, grads, ef_state, r_comp, eta=eta)
+        updates, opt_state = optimizer.update(g_est, opt_state, params, step)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss,
+                   "g_norm": jnp.sqrt(ef_lib.tree_norm_sq(g_est))}
+        return params, opt_state, ef_state, metrics
+
+    return train_step

@@ -1,0 +1,451 @@
+"""Error-feedback methods from the paper, as functional pytree transforms.
+
+Every method is a pair ``(init, update)``:
+
+  state  = method.init(params_like, init_grads=None)       # per-CLIENT state
+  msg, state' = method.update(grads, state, rng)           # one client step
+
+``msg`` is the vector the client transmits. The server/aggregation rule is given by
+``method.mode``:
+
+  'delta'    : the server maintains gᵗ and applies   gᵗ⁺¹ = gᵗ + meanᵢ(msgᵢ)
+               (EF21 family — msg is the compressed innovation cᵢ; Algorithm 1 line 10)
+  'absolute' : the server uses                        gᵗ⁺¹ = meanᵢ(msgᵢ)
+               (EF14 / SGD / SGDM — msg is the full local estimate)
+
+The model update is then ``x ← x − γ·gᵗ⁺¹`` (launch/train.py composes this with a full
+optimizer; benchmarks use the paper's plain step).
+
+Two-phase decomposition
+-----------------------
+``update`` factors as  pre_compress → C(·) → post_compress.  The distributed runtime
+(core/distributed.py) exploits this to swap the compression carrier (dense tensor vs
+fixed-K (values, indices)) and to fuse the whole client update into a single Pallas
+kernel (kernels/ef_update.py) without touching method semantics.
+
+Paper ↔ code map
+----------------
+  EF21-SGD        (5a)+(5ab)              → EF21SGD
+  EF21-SGDM       Algorithm 1             → EF21SGDM
+  EF21-SGD2M      Algorithm 3 / eq (10)   → EF21SGD2M
+  EF21-SGDM (abs) Algorithm 4             → EF21SGDMAbs
+  EF21-STORM/MVR  Algorithm 5 / eq (12)   → EF21STORM     (paired-noise gradients)
+  EF14-SGD        eq (64)–(65)            → EF14SGD
+  SGDM            eq (3) / Appendix J     → SGDM (== EF21SGDM with Identity)
+  NEOLITHIC       [Huang et al., 2022]    → Neolithic (R residual-compression rounds)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressors as comp_lib
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def tree_rngs(rng: jax.Array, tree: PyTree) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))
+
+
+def tree_compress(comp: comp_lib.Compressor, tree: PyTree, rng: Optional[jax.Array]) -> PyTree:
+    """Apply a flat-vector compressor leaf-wise (K budget ∝ leaf size)."""
+    if rng is None:
+        return jax.tree_util.tree_map(
+            lambda x: comp(x.reshape(-1)).reshape(x.shape), tree)
+    rngs = tree_rngs(rng, tree)
+    return jax.tree_util.tree_map(
+        lambda x, k: comp(x.reshape(-1), k).reshape(x.shape), tree, rngs)
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_lerp(a, b, eta):
+    """(1-eta)*a + eta*b — the Polyak momentum update, leaf-wise."""
+    return jax.tree_util.tree_map(
+        lambda x, y: ((1.0 - eta) * x.astype(jnp.float32)
+                      + eta * y.astype(jnp.float32)).astype(x.dtype), a, b)
+
+
+def tree_dim(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_norm_sq(tree) -> jax.Array:
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    if dtype is None:
+        return tree
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# method base
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    """Base EF method. Frozen dataclass → usable as a jit static argument."""
+
+    compressor: comp_lib.Compressor = comp_lib.Identity()
+    state_dtype: Optional[Any] = None   # None → follow grads; jnp.bfloat16 at LLM scale
+
+    name: str = "base"
+    mode: str = "delta"            # 'delta' | 'absolute'
+    needs_paired_grads: bool = False
+
+    # -- client: two-phase API ----------------------------------------------
+    def init(self, params_like: PyTree, init_grads: Optional[PyTree] = None) -> Dict:
+        raise NotImplementedError
+
+    def pre_compress(self, grads: PyTree, state: Dict, *, eta=None
+                     ) -> Tuple[PyTree, Dict]:
+        """→ (delta_to_compress, ctx)."""
+        raise NotImplementedError
+
+    def post_compress(self, c: PyTree, ctx: Dict) -> Tuple[PyTree, Dict]:
+        """→ (msg, new_state)."""
+        raise NotImplementedError
+
+    def update(self, grads: PyTree, state: Dict, rng: Optional[jax.Array] = None,
+               *, eta=None, **kw) -> Tuple[PyTree, Dict]:
+        delta, ctx = self.pre_compress(grads, state, eta=eta)
+        c = tree_compress(self.compressor, delta, rng)
+        return self.post_compress(c, ctx)
+
+    # -- accounting (paper plots use "# transmitted coordinates") -----------
+    def coords_per_message(self, d: int) -> float:
+        c = self.compressor
+        if isinstance(c, comp_lib.TopK):
+            return c._k(d)
+        if isinstance(c, comp_lib.RandK):
+            return c._k(d)
+        if isinstance(c, comp_lib.BlockTopK):
+            nb = -(-d // c.block)
+            return nb * c._kb()
+        if isinstance(c, comp_lib.NaturalCompression):
+            return d * 9.0 / 32.0
+        if isinstance(c, comp_lib.HardThreshold):
+            return d  # data-dependent; upper bound
+        return d
+
+    def _cast(self, tree):
+        return tree_cast(tree, self.state_dtype)
+
+    def _eta(self, eta):
+        if eta is not None:
+            return eta
+        return getattr(self, "eta", 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class EF21SGD(Method):
+    """EF21 with (mini/mega-batch) stochastic gradients — eq (5a)+(5ab).
+
+    The paper proves (Thm 1, idealized; Figs 1 & 4 empirically) that this method
+    fails near stationarity unless B = Ω(σ²/ε²).
+    """
+    name: str = "ef21_sgd"
+    mode: str = "delta"
+
+    def init(self, params_like, init_grads=None):
+        g = init_grads if init_grads is not None else tree_zeros_like(params_like)
+        return {"g": self._cast(g)}
+
+    def pre_compress(self, grads, state, *, eta=None):
+        return tree_sub(grads, state["g"]), {"g": state["g"]}
+
+    def post_compress(self, c, ctx):
+        g_new = tree_add(ctx["g"], c)
+        return c, {"g": self._cast(g_new)}
+
+
+@dataclasses.dataclass(frozen=True)
+class EF21SGDM(Method):
+    """EF21-SGDM — **Algorithm 1**, the paper's main contribution.
+
+      vᵗ⁺¹ = (1−η)vᵗ + η ∇f(xᵗ⁺¹, ξ)      (client momentum, line 6)
+      cᵗ⁺¹ = C(vᵗ⁺¹ − gᵗ)                  (line 7)
+      gᵗ⁺¹ = gᵗ + cᵗ⁺¹                     (line 8)
+
+    Theorem 3: batch-free, no BG/BGS, asymptotically optimal O(σ²/(nε⁴)) samples.
+    """
+    eta: float = 0.1
+    name: str = "ef21_sgdm"
+    mode: str = "delta"
+
+    def init(self, params_like, init_grads=None):
+        v = init_grads if init_grads is not None else tree_zeros_like(params_like)
+        return {"v": self._cast(v), "g": self._cast(v)}
+
+    def pre_compress(self, grads, state, *, eta=None):
+        v_new = tree_lerp(state["v"], grads, self._eta(eta))
+        return tree_sub(v_new, state["g"]), {"v": v_new, "g": state["g"]}
+
+    def post_compress(self, c, ctx):
+        g_new = tree_add(ctx["g"], c)
+        return c, {"v": self._cast(ctx["v"]), "g": self._cast(g_new)}
+
+
+@dataclasses.dataclass(frozen=True)
+class EF21SGD2M(Method):
+    """EF21-SGD2M — **Algorithm 3** (double momentum, eq (10)).
+
+      vᵗ⁺¹ = (1−η)vᵗ + η ∇f(xᵗ⁺¹, ξ);  uᵗ⁺¹ = (1−η)uᵗ + η vᵗ⁺¹;  c = C(uᵗ⁺¹ − gᵗ)
+
+    Corollary 3: removes the O(α^{-1/2}ε^{-3}) middle complexity term.
+    """
+    eta: float = 0.1
+    name: str = "ef21_sgd2m"
+    mode: str = "delta"
+
+    def init(self, params_like, init_grads=None):
+        v = init_grads if init_grads is not None else tree_zeros_like(params_like)
+        return {"v": self._cast(v), "u": self._cast(v), "g": self._cast(v)}
+
+    def pre_compress(self, grads, state, *, eta=None):
+        e = self._eta(eta)
+        v_new = tree_lerp(state["v"], grads, e)
+        u_new = tree_lerp(state["u"], v_new, e)
+        return tree_sub(u_new, state["g"]), \
+            {"v": v_new, "u": u_new, "g": state["g"]}
+
+    def post_compress(self, c, ctx):
+        g_new = tree_add(ctx["g"], c)
+        return c, {"v": self._cast(ctx["v"]), "u": self._cast(ctx["u"]),
+                   "g": self._cast(g_new)}
+
+
+@dataclasses.dataclass(frozen=True)
+class EF21SGDMIdeal(Method):
+    """EF21-SGDM-ideal — eq (14)+(15), the *conceptual* method of Theorem 4
+    (η=1 gives EF21-SGD-ideal, eq (5a)+(5aa), Theorem 1).
+
+      gᵢᵗ⁺¹ = ∇fᵢ(xᵗ⁺¹) + C(η·(∇fᵢ(xᵗ⁺¹, ξ) − ∇fᵢ(xᵗ⁺¹)))
+
+    Requires exact gradients (not implementable at paper-scale by design —
+    used for the Theorem 1 lower-bound reproduction): ``update`` takes
+    ``grads=(stoch_grad, exact_grad)``.
+    """
+    eta: float = 1.0
+    name: str = "ef21_sgdm_ideal"
+    mode: str = "absolute"          # server uses gᵗ = meanᵢ gᵢᵗ directly
+    needs_paired_grads: bool = True  # (stochastic, exact) pair
+
+    def init(self, params_like, init_grads=None):
+        return {}
+
+    def update(self, grads, state, rng=None, *, eta=None, **kw):
+        e = self._eta(eta)
+        g_stoch, g_exact = grads
+        noise = tree_scale(tree_sub(g_stoch, g_exact), e)
+        c = tree_compress(self.compressor, noise, rng)
+        return tree_add(g_exact, c), state
+
+
+@dataclasses.dataclass(frozen=True)
+class EF21SGDMAbs(Method):
+    """EF21-SGDM with an *absolute* compressor — **Algorithm 4**.
+
+    The innovation is scaled by 1/γ before compression and by γ after, so the
+    absolute error Δ enters the rate as γ²Δ² (Theorem 6):
+        cᵗ⁺¹ = γ·C((vᵗ⁺¹ − gᵗ)/γ)
+    """
+    eta: float = 0.1
+    gamma: float = 1e-2
+    name: str = "ef21_sgdm_abs"
+    mode: str = "delta"
+
+    def init(self, params_like, init_grads=None):
+        v = init_grads if init_grads is not None else tree_zeros_like(params_like)
+        return {"v": self._cast(v), "g": self._cast(v)}
+
+    def pre_compress(self, grads, state, *, eta=None):
+        v_new = tree_lerp(state["v"], grads, self._eta(eta))
+        innov = tree_scale(tree_sub(v_new, state["g"]), 1.0 / self.gamma)
+        return innov, {"v": v_new, "g": state["g"]}
+
+    def post_compress(self, c, ctx):
+        c = tree_scale(c, self.gamma)
+        g_new = tree_add(ctx["g"], c)
+        return c, {"v": self._cast(ctx["v"]), "g": self._cast(g_new)}
+
+
+@dataclasses.dataclass(frozen=True)
+class EF21STORM(Method):
+    """EF21-STORM/MVR — **Algorithm 5** (variance-reduced estimator, eq (12)).
+
+      wᵗ⁺¹ = ∇f(xᵗ⁺¹, ξᵗ⁺¹) + (1−η)(wᵗ − ∇f(xᵗ, ξᵗ⁺¹))
+
+    Requires TWO stochastic gradients under the SAME noise ξᵗ⁺¹ (the paper flags
+    this as a practical limitation, App. B): update takes ``grads=(g_new, g_prev)``.
+    """
+    eta: float = 0.1
+    name: str = "ef21_storm"
+    mode: str = "delta"
+    needs_paired_grads: bool = True
+
+    def init(self, params_like, init_grads=None):
+        w = init_grads if init_grads is not None else tree_zeros_like(params_like)
+        return {"w": self._cast(w), "g": self._cast(w)}
+
+    def pre_compress(self, grads, state, *, eta=None):
+        e = self._eta(eta)
+        g_new, g_prev = grads
+        w_new = tree_add(g_new, tree_scale(tree_sub(state["w"], g_prev), 1.0 - e))
+        return tree_sub(w_new, state["g"]), {"w": w_new, "g": state["g"]}
+
+    def post_compress(self, c, ctx):
+        g_out = tree_add(ctx["g"], c)
+        return c, {"w": self._cast(ctx["w"]), "g": self._cast(g_out)}
+
+
+@dataclasses.dataclass(frozen=True)
+class EF14SGD(Method):
+    """EF14-SGD [Seide et al., 2014] — eq (64)–(65), in gradient units.
+
+    pᵗ = eᵗ + ∇f(xᵗ, ξ);  msg = C(pᵗ);  eᵗ⁺¹ = pᵗ − msg.
+    For a constant step size this is exactly (64)–(65) with e and g divided by γ
+    (the standard implementation form, cf. Karimireddy et al. 2019).
+    """
+    name: str = "ef14_sgd"
+    mode: str = "absolute"
+
+    def init(self, params_like, init_grads=None):
+        return {"e": self._cast(tree_zeros_like(params_like))}
+
+    def pre_compress(self, grads, state, *, eta=None):
+        p = tree_add(state["e"], grads)
+        return p, {"p": p}
+
+    def post_compress(self, c, ctx):
+        e_new = tree_sub(ctx["p"], c)
+        return c, {"e": self._cast(e_new)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDM(Method):
+    """Plain Polyak SGDM — eq (3); analyzed untuned in Appendix J. No compression."""
+    eta: float = 0.1
+    name: str = "sgdm"
+    mode: str = "absolute"
+
+    def init(self, params_like, init_grads=None):
+        v = init_grads if init_grads is not None else tree_zeros_like(params_like)
+        return {"v": self._cast(v)}
+
+    def pre_compress(self, grads, state, *, eta=None):
+        v_new = tree_lerp(state["v"], grads, self._eta(eta))
+        return v_new, {"v": v_new}
+
+    def post_compress(self, c, ctx):
+        return c, {"v": self._cast(ctx["v"])}
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD(Method):
+    """Uncompressed distributed SGD (reference)."""
+    name: str = "sgd"
+    mode: str = "absolute"
+
+    def init(self, params_like, init_grads=None):
+        return {}
+
+    def pre_compress(self, grads, state, *, eta=None):
+        return grads, {}
+
+    def post_compress(self, c, ctx):
+        return c, {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Neolithic(Method):
+    """NEOLITHIC-style baseline [Huang et al., 2022]: R rounds of residual
+    compression per iteration (R = ⌈d/K⌉ per their Thm 3 → effectively transmits
+    every coordinate, which is why the paper's Fig 2 shows it losing per-bit)."""
+    rounds: int = 4
+    name: str = "neolithic"
+    mode: str = "absolute"
+
+    def init(self, params_like, init_grads=None):
+        return {}
+
+    def update(self, grads, state, rng=None, **kw):
+        acc = tree_zeros_like(grads)
+        resid = grads
+        for r in range(self.rounds):
+            k = None if rng is None else jax.random.fold_in(rng, r)
+            c = tree_compress(self.compressor, resid, k)
+            acc = tree_add(acc, c)
+            resid = tree_sub(resid, c)
+        return acc, state
+
+    def coords_per_message(self, d: int) -> float:
+        return self.rounds * super().coords_per_message(d)
+
+
+# ---------------------------------------------------------------------------
+# server-side aggregation
+# ---------------------------------------------------------------------------
+
+def server_init(method: Method, params_like: PyTree,
+                init_grads_mean: Optional[PyTree] = None) -> PyTree:
+    """The aggregated estimate gᵗ the server maintains (g⁰ = (1/n)Σ gᵢ⁰)."""
+    if method.mode == "delta":
+        g = init_grads_mean if init_grads_mean is not None \
+            else tree_zeros_like(params_like)
+        return g
+    return tree_zeros_like(params_like)
+
+
+def server_step(method: Method, g_server: PyTree, msg_mean: PyTree) -> PyTree:
+    if method.mode == "delta":
+        return tree_add(g_server, msg_mean)
+    return msg_mean
+
+
+REGISTRY = {
+    "ef21_sgdm_ideal": EF21SGDMIdeal,
+    "ef21_sgd": EF21SGD,
+    "ef21_sgdm": EF21SGDM,
+    "ef21_sgd2m": EF21SGD2M,
+    "ef21_sgdm_abs": EF21SGDMAbs,
+    "ef21_storm": EF21STORM,
+    "ef14_sgd": EF14SGD,
+    "sgdm": SGDM,
+    "sgd": SGD,
+    "neolithic": Neolithic,
+}
+
+
+def make(name: str, **kwargs) -> Method:
+    if name not in REGISTRY:
+        raise ValueError(f"unknown EF method {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name](**kwargs)

@@ -1,0 +1,268 @@
+"""Test problems used by the paper's experiments (§4, App. C).
+
+Each problem is an identity-hashable object (usable as a jit static argument) with:
+    init_x()                      -> pytree x⁰
+    stoch_grad(x, client, rng, B) -> pytree  (unbiased minibatch gradient of f_client)
+    full_grad(x)                  -> pytree  ∇f(x)   (metrics only)
+    loss(x)                       -> scalar  f(x)
+
+The container is offline, so the paper's MNIST / real-sim / CIFAR10 are replaced by
+shape-matched synthetic datasets with the *heterogeneous label split across clients*
+the paper uses ("we split the dataset across nodes by labels"). See EXPERIMENTS.md for
+the claim-by-claim validity discussion of this substitution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Problem:
+    __hash__ = object.__hash__
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 / Figure 1 construction
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class QuadraticT1(Problem):
+    """f(x) = (L/2)‖x‖², x ∈ ℝ², with the *adversarial* 3-point noise of Theorem 1:
+
+        ξ ∈ {(2,0), (0,1), (−2,−1)}·√(3σ²/(10B)) each w.p. 1/3.
+
+    E[ξ] = 0, E‖ξ‖² = σ²/B, but E[Top1(ξ)] = √(3σ²/10)·(0,1/3) ≠ 0 — the biased
+    compressor turns zero-mean noise into a systematic drift. EF21-SGD run on this
+    problem drifts away from the optimum along −e₂ (Figures 1 & 4)."""
+
+    L: float = 1.0
+    sigma: float = 1.0
+    x0: Tuple[float, float] = (0.0, -0.01)
+
+    def init_x(self):
+        return jnp.array(self.x0, dtype=jnp.float32)
+
+    def _zs(self, B):
+        s = jnp.sqrt(3.0 * self.sigma ** 2 / (10.0 * B))
+        return jnp.array([[2.0, 0.0], [0.0, 1.0], [-2.0, -1.0]], jnp.float32) * s
+
+    def stoch_grad(self, x, client, rng, B):
+        zs = self._zs(B)
+        ks = jax.random.split(rng, B)
+        xi = jax.vmap(lambda k: zs[jax.random.randint(k, (), 0, 3)])(ks).mean(0)
+        return self.L * x + xi
+
+    def full_grad(self, x):
+        return self.L * x
+
+    def client_grad(self, x, client):
+        return self.L * x          # homogeneous clients
+
+    def loss(self, x):
+        return 0.5 * self.L * jnp.sum(x * x)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: stochastic quadratic generator (Experiment 3 / Figure 7)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RandomQuadratics(Problem):
+    """fᵢ(x) = ½xᵀQᵢx − xᵀbᵢ with Qᵢ generated exactly by the paper's Algorithm 2
+    (noisy scaled tridiagonal, mean-matrix min-eigenvalue normalized to λ).
+    ∇fᵢ(x, ξ) = ∇fᵢ(x) + ξᵢ, ξᵢ ~ N(0, σ²I)."""
+
+    n: int = 100
+    d: int = 1000
+    lam: float = 0.01
+    scale: float = 1.0
+    sigma: float = 0.001
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        n, d, s = self.n, self.d, self.scale
+        mu_s = 1.0 + s * rng.randn(n)
+        mu_b = s * rng.randn(n)
+        base = (np.diag(2.0 * np.ones(d)) + np.diag(-np.ones(d - 1), 1)
+                + np.diag(-np.ones(d - 1), -1))
+        Qs = np.stack([(m / 4.0) * base for m in mu_s])          # (n, d, d)
+        bs = np.zeros((n, d))
+        bs[:, 0] = (mu_s / 4.0) * (-1.0 + mu_b)
+        Qmean = Qs.mean(0)
+        lam_min = np.linalg.eigvalsh(Qmean).min()
+        Qs = Qs + (self.lam - lam_min) * np.eye(d)
+        object.__setattr__(self, "_Q", jnp.asarray(Qs, jnp.float32))
+        object.__setattr__(self, "_b", jnp.asarray(bs, jnp.float32))
+
+    def init_x(self):
+        x = np.zeros(self.d, np.float32)
+        x[0] = np.sqrt(self.d)
+        return jnp.asarray(x)
+
+    def stoch_grad(self, x, client, rng, B):
+        g = self._Q[client] @ x - self._b[client]
+        noise = self.sigma * jax.random.normal(rng, (B, self.d)).mean(0)
+        return g + noise
+
+    def client_grad(self, x, client):
+        return self._Q[client] @ x - self._b[client]
+
+    def full_grad(self, x):
+        return jnp.einsum("nij,j->i", self._Q, x) / self.n - self._b.mean(0)
+
+    def loss(self, x):
+        q = 0.5 * jnp.einsum("i,nij,j->", x, self._Q, x) / self.n
+        return q - x @ self._b.mean(0)
+
+
+# ---------------------------------------------------------------------------
+# Experiments 1 & 2: nonconvex-regularized softmax logistic regression
+# ---------------------------------------------------------------------------
+
+def _make_classification(rng: np.random.RandomState, m: int, l: int, c: int,
+                         label_noise: float = 0.15):
+    """Synthetic classification data with class structure. ``label_noise``
+    flips a fraction of labels so the problem is NOT interpolable — otherwise
+    σ → 0 at the optimum and the paper's small-batch pathology (which needs
+    persistent gradient noise) disappears."""
+    centers = rng.randn(c, l) * 1.5
+    y = rng.randint(0, c, size=m)
+    a = centers[y] + rng.randn(m, l)
+    flip = rng.rand(m) < label_noise
+    y = np.where(flip, rng.randint(0, c, size=m), y)
+    return a.astype(np.float32), y.astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LogisticRegression(Problem):
+    """§4: fᵢ = −(1/m)Σⱼ log softmax(aᵢⱼᵀ x_{yᵢⱼ}) + λ Σ_{y,k} x²/(1+x²)
+    with the nonconvex regularizer; data split across clients BY LABEL (the paper's
+    heterogeneous protocol, App. C "Implementation Details")."""
+
+    n: int = 10
+    m_per_client: int = 512
+    l: int = 64          # features (paper: 784 MNIST / 20958 real-sim; scaled)
+    c: int = 10          # classes
+    lam: float = 1e-3
+    seed: int = 0
+    heterogeneous: bool = True
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        m_total = self.n * self.m_per_client
+        a, y = _make_classification(rng, m_total, self.l, self.c)
+        if self.heterogeneous and self.n > 1:
+            order = np.argsort(y, kind="stable")      # label split
+            a, y = a[order], y[order]
+        a = np.concatenate([a, np.ones((m_total, 1), np.float32)], axis=1)  # bias
+        A = a.reshape(self.n, self.m_per_client, self.l + 1)
+        Y = y.reshape(self.n, self.m_per_client)
+        object.__setattr__(self, "_A", jnp.asarray(A))
+        object.__setattr__(self, "_Y", jnp.asarray(Y))
+
+    @property
+    def dim(self):
+        return self.c * (self.l + 1)
+
+    def init_x(self):
+        return jnp.zeros((self.c, self.l + 1), jnp.float32)
+
+    def _loss_client(self, x, a, y):
+        logits = a @ x.T                                   # (B, c)
+        ce = -jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                  y[:, None], axis=1).mean()
+        return ce
+
+    def _reg(self, x):
+        return self.lam * jnp.sum(x * x / (1.0 + x * x))
+
+    def stoch_grad(self, x, client, rng, B):
+        idx = jax.random.randint(rng, (B,), 0, self.m_per_client)
+        a = self._A[client][idx]
+        y = self._Y[client][idx]
+        return jax.grad(lambda w: self._loss_client(w, a, y) + self._reg(w))(x)
+
+    def full_grad(self, x):
+        def fg(a, y):
+            return jax.grad(lambda w: self._loss_client(w, a, y))(x)
+        g = jax.vmap(fg)(self._A, self._Y)
+        return g.mean(0) + jax.grad(self._reg)(x)
+
+    def loss(self, x):
+        ls = jax.vmap(lambda a, y: self._loss_client(x, a, y))(self._A, self._Y)
+        return ls.mean() + self._reg(x)
+
+
+# ---------------------------------------------------------------------------
+# Experiment 4: neural-network training (scaled-down ResNet stand-in)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MLPClassification(Problem):
+    """Two-hidden-layer MLP classifier on synthetic data with the label-split client
+    partition — the container-scale stand-in for the paper's ResNet18/CIFAR10 run
+    (Figures 8–9). Same qualitative claim: method ordering under compression."""
+
+    n: int = 5
+    m_per_client: int = 256
+    in_dim: int = 32
+    hidden: int = 64
+    c: int = 10
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        m_total = self.n * self.m_per_client
+        a, y = _make_classification(rng, m_total, self.in_dim, self.c)
+        order = np.argsort(y, kind="stable")
+        a, y = a[order], y[order]
+        object.__setattr__(self, "_A", jnp.asarray(
+            a.reshape(self.n, self.m_per_client, self.in_dim)))
+        object.__setattr__(self, "_Y", jnp.asarray(
+            y.reshape(self.n, self.m_per_client)))
+
+    def init_x(self):
+        r = np.random.RandomState(self.seed + 1)
+        def glorot(i, o):
+            return jnp.asarray(r.randn(i, o).astype(np.float32)
+                               * np.sqrt(2.0 / (i + o)))
+        return {
+            "w1": glorot(self.in_dim, self.hidden), "b1": jnp.zeros(self.hidden),
+            "w2": glorot(self.hidden, self.hidden), "b2": jnp.zeros(self.hidden),
+            "w3": glorot(self.hidden, self.c), "b3": jnp.zeros(self.c),
+        }
+
+    def _forward(self, p, a):
+        h = jax.nn.relu(a @ p["w1"] + p["b1"])
+        h = jax.nn.relu(h @ p["w2"] + p["b2"])
+        return h @ p["w3"] + p["b3"]
+
+    def _loss_batch(self, p, a, y):
+        logits = self._forward(p, a)
+        return -jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                    y[:, None], axis=1).mean()
+
+    def stoch_grad(self, x, client, rng, B):
+        idx = jax.random.randint(rng, (B,), 0, self.m_per_client)
+        return jax.grad(self._loss_batch)(x, self._A[client][idx],
+                                          self._Y[client][idx])
+
+    def full_grad(self, x):
+        g = jax.vmap(lambda a, y: jax.grad(self._loss_batch)(x, a, y))(
+            self._A, self._Y)
+        return jax.tree_util.tree_map(lambda v: v.mean(0), g)
+
+    def loss(self, x):
+        return jax.vmap(lambda a, y: self._loss_batch(x, a, y))(
+            self._A, self._Y).mean()
+
+    def accuracy(self, x):
+        logits = self._forward(x, self._A.reshape(-1, self.in_dim))
+        pred = logits.argmax(-1)
+        return (pred == self._Y.reshape(-1)).mean()

@@ -1,0 +1,42 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` (the Pallas
+interpreter runs the kernel body op-for-op — the correctness target validated
+against ref.py). On TPU, ``interpret=False`` compiles to Mosaic. The model code
+selects between these wrappers and the pure-JAX paths via ``use_pallas``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ef_update as _ef
+from repro.kernels import flash_attention as _fa
+from repro.kernels import topk_compress as _tk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256) -> jax.Array:
+    """(B,S,H,hd) attention; GQA callers expand kv heads first."""
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block", "k"))
+def block_topk(x, *, block: int = 1024, k: int = 16) -> jax.Array:
+    return _tk.block_topk(x, block=block, k=k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "block", "k"))
+def ef21_sgdm_update(grad, v, g, *, eta: float, block: int = 1024,
+                     k: int = 16) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    return _ef.ef21_sgdm_update(grad, v, g, eta=eta, block=block, k=k,
+                                interpret=_interpret())

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """q,k,v: (B, S, H, hd) (same head counts — GQA expansion done by caller).
+    Plain materialized-softmax attention in f32."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def block_topk_ref(x: jax.Array, block: int, k: int) -> jax.Array:
+    """Block-TopK sparsification: within each contiguous `block`, zero everything
+    but the k largest-|·| entries (ties keep the earliest index, matching the
+    kernel's >threshold-and-capacity rule)."""
+    d = x.size
+    nb = -(-d // block)
+    xb = jnp.pad(x.reshape(-1), (0, nb * block - d)).reshape(nb, block)
+    ab = jnp.abs(xb)
+    # exact top-k with deterministic tie-break by index (earlier wins)
+    order = jnp.argsort(-ab, axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)
+    out = jnp.where(ranks < k, xb, 0.0)
+    return out.reshape(-1)[:d].reshape(x.shape)
+
+
+def ef21_sgdm_update_ref(grad: jax.Array, v: jax.Array, g: jax.Array, *,
+                         eta: float, block: int, k: int
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused EF21-SGDM client update (Algorithm 1 lines 6–8) with Block-TopK:
+       v' = (1−η)v + η·grad;  c = BlockTopK(v' − g);  g' = g + c.
+    Returns (v', g', c)."""
+    v_new = (1.0 - eta) * v + eta * grad
+    c = block_topk_ref(v_new - g, block, k)
+    return v_new, g + c, c

@@ -1,0 +1,133 @@
+"""Step-function + input-spec construction shared by dryrun / train / serve.
+
+``build_step(cfg, shape, mesh, plan, efc)`` returns (fn, specs_tuple) such that
+``jax.jit(fn).lower(*specs_tuple)`` is the multi-pod dry-run artifact, and calling
+``fn`` on real arrays is the production step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import compressors as comp_lib
+from repro.core import distributed as dist
+from repro.core import ef as ef_lib
+from repro.launch import mesh as mesh_lib
+from repro.launch import shardings as sh
+from repro.models import model as model_lib
+from repro.optim import optimizer as opt_lib
+
+
+def default_ef_config(mesh, plan: sh.ShardPlan,
+                      method_name: str = "ef21_sgdm",
+                      compressor_name: str = "block_topk",
+                      ratio: float = 0.01, eta: float = 0.1,
+                      carrier: str = "dense") -> dist.EFConfig:
+    comp = (comp_lib.make(compressor_name, ratio=ratio)
+            if compressor_name != "identity" else comp_lib.Identity())
+    state_dtype = jnp.bfloat16 if plan.ef_state_dtype == "bfloat16" else None
+    kwargs: Dict[str, Any] = {"compressor": comp, "state_dtype": state_dtype}
+    if method_name in ("ef21_sgdm", "ef21_sgd2m", "sgdm", "ef21_storm"):
+        kwargs["eta"] = eta
+    method = ef_lib.make(method_name, **kwargs)
+    # the EF client axes follow the plan's client granularity (pod clients
+    # aggregate over 'pod' only; the within-pod mean happens in the vmapped
+    # per-client loss)
+    c_ax = sh.client_axis(mesh, plan)
+    if c_ax is None:
+        c_ax = ()
+    elif isinstance(c_ax, str):
+        c_ax = (c_ax,)
+    return dist.EFConfig(method=method, carrier=carrier, data_axes=tuple(c_ax))
+
+
+def _replicated(mesh, x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                sharding=NamedSharding(mesh, P()))
+
+
+def arch_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Per-shape serving overrides (DESIGN.md §5): zamba2's shared attention gets a
+    4k sliding window in the long-context config."""
+    if shape.name == "long_500k" and cfg.family == "hybrid" \
+            and cfg.sliding_window is None:
+        return dataclasses.replace(cfg, sliding_window=4096)
+    return cfg
+
+
+def build_train_step(cfg: ArchConfig, shape: InputShape, mesh,
+                     plan: sh.ShardPlan, efc: dist.EFConfig,
+                     optimizer_name: str = "sgd", lr: float = 1e-2):
+    """Returns (train_step, (params, opt_state, ef_state, batch, rng, step))."""
+    n = sh.n_clients(mesh, plan)
+    opt = opt_lib.make(optimizer_name, lr=lr)
+
+    def loss_fn(p, b):
+        return model_lib.train_loss(cfg, p, b)
+
+    params = sh.param_specs(cfg, mesh)
+    batch = sh.batch_specs(cfg, mesh, shape, "train")
+
+    ef_shapes = jax.eval_shape(
+        lambda: dist.init_ef_state(
+            efc, model_lib.init_params(cfg, jax.random.PRNGKey(0)), n))
+    ef_specs_p = sh.ef_state_pspecs(cfg, mesh, plan, efc.method)
+    ef_state = sh._sds(ef_shapes, ef_specs_p, mesh)
+
+    # per-client grads share the client-state layout (leading client axis)
+    grads_specs = sh._spec_map(
+        lambda s: sh.P(sh.client_axis(mesh, plan), *s),
+        sh.params_pspecs(cfg, mesh))
+    step_fn = dist.make_train_step(
+        loss_fn, efc, opt, n,
+        mesh=mesh if mesh.size > 1 else None,
+        grads_specs=grads_specs, state_specs=ef_specs_p)
+
+    opt_shapes = jax.eval_shape(
+        lambda: opt.init(model_lib.init_params(cfg, jax.random.PRNGKey(0))))
+    opt_pspecs = {k: sh.params_pspecs(cfg, mesh) for k in opt_shapes.keys()} \
+        if isinstance(opt_shapes, dict) and opt_shapes else opt_shapes
+    opt_state = sh._sds(opt_shapes, opt_pspecs, mesh) if opt_shapes else {}
+
+    rng = _replicated(mesh, jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+    step = _replicated(mesh, jax.eval_shape(lambda: jnp.zeros((), jnp.int32)))
+    return step_fn, (params, opt_state, ef_state, batch, rng, step)
+
+
+def build_prefill(cfg: ArchConfig, shape: InputShape, mesh):
+    def fn(params, batch, cache):
+        return model_lib.prefill(cfg, params, batch, cache)
+    params = sh.param_specs(cfg, mesh)
+    batch = sh.batch_specs(cfg, mesh, shape, "prefill")
+    cache = sh.cache_specs(cfg, mesh, shape)
+    return fn, (params, batch, cache)
+
+
+def build_decode(cfg: ArchConfig, shape: InputShape, mesh):
+    def fn(params, cache, tokens, pos):
+        return model_lib.decode_step(cfg, params, cache, tokens, pos)
+    params = sh.param_specs(cfg, mesh)
+    cache = sh.cache_specs(cfg, mesh, shape)
+    B = shape.global_batch
+    b_ax = mesh_lib.data_axes(mesh) if B % mesh_lib.dp_size(mesh) == 0 else None
+    tokens = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32, sharding=NamedSharding(mesh, P(b_ax, None)))
+    pos = _replicated(mesh, jax.eval_shape(lambda: jnp.zeros((), jnp.int32)))
+    return fn, (params, cache, tokens, pos)
+
+
+def build_step(cfg: ArchConfig, shape: InputShape, mesh, plan: sh.ShardPlan,
+               efc: Optional[dist.EFConfig] = None, **train_kw):
+    cfg = arch_for_shape(cfg, shape)
+    if shape.kind == "train":
+        assert efc is not None
+        return build_train_step(cfg, shape, mesh, plan, efc, **train_kw)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_decode(cfg, shape, mesh)

@@ -1,0 +1,207 @@
+"""Sharding assembly: PartitionSpecs for params, EF/optimizer state, batches and
+caches on the production mesh, plus ShapeDtypeStruct input_specs for the dry-run.
+
+EF state layout knobs (DESIGN.md §4, grok-scale memory):
+  client_granularity: 'group' — one EF client per data-parallel group (paper-
+                       faithful n = dp); 'pod' — one client per pod (n = #pods;
+                       Theorem 3 applies with smaller n; state ÷ dp/pods, and the
+                       compressed wire crosses exactly the slow inter-pod links)
+  state_sharding:     'client' — a client's (vᵢ,gᵢ) live on its own chips, sharded
+                       over 'model' only; 'zero' — additionally sharded over the
+                       data axes inside the client (ZeRO-style), dividing EF state
+                       HBM by dp at the cost of gather/scatter on the update path
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import mesh as mesh_lib
+from repro.models import model as model_lib
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    client_granularity: str = "group"       # 'group' | 'pod'
+    state_sharding: str = "client"          # 'client' | 'zero'
+    ef_state_dtype: Optional[str] = None    # None → param dtype; 'bfloat16' at scale
+
+
+def n_clients(mesh, plan: ShardPlan) -> int:
+    if plan.client_granularity == "pod":
+        return mesh.shape.get("pod", 1)
+    return mesh_lib.dp_size(mesh)
+
+
+def client_axis(mesh, plan: ShardPlan):
+    if plan.client_granularity == "pod":
+        return "pod" if "pod" in mesh.axis_names else None
+    return mesh_lib.data_axes(mesh)
+
+
+# ---------------------------------------------------------------------------
+# pspec trees
+# ---------------------------------------------------------------------------
+
+def params_pspecs(cfg: ArchConfig, mesh) -> Dict:
+    return model_lib.param_pspecs(cfg, tp=mesh.shape["model"])
+
+
+def _zero_upgrade(spec: P, data_ax, shape=None, mesh=None) -> P:
+    """ZeRO: also shard the first 'model'-sharded dim over the (free) data axes
+    — only when the dim size divides the enlarged axis product."""
+    ax_tuple = (data_ax,) if isinstance(data_ax, str) else tuple(data_ax)
+    parts = list(spec)
+    for i, s in enumerate(parts):
+        if s == "model":
+            if shape is not None and mesh is not None:
+                total = mesh.shape["model"]
+                for a in ax_tuple:
+                    total *= mesh.shape[a]
+                if i >= len(shape) or shape[i] % total != 0:
+                    continue
+            parts[i] = tuple([*ax_tuple, "model"])
+            return P(*parts)
+    return spec
+
+
+def _spec_map(fn, tree):
+    """tree_map over a PartitionSpec tree (P is a tuple subclass → force leaf)."""
+    return jax.tree_util.tree_map(fn, tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def ef_state_pspecs(cfg: ArchConfig, mesh, plan: ShardPlan, method) -> Dict:
+    """Mirror of distributed.init_ef_state structure."""
+    pspecs = params_pspecs(cfg, mesh)
+    c_ax = client_axis(mesh, plan)
+    d_ax = mesh_lib.data_axes(mesh)
+
+    # ZeRO upgrade may only use mesh axes NOT already taken by the client dim
+    c_used = set(c_ax) if isinstance(c_ax, tuple) else \
+        ({c_ax} if c_ax else set())
+    free_ax = tuple(a for a in d_ax if a not in c_used)
+
+    from repro.models import model as model_lib
+    param_shapes = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    shape_leaves = jax.tree_util.tree_leaves(param_shapes)
+    spec_leaves = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    treedef = jax.tree_util.tree_structure(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+
+    def leaf_spec(spec, shape):
+        body = _zero_upgrade(spec, free_ax, shape, mesh) \
+            if (plan.state_sharding == "zero" and free_ax) else spec
+        return P(c_ax, *body)
+
+    client_tree = jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(s, sh_.shape)
+                  for s, sh_ in zip(spec_leaves, shape_leaves)])
+    dummy = _spec_map(lambda s: jnp.zeros((1,)), pspecs)
+    sample = jax.eval_shape(lambda: method.init(dummy))
+    client_specs = {k: client_tree for k in sample.keys()}
+    return {"clients": client_specs, "server": pspecs}
+
+
+def batch_pspecs(cfg: ArchConfig, mesh, kind: str, global_batch: int) -> Dict:
+    d_ax = mesh_lib.data_axes(mesh)
+    b_ax = d_ax if global_batch % mesh_lib.dp_size(mesh) == 0 else None
+    out = {"tokens": P(b_ax, None)}
+    if kind == "train":
+        out["labels"] = P(b_ax, None)
+    if cfg.frontend is not None and kind in ("train", "prefill"):
+        out["prefix_embeds"] = P(b_ax, None, None)
+    return out
+
+
+def cache_pspecs(cfg: ArchConfig, mesh, global_batch: int) -> Dict:
+    """Caches: (L, B, S, KV, hd) attention / (L, B, …) SSM states.
+    B sharded over data axes when divisible; otherwise the long dim (S for
+    attention, d_inner/heads for SSM) absorbs all mesh axes (sequence/state
+    parallel decode)."""
+    d_ax = mesh_lib.data_axes(mesh)
+    tp = mesh.shape["model"]
+    b_ok = global_batch % mesh_lib.dp_size(mesh) == 0
+    b_ax = d_ax if b_ok else None
+    kv_ax = "model" if (cfg.num_kv_heads and cfg.num_kv_heads % tp == 0) else None
+    # when KV can't shard, shard sequence over 'model'; when B can't shard,
+    # shard sequence over everything
+    if b_ok:
+        s_ax = None if kv_ax else "model"
+    else:
+        s_ax = tuple([*d_ax, "model"]) if not kv_ax else d_ax
+    attn_spec = P(None, b_ax, s_ax, kv_ax, None)
+
+    di_ax = "model" if cfg.d_inner % tp == 0 else None
+    specs: Dict[str, Any] = {}
+    fam = cfg.family
+    if fam in ("dense", "audio", "vlm", "moe") and not cfg.local_global:
+        specs = {"k": attn_spec, "v": attn_spec}
+    elif cfg.local_global:
+        specs = {"k_local": attn_spec, "v_local": attn_spec,
+                 "k_global": attn_spec, "v_global": attn_spec}
+    elif fam == "ssm":
+        specs = {"ssm": P(None, b_ax, di_ax, None),
+                 "conv": P(None, b_ax, None, di_ax)}
+    elif fam == "hybrid":
+        nh = cfg.d_inner // cfg.ssm_head_dim
+        h_ax = "model" if nh % tp == 0 else None
+        conv_d = cfg.d_inner + 2 * cfg.ssm_state
+        specs = {"ssm": P(None, b_ax, h_ax, None, None),
+                 "conv": P(None, b_ax, None,
+                           "model" if conv_d % tp == 0 else None),
+                 "k_attn": attn_spec, "v_attn": attn_spec}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct builders (no allocation, shannon/kernels pattern)
+# ---------------------------------------------------------------------------
+
+def _sds(tree_shapes: PyTree, tree_specs: PyTree, mesh) -> PyTree:
+    specs_flat = jax.tree_util.tree_leaves(
+        tree_specs, is_leaf=lambda x: isinstance(x, P))
+    shapes_flat, treedef = jax.tree_util.tree_flatten(tree_shapes)
+    assert len(specs_flat) == len(shapes_flat), \
+        f"spec/shape tree mismatch: {len(specs_flat)} vs {len(shapes_flat)}"
+    out = [jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                sharding=NamedSharding(mesh, spec))
+           for s, spec in zip(shapes_flat, specs_flat)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_specs(cfg: ArchConfig, mesh) -> PyTree:
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    return _sds(shapes, params_pspecs(cfg, mesh), mesh)
+
+
+def batch_specs(cfg: ArchConfig, mesh, shape: InputShape, kind: str) -> Dict:
+    B = shape.global_batch
+    S = shape.seq_len if kind != "decode" else 1
+    out_shapes: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if kind == "train":
+        out_shapes["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.frontend is not None and kind in ("train", "prefill"):
+        nt = max(cfg.frontend_tokens, 64)
+        out_shapes["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, nt, cfg.d_model), jnp.bfloat16)
+    return _sds(out_shapes, batch_pspecs(cfg, mesh, kind, B), mesh)
+
+
+def cache_specs(cfg: ArchConfig, mesh, shape: InputShape) -> Dict:
+    nt = max(cfg.frontend_tokens, 64) if cfg.frontend is not None else 0
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, shape.global_batch,
+                                     shape.seq_len + nt))
+    return _sds(shapes, cache_pspecs(cfg, mesh, shape.global_batch), mesh)

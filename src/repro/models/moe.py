@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with sort-based capacity routing (GShard-style, but
+without the O(N·E·C) one-hot dispatch tensor).
+
+Routing pipeline (all static shapes, scan/vmap-safe):
+  1. router logits → softmax → top-k (weights, expert ids) per token
+  2. flatten the (N·k) assignments, argsort by expert id
+  3. position-within-expert via searchsorted; drop tokens beyond the per-expert
+     capacity C = ⌈N·k/E⌉·capacity_factor (token dropping, counted in aux stats)
+  4. scatter into a dense (E, C, d) buffer → batched expert einsum (active-expert
+     FLOPs only: 2·3·N·k·cf·d·ff) → gather back, weighted combine
+
+Expert weights are sharded expert-parallel (experts over the 'model' axis) when
+E % tp == 0, else tensor-parallel inside each expert (ff over 'model') — see
+model.param_pspecs. The dispatch scatter/gather turns into all-to-all-style
+collectives on the mesh.
+
+Aux losses: switch-style load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm, shard
+
+Array = jax.Array
+
+
+def moe_init(rng, d: int, ff: int, E: int, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "router": (jax.random.normal(k1, (d, E)) * d ** -0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (E, d, ff)) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(k3, (E, d, ff)) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(k4, (E, ff, d)) * ff ** -0.5).astype(dtype),
+        "norm": jnp.zeros((d,), dtype),
+    }
+
+
+def _capacity(N: int, E: int, k: int, cf: float) -> int:
+    return max(1, int(-(-N * k // E) * cf))
+
+
+def moe_apply(p: dict, x: Array, *, k: int, cf: float, eps: float
+              ) -> Tuple[Array, dict]:
+    """x: (B,S,d) → (out (B,S,d), aux dict with load-balance/z losses)."""
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    N = B * S
+    h = rms_norm(x, p["norm"], eps).reshape(N, d)
+
+    logits = (h.astype(jnp.float32) @ p["router"])              # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                      # (N, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (Switch-style) ----------------------------------------
+    me = probs.mean(0)                                          # (E,)
+    ce = jnp.zeros((E,)).at[top_e.reshape(-1)].add(1.0) / (N * k)
+    aux = {
+        "load_balance": E * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+
+    # ---- sort-based dispatch ----------------------------------------------
+    C = _capacity(N, E, k, cf)
+    flat_e = top_e.reshape(-1)                                  # (N·k,)
+    order = jnp.argsort(flat_e)                                 # stable
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(N * k) - first[sorted_e]
+    keep = pos_in_e < C
+    tok = order // k                                            # source token id
+
+    # 2-D scatter straight into the EXPERT-SHARDED (E, C, d) buffer — capacity
+    # overflow relies on JAX dropping out-of-bounds scatter updates. A flat
+    # (E·C, d) scatter leaves the output unshardable over experts and XLA
+    # replicates + all-reduces the whole buffer (≈2 TB/device at olmoe
+    # prefill_32k — measured; see EXPERIMENTS.md §Perf/olmoe).
+    xe = shard(jnp.zeros((E, C, d), h.dtype), "model", None, None)
+    xe = xe.at[sorted_e, pos_in_e].add(jnp.where(keep[:, None], h[tok], 0))
+    xe = shard(xe, "model", None, None)
+
+    # ---- expert FFN (active tokens only) ----------------------------------
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(xe.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(xe.dtype))
+    y = jax.nn.silu(g) * u
+    ye = jnp.einsum("ecf,efd->ecd", y, p["w_down"].astype(y.dtype))
+    ye = shard(ye, "model", None, None)
+
+    # ---- combine -----------------------------------------------------------
+    gathered = ye[sorted_e, jnp.minimum(pos_in_e, C - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    # unsort back to (N, k) order, weight, and sum over k
+    unsorted = jnp.zeros((N * k, d), gathered.dtype).at[order].set(gathered)
+    out = (unsorted.reshape(N, k, d)
+           * top_w[..., None].astype(gathered.dtype)).sum(1)
+    aux["dropped_frac"] = 1.0 - keep.mean()
+    return out.reshape(B, S, d), aux
+
+
+def moe_apply_dense(p: dict, x: Array, *, k: int, cf: float, eps: float,
+                    chunk: int = 2048) -> Tuple[Array, dict]:
+    """Dense-expert MoE: compute EVERY expert for every token and combine with
+    the (N, E) top-k routing weights — no dispatch scatter/gather at all.
+
+    Beyond-paper §Perf option for high-activation MoEs (olmoe: k/E = 8/64 →
+    dense costs 8× the active FLOPs, but removes the dispatch buffer that XLA
+    replicates + all-reduces, which dominated the collective roofline term by
+    ~50×). Token chunking bounds the (E, chunk, ff) live intermediate.
+    """
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    N = B * S
+    h = rms_norm(x, p["norm"], eps).reshape(N, d)
+
+    logits = h.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    w_ne = jnp.zeros((N, E), jnp.float32).at[
+        jnp.arange(N)[:, None], top_e].set(top_w)           # routing weights
+
+    me = probs.mean(0)
+    ce = jnp.zeros((E,)).at[top_e.reshape(-1)].add(1.0) / (N * k)
+    aux = {"load_balance": E * jnp.sum(me * ce),
+           "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+           "dropped_frac": jnp.zeros(())}
+
+    cs = min(chunk, N)
+    ncs = -(-N // cs)
+    pad = ncs * cs - N
+    hp = jnp.pad(h, ((0, pad), (0, 0))).reshape(ncs, cs, d)
+    wp = jnp.pad(w_ne, ((0, pad), (0, 0))).reshape(ncs, cs, E)
+
+    def body(_, xs):
+        hc, wc = xs
+        g = jnp.einsum("nd,edf->enf", hc, p["w_gate"].astype(hc.dtype))
+        u = jnp.einsum("nd,edf->enf", hc, p["w_up"].astype(hc.dtype))
+        g = shard(g, "model", None, None)
+        y = jax.nn.silu(g) * u
+        ye = jnp.einsum("enf,efd->end", y, p["w_down"].astype(y.dtype))
+        out = jnp.einsum("end,ne->nd", ye, wc.astype(ye.dtype))
+        return 0, out
+
+    _, outs = jax.lax.scan(body, 0, (hp, wp))
+    out = outs.reshape(ncs * cs, d)[:N]
+    return out.reshape(B, S, d), aux

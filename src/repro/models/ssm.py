@@ -1,0 +1,255 @@
+"""State-space sequence mixers: Mamba1 (selective scan) and Mamba2 (SSD).
+
+TPU adaptation (DESIGN.md §4): instead of a length-S sequential scan (latency-bound)
+or a full associative scan (O(B·S·d_inner·N) live memory), both mixers use a
+**chunked scan**: an outer ``lax.scan`` over S/chunk steps carries the (B, ..., N)
+state, and within a chunk either an associative scan (Mamba1) or the matmul-rich SSD
+block decomposition (Mamba2) does the parallel work. Mamba2's intra-chunk compute is
+pure (chunk × chunk) matmuls — MXU-friendly by construction.
+
+Decode paths are single-token recurrences over carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm, shard
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (k small, unrolled shifts)
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: Array, w: Array, state: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """x: (B,S,D); w: (k,D) depthwise. Returns (y, new_state=(B,k-1,D))."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)               # (B, S+k-1, D)
+    y = sum(xp[:, j:j + x.shape[1]] * w[j] for j in range(k))
+    return y, xp[:, -(k - 1):]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 — selective scan
+# ---------------------------------------------------------------------------
+
+def mamba1_init(rng, d: int, d_inner: int, state: int, dt_rank: int, conv: int,
+                dtype) -> dict:
+    ks = jax.random.split(rng, 6)
+    A = jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32), (d_inner, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * d_inner)) * d ** -0.5
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv, d_inner)) * 0.1).astype(dtype),
+        "x_proj": (jax.random.normal(ks[2], (d_inner, dt_rank + 2 * state))
+                   * d_inner ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, d_inner))
+                    * dt_rank ** -0.5).astype(dtype),
+        "dt_bias": jnp.full((d_inner,), -4.0, dtype),
+        "A_log": jnp.log(A),                                    # f32 (d_inner, state)
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (d_inner, d)) * d_inner ** -0.5
+                     ).astype(dtype),
+        "norm": jnp.zeros((d,), dtype),
+    }
+
+
+def _mamba1_core(p, xc: Array, dt_rank: int, N: int, h0: Array, chunk: int
+                 ) -> Tuple[Array, Array]:
+    """xc: (B,S,Di) post-conv/silu. Chunked selective scan. h0: (B,Di,N)."""
+    B, S, Di = xc.shape
+    proj = jnp.einsum("bsd,de->bse", xc, p["x_proj"].astype(xc.dtype))
+    dt_in, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"].astype(dt_in.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))   # (B,S,Di)
+    A = -jnp.exp(p["A_log"])                                       # (Di,N)
+
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S, f"seq {S} % chunk {chunk} != 0"
+
+    def rs(t):  # (B,S,...) → (nc,B,chunk,...)
+        return t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    dt_c, x_c, B_c, C_c = rs(dt), rs(xc.astype(jnp.float32)), \
+        rs(Bm.astype(jnp.float32)), rs(Cm.astype(jnp.float32))
+
+    def step(h, inp):
+        dt_i, x_i, B_i, C_i = inp                 # (B,ch,Di) ×2, (B,ch,N) ×2
+        a = jnp.exp(dt_i[..., None] * A)          # (B,ch,Di,N)
+        b = (dt_i * x_i)[..., None] * B_i[:, :, None, :]
+        Ac, Bc = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], l[1] * r[0] + r[1]), (a, b), axis=1)
+        hs = Ac * h[:, None] + Bc                 # (B,ch,Di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, C_i) + p["D"] * x_i
+        return hs[:, -1], y
+
+    h_fin, ys = jax.lax.scan(step, h0, (dt_c, x_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, Di)
+    return y.astype(xc.dtype), h_fin
+
+
+def mamba1_apply(p: dict, x: Array, cfg, *,
+                 ssm_state: Optional[Array] = None,
+                 conv_state: Optional[Array] = None,
+                 ) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
+    """Pre-norm Mamba1 block. x: (B,S,d) (S=1 decode when states given)."""
+    B, S, d = x.shape
+    Di, N = cfg.d_inner, cfg.ssm_state
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, None, None, "model")
+
+    decode = ssm_state is not None and S == 1
+    xc, conv_new = causal_conv(xin, p["conv_w"].astype(xin.dtype), conv_state)
+    xc = jax.nn.silu(xc)
+
+    if decode:
+        # single-step recurrence
+        proj = jnp.einsum("bsd,de->bse", xc, p["x_proj"].astype(xc.dtype))
+        dt_in, Bm, Cm = jnp.split(proj, [cfg.dt_rank, cfg.dt_rank + N], axis=-1)
+        dt = jax.nn.softplus(
+            jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"].astype(dt_in.dtype))
+            .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,Di)
+        A = -jnp.exp(p["A_log"])
+        a = jnp.exp(dt[..., None] * A)                         # (B,Di,N)
+        b = (dt * xc.astype(jnp.float32)[:, 0])[..., None] * \
+            Bm.astype(jnp.float32)[:, 0, None, :]
+        h_new = a * ssm_state + b
+        y = jnp.einsum("bdn,bn->bd", h_new, Cm.astype(jnp.float32)[:, 0]) \
+            + p["D"] * xc.astype(jnp.float32)[:, 0]
+        y = y[:, None].astype(xc.dtype)
+        states = (h_new, conv_new)
+    else:
+        h0 = ssm_state if ssm_state is not None \
+            else jnp.zeros((B, Di, N), jnp.float32)
+        y, h_fin = _mamba1_core(p, xc, cfg.dt_rank, N, h0, cfg.attn_chunk)
+        states = (h_fin, conv_new)
+
+    y = y * jax.nn.silu(z)
+    y = shard(y, None, None, "model")
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(y.dtype)), states
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 — SSD (scalar-A multihead state space duality)
+# ---------------------------------------------------------------------------
+
+def mamba2_init(rng, d: int, d_inner: int, state: int, head_dim: int, conv: int,
+                dtype) -> dict:
+    ks = jax.random.split(rng, 6)
+    nh = d_inner // head_dim
+    return {
+        "in_x": (jax.random.normal(ks[0], (d, d_inner)) * d ** -0.5).astype(dtype),
+        "in_z": (jax.random.normal(ks[1], (d, d_inner)) * d ** -0.5).astype(dtype),
+        "in_B": (jax.random.normal(ks[2], (d, state)) * d ** -0.5).astype(dtype),
+        "in_C": (jax.random.normal(ks[3], (d, state)) * d ** -0.5).astype(dtype),
+        "in_dt": (jax.random.normal(ks[4], (d, nh)) * d ** -0.5).astype(dtype),
+        "dt_bias": jnp.full((nh,), -4.0, dtype),
+        "conv_w": (jax.random.normal(ks[5], (conv, d_inner + 2 * state)) * 0.1
+                   ).astype(dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[0], (d_inner, d)) * d_inner ** -0.5
+                     ).astype(dtype),
+        "norm": jnp.zeros((d,), dtype),
+        "out_norm": jnp.zeros((d_inner,), dtype),
+    }
+
+
+def _ssd_chunk_scan(x, dt, Bm, Cm, A, D, h0, chunk):
+    """SSD chunked scan.
+    x: (B,S,H,P) f32; dt: (B,S,H); Bm/Cm: (B,S,N); A: (H,) negative; h0: (B,H,P,N).
+    """
+    B_, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S
+
+    def rs(t):
+        return t.reshape(B_, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    x_c, dt_c, B_c, C_c = rs(x), rs(dt), rs(Bm), rs(Cm)
+
+    def step(h, inp):
+        xi, dti, Bi, Ci = inp                      # (B,ch,H,P),(B,ch,H),(B,ch,N)
+        a = dti * A                                # (B,ch,H) log-decay increments
+        L = jnp.cumsum(a, axis=1)                  # (B,ch,H)
+        # intra-chunk: scores[t,s] = (C_t·B_s)·exp(L_t−L_s)·dt_s,  s ≤ t
+        cb = jnp.einsum("btn,bsn->bts", Ci, Bi)    # (B,ch,ch)
+        dec = jnp.exp(jnp.clip(L[:, :, None, :] - L[:, None, :, :], -60, 0))
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = cb[:, :, :, None] * dec * dti[:, None, :, :]
+        w = jnp.where(tri[None, :, :, None], w, 0.0)          # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xi)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.exp(L)[..., None] * jnp.einsum("bhpn,btn->bthp", h, Ci)
+        # state update: h' = exp(ΣA)·h + Σ_s exp(L_end−L_s)·dt_s·x_s B_sᵀ
+        wl = jnp.exp(jnp.clip(L[:, -1:, :] - L, -60, None)) * dti   # (B,ch,H)
+        h_new = jnp.exp(L[:, -1])[..., None, None] * h + \
+            jnp.einsum("bsh,bshp,bsn->bhpn", wl, xi, Bi)
+        y = y_intra + y_inter + D[:, None] * xi
+        return h_new, y
+
+    h_fin, ys = jax.lax.scan(step, h0, (x_c, dt_c, B_c, C_c))
+    return ys.swapaxes(0, 1).reshape(B_, S, H, Pd), h_fin
+
+
+def mamba2_apply(p: dict, x: Array, cfg, *,
+                 ssm_state: Optional[Array] = None,
+                 conv_state: Optional[Array] = None,
+                 ) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
+    """Pre-norm Mamba2 (SSD) block. x: (B,S,d)."""
+    B, S, d = x.shape
+    Di, N, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    H = Di // Pd
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xin = jnp.einsum("bsd,de->bse", h, p["in_x"].astype(h.dtype))
+    z = jnp.einsum("bsd,de->bse", h, p["in_z"].astype(h.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", h, p["in_B"].astype(h.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", h, p["in_C"].astype(h.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["in_dt"].astype(h.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    xin = shard(xin, None, None, "model")
+
+    decode = ssm_state is not None and S == 1
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc, conv_new = causal_conv(xbc, p["conv_w"].astype(xbc.dtype), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin, Bm, Cm = jnp.split(xbc, [Di, Di + N], axis=-1)
+
+    A = -jnp.exp(p["A_log"])                                   # (H,)
+    xh = xin.astype(jnp.float32).reshape(B, S, H, Pd)
+
+    if decode:
+        a = jnp.exp(dt[:, 0] * A)                              # (B,H)
+        h_new = a[..., None, None] * ssm_state + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0], Bm.astype(jnp.float32)[:, 0])
+        y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32)[:, 0]) \
+            + p["D"][:, None] * xh[:, 0]
+        y = y[:, None]
+        states = (h_new, conv_new)
+    else:
+        h0 = ssm_state if ssm_state is not None \
+            else jnp.zeros((B, H, Pd, N), jnp.float32)
+        y, h_fin = _ssd_chunk_scan(xh, dt, Bm.astype(jnp.float32),
+                                   Cm.astype(jnp.float32), A, p["D"], h0,
+                                   cfg.attn_chunk)
+        states = (h_fin, conv_new)
+
+    y = y.reshape(B, S, Di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    y = shard(y, None, None, "model")
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(y.dtype)), states

@@ -1,0 +1,137 @@
+"""Minimal functional optimizer stack (no optax in the container; built in JAX).
+
+An optimizer is (init, update):
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)        # params + updates
+
+The EF layer (core/distributed.py) produces the aggregated gradient estimate gᵗ;
+composing it with these optimizers gives:
+  * ``sgd(lr)``            — the paper's exact server step x ← x − γ·gᵗ
+  * ``sgd(lr, momentum)``  — server-side heavy ball (≈ EF21-HB; NOT Algorithm 1 —
+                             the paper's momentum lives on the clients)
+  * ``adamw(...)``         — beyond-paper production composition (EF-compressed
+                             first moment feeding Adam; noted in EXPERIMENTS.md)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]        # (grads, state, params, step) -> (upd, st)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
+                      ).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def rsqrt_schedule(lr: float):
+    """γₜ = γ/√(t+1) — the paper's Appendix J time-varying choice."""
+    return lambda step: lr / jnp.sqrt(jnp.asarray(step, jnp.float32) + 1.0)
+
+
+def _as_sched(lr):
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    sched = _as_sched(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params=None, step=0):
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        lr_t = sched(step)
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(lambda g: -lr_t * g, g32), state
+        m = jax.tree_util.tree_map(
+            lambda mo, g: momentum * mo + g, state["m"], g32)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda mo, g: -(lr_t * (momentum * mo + g)), m, g32)
+        else:
+            upd = jax.tree_util.tree_map(lambda mo: -lr_t * mo, m)
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_sched(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step=0):
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        m = jax.tree_util.tree_map(
+            lambda mo, g: b1 * mo + (1 - b1) * g, state["m"], g32)
+        v = jax.tree_util.tree_map(
+            lambda vo, g: b2 * vo + (1 - b2) * g * g, state["v"], g32)
+        mh = jax.tree_util.tree_map(lambda mo: mo / (1 - b1 ** t), m)
+        vh = jax.tree_util.tree_map(lambda vo: vo / (1 - b2 ** t), v)
+        lr_t = sched(step)
+        upd = jax.tree_util.tree_map(
+            lambda mm, vv, p: -lr_t * (mm / (jnp.sqrt(vv) + eps)
+                                       + weight_decay * p.astype(jnp.float32)),
+            mh, vh, params)
+        return upd, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params=None, step=0):
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        return opt.update(grads, state, params, step)
+    return Optimizer(opt.init, update)
+
+
+REGISTRY = {"sgd": sgd, "adamw": adamw}
+
+
+def make(name: str, **kw) -> Optimizer:
+    return REGISTRY[name](**kw)

@@ -1,0 +1,6 @@
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see exactly ONE device
+# (the 512-device placeholder mesh belongs to launch/dryrun.py only).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,107 @@
+"""Property tests for the compressor zoo (Definition 1 / Definition 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressors as C
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def vec(draw_len, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(draw_len).astype(np.float32))
+
+
+@given(st.integers(8, 400), st.integers(0, 10_000),
+       st.sampled_from(["topk", "block_topk"]), st.floats(0.05, 0.9))
+def test_contractive_inequality_deterministic(d, seed, name, ratio):
+    """E‖C(x)−x‖² ≤ (1−α)‖x‖² — deterministic compressors satisfy it pointwise."""
+    x = vec(d, seed)
+    comp = C.make(name, ratio=ratio) if name == "topk" else \
+        C.make(name, ratio=ratio, block=64)
+    cx = comp(x)
+    err = float(jnp.sum((cx - x) ** 2))
+    alpha = comp.alpha(d)
+    assert err <= (1 - alpha) * float(jnp.sum(x ** 2)) + 1e-5
+
+
+@given(st.integers(16, 300), st.integers(0, 10_000), st.floats(0.1, 0.9))
+def test_randk_contractive_in_expectation(d, seed, ratio):
+    x = vec(d, seed)
+    comp = C.RandK(ratio=ratio)
+    errs = []
+    for i in range(30):
+        cx = comp(x, jax.random.PRNGKey(seed * 31 + i))
+        errs.append(float(jnp.sum((cx - x) ** 2)))
+    alpha = comp.alpha(d)
+    # 30-sample mean: allow 25% slack over the expectation bound
+    assert np.mean(errs) <= 1.25 * (1 - alpha) * float(jnp.sum(x ** 2)) + 1e-5
+
+
+@given(st.integers(8, 200), st.integers(0, 10_000), st.floats(1e-3, 1.0))
+def test_hard_threshold_absolute_bound(d, seed, lam):
+    """Definition 2: ‖C(x)−x‖² ≤ Δ² with Δ = λ√d."""
+    x = vec(d, seed)
+    comp = C.HardThreshold(lam=lam)
+    err = float(jnp.sum((comp(x) - x) ** 2))
+    assert err <= comp.delta(d) ** 2 + 1e-6
+
+
+@given(st.integers(8, 200), st.integers(0, 10_000))
+def test_natural_compression_contractive(d, seed):
+    x = vec(d, seed)
+    comp = C.NaturalCompression()
+    errs = [float(jnp.sum((comp(x, jax.random.PRNGKey(seed + i)) - x) ** 2))
+            for i in range(20)]
+    # E‖C(x)−x‖² ≤ (1/8)‖x‖² (α = 7/8)
+    assert np.mean(errs) <= 1.3 * 0.125 * float(jnp.sum(x ** 2)) + 1e-6
+
+
+@given(st.integers(10, 300), st.integers(0, 10_000))
+def test_topk_keeps_largest(d, seed):
+    x = vec(d, seed)
+    comp = C.TopK(k=5)
+    cx = np.asarray(comp(x))
+    kept = np.nonzero(cx)[0]
+    assert len(kept) >= 5
+    thresh = np.sort(np.abs(np.asarray(x)))[-5]
+    assert (np.abs(np.asarray(x)[kept]) >= thresh - 1e-7).all()
+
+
+@given(st.integers(16, 300), st.integers(0, 10_000))
+def test_sparse_carrier_matches_dense(d, seed):
+    """vals/idx carrier scattered == dense C(x) for TopK & BlockTopK."""
+    x = vec(d, seed)
+    for comp in (C.TopK(k=7), C.BlockTopK(block=32, k_per_block=3)):
+        vals, idx = comp.sparse(x)
+        dense = np.zeros(max(d, int(np.asarray(idx).max()) + 1), np.float32)
+        dense[np.asarray(idx)] = np.asarray(vals)
+        cx = np.asarray(comp(x))
+        # dense path may keep extra exact ties; every carrier entry must match
+        np.testing.assert_allclose(dense[:d][np.asarray(idx)[np.asarray(idx) < d]],
+                                   cx[np.asarray(idx)[np.asarray(idx) < d]],
+                                   rtol=1e-6)
+
+
+def test_identity():
+    x = vec(64, 0)
+    assert (C.Identity()(x) == x).all()
+    assert C.Identity().alpha(64) == 1.0
+
+
+def test_rank1_contractive():
+    x = vec(256, 3)
+    cx = C.Rank1(rows=16)(x)
+    assert float(jnp.sum((cx - x) ** 2)) <= float(jnp.sum(x ** 2)) + 1e-5
+
+
+def test_registry():
+    for name in C.REGISTRY:
+        comp = C.make(name)
+        assert isinstance(comp, C.Compressor)
+    with pytest.raises(ValueError):
+        C.make("nope")

@@ -1,0 +1,133 @@
+"""Unit tests: every EF method's update rule against hand-computed algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compressors as C
+from repro.core import ef
+
+
+def tree(x):
+    return {"a": jnp.asarray(x, jnp.float32)}
+
+
+IDC = C.Identity()
+
+
+def test_ef21_sgd_update_rule():
+    m = ef.EF21SGD(compressor=IDC)
+    st = m.init(tree([0.0, 0.0]), init_grads=tree([1.0, 2.0]))
+    msg, st2 = m.update(tree([3.0, 4.0]), st)
+    # c = C(grad − g) = grad − g; g' = g + c = grad
+    np.testing.assert_allclose(msg["a"], [2.0, 2.0])
+    np.testing.assert_allclose(st2["g"]["a"], [3.0, 4.0])
+
+
+def test_ef21_sgdm_update_rule():
+    m = ef.EF21SGDM(compressor=IDC, eta=0.25)
+    st = m.init(tree([0, 0]), init_grads=tree([4.0, 8.0]))
+    msg, st2 = m.update(tree([0.0, 0.0]), st)
+    # v' = 0.75·v = [3, 6]; c = v' − g = [−1, −2]; g' = v'
+    np.testing.assert_allclose(st2["v"]["a"], [3.0, 6.0])
+    np.testing.assert_allclose(msg["a"], [-1.0, -2.0])
+    np.testing.assert_allclose(st2["g"]["a"], [3.0, 6.0])
+
+
+def test_ef21_sgd2m_update_rule():
+    m = ef.EF21SGD2M(compressor=IDC, eta=0.5)
+    st = m.init(tree([0, 0]), init_grads=tree([2.0, 2.0]))
+    msg, st2 = m.update(tree([4.0, 0.0]), st)
+    # v' = .5·2+.5·4 = 3 | .5·2 = 1 ; u' = .5·2+.5·v' = 2.5 | 1.5
+    np.testing.assert_allclose(st2["v"]["a"], [3.0, 1.0])
+    np.testing.assert_allclose(st2["u"]["a"], [2.5, 1.5])
+    np.testing.assert_allclose(st2["g"]["a"], [2.5, 1.5])
+
+
+def test_ef14_update_rule():
+    m = ef.EF14SGD(compressor=C.TopK(k=1))
+    st = m.init(tree([0.0, 0.0]))
+    msg, st2 = m.update(tree([1.0, 3.0]), st)
+    # p = e + grad = [1,3]; C keeps |3|; e' = p − c = [1, 0]
+    np.testing.assert_allclose(msg["a"], [0.0, 3.0])
+    np.testing.assert_allclose(st2["e"]["a"], [1.0, 0.0])
+
+
+def test_sgdm_equals_ef21_sgdm_identity():
+    """Algorithm 1 with C = identity degenerates to plain SGDM (App. J)."""
+    g0 = tree([1.0, -2.0])
+    grads = [tree([0.5, 0.5]), tree([-1.0, 2.0]), tree([0.3, 0.3])]
+    m1 = ef.SGDM(eta=0.3)
+    m2 = ef.EF21SGDM(compressor=IDC, eta=0.3)
+    s1, s2 = m1.init(g0, init_grads=g0), m2.init(g0, init_grads=g0)
+    srv1 = ef.server_init(m1, g0, g0)
+    srv2 = ef.server_init(m2, g0, g0)
+    for g in grads:
+        msg1, s1 = m1.update(g, s1)
+        msg2, s2 = m2.update(g, s2)
+        srv1 = ef.server_step(m1, srv1, msg1)
+        srv2 = ef.server_step(m2, srv2, msg2)
+        np.testing.assert_allclose(srv1["a"], srv2["a"], rtol=1e-6)
+
+
+def test_ef21_sgdm_eta1_equals_ef21_sgd():
+    g0 = tree([1.0, -2.0])
+    grads = [tree([0.5, 1.5]), tree([-1.0, 2.0])]
+    m1 = ef.EF21SGD(compressor=C.TopK(k=1))
+    m2 = ef.EF21SGDM(compressor=C.TopK(k=1), eta=1.0)
+    s1, s2 = m1.init(g0, init_grads=g0), m2.init(g0, init_grads=g0)
+    for g in grads:
+        msg1, s1 = m1.update(g, s1)
+        msg2, s2 = m2.update(g, s2)
+        np.testing.assert_allclose(msg1["a"], msg2["a"], rtol=1e-6)
+
+
+def test_storm_estimator_unbiased_recursion():
+    m = ef.EF21STORM(compressor=IDC, eta=0.5)
+    st = m.init(tree([0.0]), init_grads=tree([1.0]))
+    msg, st2 = m.update((tree([2.0]), tree([0.5])), st)
+    # w' = g_new + (1−η)(w − g_prev) = 2 + 0.5·(1 − 0.5) = 2.25
+    np.testing.assert_allclose(st2["w"]["a"], [2.25])
+
+
+def test_abs_variant_gamma_scaling():
+    m = ef.EF21SGDMAbs(compressor=C.HardThreshold(lam=0.5), eta=1.0, gamma=0.1)
+    st = m.init(tree([0.0]))
+    msg, st2 = m.update(tree([0.04]), st)
+    # innov/γ = 0.4 < λ → compressed to 0 → c = 0
+    np.testing.assert_allclose(msg["a"], [0.0])
+    msg, _ = m.update(tree([0.06]), st)
+    # innov/γ = 0.6 ≥ λ → kept → c = γ·0.6 = 0.06
+    np.testing.assert_allclose(msg["a"], [0.06], rtol=1e-6)
+
+
+def test_neolithic_rounds_reduce_residual():
+    m = ef.Neolithic(compressor=C.TopK(k=1), rounds=4)
+    g = tree([4.0, 3.0, 2.0, 1.0])
+    msg, _ = m.update(g, {})
+    np.testing.assert_allclose(msg["a"], [4.0, 3.0, 2.0, 1.0])
+    assert m.coords_per_message(4) == 4.0
+
+
+def test_server_modes():
+    delta = ef.EF21SGDM(compressor=IDC)
+    absm = ef.SGD()
+    g = tree([1.0])
+    assert ef.server_step(delta, tree([2.0]), g)["a"][0] == 3.0
+    assert ef.server_step(absm, tree([2.0]), g)["a"][0] == 1.0
+
+
+def test_state_dtype_cast():
+    m = ef.EF21SGDM(compressor=IDC, eta=0.5, state_dtype=jnp.bfloat16)
+    st = m.init(tree([1.0, 2.0]))
+    assert st["v"]["a"].dtype == jnp.bfloat16
+    _, st2 = m.update(tree([1.0, 1.0]), st)
+    assert st2["g"]["a"].dtype == jnp.bfloat16
+
+
+def test_registry_complete():
+    for name in ["ef21_sgd", "ef21_sgdm", "ef21_sgd2m", "ef21_sgdm_abs",
+                 "ef21_storm", "ef14_sgd", "sgdm", "sgd", "neolithic"]:
+        assert name in ef.REGISTRY
+    with pytest.raises(ValueError):
+        ef.make("nope")

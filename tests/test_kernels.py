@@ -1,0 +1,105 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), swept over shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+settings.register_profile("kern", max_examples=12, deadline=None)
+settings.load_profile("kern")
+
+
+@pytest.mark.parametrize("B,S,H,hd,bq,bk", [
+    (1, 128, 1, 64, 64, 64),
+    (2, 256, 4, 64, 128, 64),
+    (1, 512, 2, 128, 128, 128),
+    (2, 128, 3, 32, 128, 128),     # block == S edge
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(B, S, H, hd, bq, bk, dtype):
+    rng = np.random.RandomState(B * S + H)
+    q, k, v = [jnp.asarray(rng.randn(B, S, H, hd), dtype) for _ in range(3)]
+    out = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_non_causal():
+    rng = np.random.RandomState(0)
+    q, k, v = [jnp.asarray(rng.randn(1, 128, 2, 64), jnp.float32)
+               for _ in range(3)]
+    out = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=1e-4)
+
+
+@given(st.integers(10, 5000), st.sampled_from([256, 512, 1024]),
+       st.integers(1, 32), st.integers(0, 1000))
+def test_block_topk_kernel_property(d, block, k, seed):
+    k = min(k, block)
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(d).astype(np.float32))
+    out = ops.block_topk(x, block=block, k=k)
+    expect = ref.block_topk_ref(x, block, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-7)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_topk_dtypes(dtype):
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(4096), dtype)
+    out = ops.block_topk(x, block=512, k=8)
+    nz = int((np.asarray(out, np.float32) != 0).sum())
+    assert nz == 8 * 8
+    # kept values must be the originals
+    mask = np.asarray(out, np.float32) != 0
+    np.testing.assert_array_equal(np.asarray(out)[mask], np.asarray(x)[mask])
+
+
+@given(st.integers(100, 4000), st.floats(0.01, 1.0), st.integers(0, 500))
+def test_ef_update_kernel_property(d, eta, seed):
+    rng = np.random.RandomState(seed)
+    grad, v, g = [jnp.asarray(rng.randn(d).astype(np.float32))
+                  for _ in range(3)]
+    vn, gn, c = ops.ef21_sgdm_update(grad, v, g, eta=eta, block=512, k=16)
+    vr, gr, cr = ref.ef21_sgdm_update_ref(grad, v, g, eta=eta, block=512, k=16)
+    np.testing.assert_allclose(np.asarray(vn), np.asarray(vr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(gr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), atol=1e-6)
+
+
+def test_ef_update_kernel_matches_method():
+    """The fused kernel computes exactly EF21SGDM.update with BlockTopK."""
+    from repro.core import compressors as C, ef
+    rng = np.random.RandomState(7)
+    d, block, k, eta = 2048, 512, 16, 0.2
+    grad = jnp.asarray(rng.randn(d).astype(np.float32))
+    v0 = jnp.asarray(rng.randn(d).astype(np.float32))
+    g0 = jnp.asarray(rng.randn(d).astype(np.float32))
+    m = ef.EF21SGDM(compressor=C.BlockTopK(block=block, k_per_block=k), eta=eta)
+    msg, st = m.update({"x": grad}, {"v": {"x": v0}, "g": {"x": g0}})
+    vn, gn, c = ops.ef21_sgdm_update(grad, v0, g0, eta=eta, block=block, k=k)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(msg["x"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vn), np.asarray(st["v"]["x"]),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(st["g"]["x"]),
+                               atol=1e-5)
+
+
+def test_bisection_threshold_exactness():
+    """Bisection recovers the k-th largest magnitude to float precision."""
+    from repro.kernels.topk_compress import _bisect_threshold
+    rng = np.random.RandomState(0)
+    ab = jnp.abs(jnp.asarray(rng.randn(4, 1024).astype(np.float32)))
+    for k in (1, 16, 300, 1024):
+        t = np.asarray(_bisect_threshold(ab, k))
+        kth = np.sort(np.asarray(ab), axis=1)[:, -k]
+        cnt = (np.asarray(ab) >= t[:, None]).sum(1)
+        assert (cnt >= k).all()
+        np.testing.assert_allclose(t, kth, rtol=2e-4)   # 26 bisection iters

@@ -1,0 +1,125 @@
+"""Integration tests validating the paper's core claims on its own constructions
+(the CPU-scale halves of EXPERIMENTS.md)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compressors as C
+from repro.core import ef, problems, simulate
+
+
+@pytest.fixture(scope="module")
+def t1():
+    return problems.QuadraticT1()
+
+
+def _run(prob, method, seeds=3, **kw):
+    cfg = simulate.SimConfig(**kw)
+    return [simulate.run_numpy(prob, method, cfg, seed=s) for s in range(seeds)]
+
+
+def test_theorem1_noise_construction(t1):
+    """E[ξ]=0, E‖ξ‖²=σ² but E[Top1(ξ)] ≠ 0 — the compressor bias at the heart
+    of Theorem 1."""
+    zs = np.asarray(t1._zs(1))
+    assert np.allclose(zs.mean(0), 0, atol=1e-7)
+    assert np.isclose((zs ** 2).sum(1).mean(), 1.0, atol=1e-5)     # σ² = 1
+    top1 = np.zeros_like(zs)
+    idx = np.abs(zs).argmax(1)
+    top1[np.arange(3), idx] = zs[np.arange(3), idx]
+    bias = top1.mean(0)
+    assert np.abs(bias).max() > 0.05                               # (0, s/3)
+
+
+def test_fig1_ef21_sgd_stalls_sgdm_converges(t1):
+    """Figure 1: EF21-SGD drifts away from the optimum; EF21-SGDM stays stable
+    and ends orders of magnitude lower."""
+    kw = dict(n=1, batch_size=1, gamma=1e-3, steps=8000)
+    top1 = C.TopK(k=1)
+    sgd_runs = _run(t1, ef.EF21SGD(compressor=top1), **kw)
+    sgdm_runs = _run(t1, ef.EF21SGDM(compressor=top1, eta=1e-3), **kw)
+    end_sgd = np.median([r["grad_norm_sq"][-500:].mean() for r in sgd_runs])
+    end_sgdm = np.median([r["grad_norm_sq"][-500:].mean() for r in sgdm_runs])
+    start = np.median([r["grad_norm_sq"][0] for r in sgd_runs])
+    assert end_sgd > 10 * start          # EF21-SGD moved AWAY from optimum
+    assert end_sgdm < end_sgd / 3        # momentum fixes it
+
+
+def test_fig1b_no_improvement_with_n_for_ef21_sgd(t1):
+    """Figure 1b: increasing n does NOT rescue EF21-SGD — for every n the error
+    still GROWS away from the optimum (convergence is not restored)."""
+    top1 = C.TopK(k=1)
+    for n in (1, 8):
+        runs = _run(t1, ef.EF21SGD(compressor=top1), seeds=3, n=n,
+                    batch_size=1, gamma=1e-3, steps=6000)
+        start = np.median([r["grad_norm_sq"][0] for r in runs])
+        end = np.median([r["grad_norm_sq"][-500:].mean() for r in runs])
+        assert end > 2 * start, (n, start, end)
+
+
+def test_theorem1_ideal_floor_independent_of_n(t1):
+    """Theorem 1 (exact object): EF21-SGD-ideal stalls at
+    E‖∇f‖² ≥ min(σ², ‖∇f(x⁰)‖²)/60 for ALL T and all n."""
+    m = ef.EF21SGDMIdeal(compressor=C.TopK(k=1), eta=1.0)
+    for n in (1, 4):
+        runs = _run(t1, m, seeds=4, n=n, batch_size=1, gamma=0.5, steps=4000)
+        end = np.median([r["grad_norm_sq"][-500:].mean() for r in runs])
+        floor = min(t1.sigma ** 2, float(
+            np.sum(np.asarray(t1.full_grad(t1.init_x())) ** 2))) / 60.0
+        assert end >= floor, (n, end, floor)
+
+
+def test_sgdm_improves_with_n(t1):
+    """Theorem 3's ησ²/n term: EF21-SGDM *does* improve with n."""
+    top1 = C.TopK(k=1)
+    ends = []
+    for n in (1, 8):
+        runs = _run(t1, ef.EF21SGDM(compressor=top1, eta=0.01), seeds=3, n=n,
+                    batch_size=1, gamma=2e-3, steps=6000)
+        ends.append(np.median([r["grad_norm_sq"][-500:].mean() for r in runs]))
+    assert ends[1] < ends[0]
+
+
+def test_megabatch_rescues_ef21_sgd(t1):
+    """Theorem 1 tightness (Prop. 1): B = Θ(σ²/ε²) makes EF21-SGD converge."""
+    top1 = C.TopK(k=1)
+    small = _run(t1, ef.EF21SGD(compressor=top1), seeds=3,
+                 n=1, batch_size=1, gamma=1e-3, steps=5000)
+    big = _run(t1, ef.EF21SGD(compressor=top1), seeds=3,
+               n=1, batch_size=64, gamma=1e-3, steps=5000)
+    end_small = np.median([r["grad_norm_sq"][-500:].mean() for r in small])
+    end_big = np.median([r["grad_norm_sq"][-500:].mean() for r in big])
+    assert end_big < end_small / 5
+
+
+def test_logreg_sgdm_never_worse_batchfree():
+    """Experiment 1 (qualitative, weakened for synthetic data): at B=1 and equal
+    transmitted coordinates EF21-SGDM is never worse than EF21-SGD (≤1.5×).
+    The paper's *dramatic* separation needs the adversarial noise structure of
+    Theorem 1 (tested exactly above) or real datasets — on synthetic logreg the
+    small-batch gradient noise is too benign; recorded in EXPERIMENTS.md §E1."""
+    prob = problems.LogisticRegression(n=5, m_per_client=128, l=16, c=5, seed=1)
+    topk = C.TopK(k=10)
+    kw = dict(n=5, batch_size=1, gamma=0.05, steps=2500, b_init=8)
+    sgdm = _run(prob, ef.EF21SGDM(compressor=topk, eta=0.1), seeds=2, **kw)
+    esgd = _run(prob, ef.EF21SGD(compressor=topk), seeds=2, **kw)
+    m_end = np.median([r["grad_norm_sq"][-200:].mean() for r in sgdm])
+    e_end = np.median([r["grad_norm_sq"][-200:].mean() for r in esgd])
+    assert m_end < 1.5 * e_end
+
+
+def test_time_varying_schedule_converges(t1):
+    """Appendix J: ηₜ = 1/√(t+1), γₜ = γ·ηₜ needs no tuning and converges."""
+    runs = _run(t1, ef.EF21SGDM(compressor=C.TopK(k=1)), seeds=2,
+                n=1, batch_size=1, gamma=0.3, steps=6000, time_varying=True)
+    end = np.median([r["grad_norm_sq"][-500:].mean() for r in runs])
+    start = np.median([r["grad_norm_sq"][:10].mean() for r in runs])
+    assert end < max(start, 1e-3)
+
+
+def test_quadratic_generator_spectrum():
+    """Algorithm 2: mean matrix min-eigenvalue is normalized to λ."""
+    prob = problems.RandomQuadratics(n=8, d=40, lam=0.05, seed=0)
+    Q = np.asarray(prob._Q).mean(0)
+    assert np.isclose(np.linalg.eigvalsh(Q).min(), 0.05, atol=1e-5)
