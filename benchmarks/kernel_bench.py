@@ -22,6 +22,43 @@ def _bench(fn, *args, iters=3):
     return 1e6 * (time.time() - t0) / iters
 
 
+def _train_step_compare(out: dict) -> None:
+    """Full train-step wall time, fused vs unfused carrier (core/carriers.py):
+    the SAME ``make_train_step`` production path, dispatched through
+    DenseCarrier (unfused pre→C→post chain) vs FusedPallasCarrier (one
+    interpreted Pallas pass per leaf on CPU — compiled Mosaic on TPU)."""
+    from repro.core import compressors as C
+    from repro.core import distributed as dist
+    from repro.core import ef
+    from repro.optim import optimizer as opt_lib
+
+    dp, d_in, d_out = 4, 128, 64
+    rng = np.random.RandomState(1)
+    params = {"w": jnp.zeros((d_in, d_out), jnp.float32)}
+    batch = {"x": jnp.asarray(rng.randn(16, d_in), jnp.float32),
+             "y": jnp.asarray(rng.randn(16, d_out), jnp.float32)}
+
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2), {}
+
+    method = ef.EF21SGDM(
+        compressor=C.BlockTopK(block=1024, k_per_block=16), eta=0.1)
+    opt = opt_lib.make("sgd", lr=0.1)
+    key = jax.random.PRNGKey(0)
+    for carrier in ("dense", "fused"):
+        efc = dist.EFConfig(method=method, carrier=carrier)
+        step = jax.jit(dist.make_train_step(loss_fn, efc, opt, dp))
+        _, _, g0 = dist.per_client_value_and_grad(loss_fn, params, batch, dp)
+        es = dist.init_ef_state(efc, params, dp, init_grads=g0)
+        os_ = opt.init(params)
+
+        def one(p, o, e, t):
+            return step(p, o, e, batch, jax.random.fold_in(key, t), t)
+
+        out[f"train_step_{carrier}_us"] = _bench(
+            lambda t: one(params, os_, es, t), 0, iters=3)
+
+
 def run() -> dict:
     rng = np.random.RandomState(0)
     out = {}
@@ -50,10 +87,14 @@ def run() -> dict:
         jax.jit(lambda a, b, c: ref.ef21_sgdm_update_ref(
             a, b, c, eta=0.1, block=1024, k=16)), g, vv, gg)
 
+    _train_step_compare(out)
+
     save_json("kernel_bench", out)
     csv_row("kernel_bench", out["flash_pallas_interp_us"],
             f"topk_ref_us={out['block_topk_ref_us']:.0f};"
-            f"ef_ref_us={out['ef_update_ref_us']:.0f}")
+            f"ef_ref_us={out['ef_update_ref_us']:.0f};"
+            f"step_dense_us={out['train_step_dense_us']:.0f};"
+            f"step_fused_us={out['train_step_fused_us']:.0f}")
     return out
 
 

@@ -34,6 +34,37 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
 
+# HBM passes over the d-word EF client state per sync round (kernels/ef_update.py):
+# unfused streams grad/v/g in and δ/c/v'/g' through HBM separately (~9 passes);
+# the fused Pallas carrier (--carrier fused) reads grad/v/g and writes v'/g'/c
+# in ONE kernel (~3 effective passes on the roofline).
+EF_UNFUSED_PASSES = 9
+EF_FUSED_PASSES = 3
+
+
+def ef_update_memory_terms(rec: Dict) -> Optional[Dict]:
+    """Analytic fused-vs-unfused memory term of the EF client update for a
+    train record: seconds to stream the per-device EF state the required
+    number of times. This is the term the FusedPallasCarrier attacks.
+
+    Each device streams d/tp state words: a client's (vᵢ, gᵢ) are sharded
+    over the MODEL axis only under the default 'client' state sharding
+    (launch/shardings.py) — the data axes index clients, they don't divide a
+    client's state. (ZeRO state sharding would further divide by the free
+    data-axis product; the sweep records don't carry the plan, so this is
+    the default-plan term.)"""
+    from repro.launch import mesh as mesh_lib
+    shape = cb.INPUT_SHAPES[rec["shape"]]
+    if shape.kind != "train":
+        return None
+    cfg = cb.get(rec["arch"])
+    d_per_dev = cfg.active_param_count() / mesh_lib.PROD_MODEL
+    word = 4.0                       # f32 state; bf16 halves both terms alike
+    return {
+        "ef_mem_unfused_s": EF_UNFUSED_PASSES * d_per_dev * word / HBM_BW,
+        "ef_mem_fused_s": EF_FUSED_PASSES * d_per_dev * word / HBM_BW,
+    }
+
 
 def model_flops_per_device(rec: Dict) -> float:
     cfg = cb.get(rec["arch"])
@@ -64,13 +95,14 @@ def analyze_record(rec: Dict) -> Optional[Dict]:
     advice = {
         "compute": ("halve masked-attention waste with the blocked-causal "
                     "Pallas kernel / banded SWA; shard replicated heads"),
-        "memory": ("fuse the EF client update (kernels/ef_update.py), bf16 EF "
-                   "state, ZeRO state sharding (--state-sharding zero)"),
+        "memory": ("fuse the EF client update (--carrier fused, "
+                   "kernels/ef_update.py), bf16 EF state, ZeRO state "
+                   "sharding (--state-sharding zero)"),
         "collective": ("switch the EF sync to the sparse (values,indices) "
                        "carrier (--carrier sparse); pod-granularity clients "
                        "put the compressed bytes on the slow inter-pod links"),
     }[dominant]
-    return {
+    row = {
         "arch": rec["arch"], "shape": rec["shape"], "tag": rec.get("tag", ""),
         "multi_pod": rec["multi_pod"],
         "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
@@ -82,18 +114,29 @@ def analyze_record(rec: Dict) -> Optional[Dict]:
                        + mem.get("argument_bytes", 0)) < 16 * 2 ** 30,
         "advice": advice,
     }
+    ef_terms = ef_update_memory_terms(rec)
+    if ef_terms:
+        row.update(ef_terms)
+    return row
 
 
 def to_markdown(rows: List[Dict]) -> str:
     hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
-           "MODEL/HLO | temp GiB | fits 16G |\n|" + "---|" * 9 + "\n")
+           "MODEL/HLO | temp GiB | fits 16G | EF upd s unfused→fused |\n|"
+           + "---|" * 10 + "\n")
     lines = []
     for r in rows:
+        if "ef_mem_unfused_s" in r:
+            ef = (f"{r['ef_mem_unfused_s']:.2e} → {r['ef_mem_fused_s']:.2e} "
+                  f"({r['ef_mem_unfused_s'] / r['ef_mem_fused_s']:.1f}×)")
+        else:
+            ef = "—"
         lines.append(
             f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
             f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
             f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
-            f"{r['temp_gib']:.1f} | {'✓' if r['fits_hbm16'] else '✗'} |")
+            f"{r['temp_gib']:.1f} | {'✓' if r['fits_hbm16'] else '✗'} | "
+            f"{ef} |")
     return hdr + "\n".join(lines) + "\n"
 
 

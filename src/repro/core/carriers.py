@@ -1,0 +1,379 @@
+"""Wire carriers: the transport format of one EF synchronization round.
+
+EF21's separation result (Richtárik et al., 2021) is that the *wire format* of
+the compressed innovation is independent of the *method semantics* — Algorithm 1
+only requires that every client ships C(vᵢ − gᵢ) and receives meanᵢ(cᵢ). This
+module makes that separation first-class (DESIGN.md §6): a :class:`Carrier`
+owns how c travels, every runtime (the vmap simulator in core/simulate.py, the
+vmap runtime ``ef_round``, and the shard_map runtime ``ef_round_sharded`` in
+core/distributed.py) dispatches through it, and methods never see the wire.
+
+Three carriers:
+
+  DenseCarrier        paper-faithful: c is shipped as a dense d-word tensor and
+                      the mean lowers to an all-reduce (lax.pmean on the mesh,
+                      ``.mean(0)`` over the client axis in vmap runtimes).
+  SparseBlockCarrier  fixed-(values, block-local int32 indices) wire for the
+                      TopK family: an all-gather of 2·nb·kb words per client
+                      followed by a local scatter-add. Block-local indices mean
+                      no flat index ever exceeds the block size, so leaves with
+                      > 2³¹ elements (grok expert weights) are safe. Plain TopK
+                      is the single-block special case (block = d, exact global
+                      TopK).
+  FusedPallasCarrier  dense wire + the whole EF21-SGD(M) client chain
+                      (pre_compress → Block-TopK → post_compress) fused into ONE
+                      HBM pass via kernels/ef_update.py (~3× on the memory-
+                      roofline term of the client update). Falls back to the
+                      Pallas interpreter off-TPU, and to the unfused dense plan
+                      for methods/compressors the kernel does not cover.
+
+Execution plans — a runtime asks ``carrier.plan(method, eta)`` and gets:
+
+  'dense'  run the method's own update (pre → tree_compress → post or
+           ``method.update``) and aggregate the dense message;
+  'wire'   run pre_compress, then per-leaf encode → local_c → aggregate,
+           then post_compress (message must equal the wire, method.wire_is_msg);
+  'fused'  call ``carrier.fused_update`` which replaces the entire three-phase
+           chain with the fused kernel; aggregate the dense c it returns.
+
+Aggregation runs in one of two contexts, selected by keyword:
+
+  aggregate(..., dp=n)       wire leaves carry a leading client axis (vmap
+                             runtimes) — reduce over axis 0;
+  aggregate(..., axes=(...)) wire leaves are client-local inside shard_map —
+                             reduce with explicit named-axis collectives.
+
+``wire_words`` is the honest per-client, per-message word count for benchmark
+x-axes (values AND indices both count; a dense all-reduce counts d), exposed to
+plots via ``Method.coords_per_message(d, carrier=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressors as comp_lib
+
+PyTree = Any
+Wire = Any
+
+
+def axis_size(axis_name) -> jax.Array:
+    """Size of a shard_map/pmap axis, portable across JAX versions
+    (``jax.lax.axis_size`` only exists on newer releases)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+@dataclasses.dataclass(frozen=True)
+class Carrier:
+    """Base carrier. Frozen dataclass → hashable, usable inside jit statics."""
+
+    name: str = "abstract"
+
+    # -- plan selection ------------------------------------------------------
+    def plan(self, method, eta=None) -> str:
+        """'dense' | 'wire' | 'fused' — how a runtime should execute one round
+        of ``method``. Carriers must degrade to 'dense' (always correct) when
+        they cannot ship this method's messages."""
+        return "dense"
+
+    # -- per-client wire API (flat (d,) leaves) ------------------------------
+    def encode(self, comp: comp_lib.Compressor, delta: jax.Array,
+               rng: Optional[jax.Array] = None) -> Wire:
+        """delta: flat (d,). Returns the wire representation of C(delta)."""
+        raise NotImplementedError
+
+    def local_c(self, comp: comp_lib.Compressor, delta: jax.Array,
+                wire: Wire) -> jax.Array:
+        """The dense C(delta) the client keeps locally for its gᵢ update —
+        never transmitted. Returns flat (d,)."""
+        raise NotImplementedError
+
+    def aggregate(self, comp: comp_lib.Compressor, wire: Wire, *, d: int,
+                  dtype, dp: Optional[int] = None,
+                  axes: Optional[Tuple[str, ...]] = None) -> jax.Array:
+        """meanᵢ(cᵢ) from the wire. Exactly one of ``dp`` (leading-axis vmap
+        layout) / ``axes`` (named shard_map axes) must be given. Returns flat
+        (d,)."""
+        raise NotImplementedError
+
+    # -- accounting ----------------------------------------------------------
+    def wire_words(self, comp: comp_lib.Compressor, d: int) -> float:
+        """Words one client puts on the wire per message of dimension d."""
+        raise NotImplementedError
+
+    # -- fusion hook ---------------------------------------------------------
+    def fused_update(self, method, grads: PyTree, state: dict, *,
+                     eta=None, batched: bool = False):
+        raise NotImplementedError(f"carrier {self.name!r} does not fuse")
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DenseCarrier(Carrier):
+    """Paper-faithful wire: the dense tensor C(delta) itself; the mean is a
+    d-word all-reduce over the client axes (what the paper's own simulations
+    do — no wire savings; the §Perf baseline)."""
+
+    name: str = "dense"
+
+    def encode(self, comp, delta, rng=None):
+        return comp(delta, rng)
+
+    def local_c(self, comp, delta, wire):
+        return wire
+
+    def aggregate(self, comp, wire, *, d, dtype, dp=None, axes=None):
+        if axes is not None:
+            return jax.lax.pmean(wire, axes)
+        return wire.mean(0)
+
+    def wire_words(self, comp, d):
+        return float(d)
+
+
+# ---------------------------------------------------------------------------
+# sparse block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SparseBlockCarrier(Carrier):
+    """Fixed-size (values, block-local indices) wire for the TopK family.
+
+    Collective bytes drop from d to 2·nb·kb per client: the mean is an
+    all-gather of the small arrays followed by a local scatter-ADD (index
+    collisions across clients must SUM — ``.at[].add``). ``local_c`` is the
+    exact decode of the wire, so client state and server aggregate always
+    agree on what was transmitted (see local_c)."""
+
+    name: str = "sparse"
+
+    def plan(self, method, eta=None) -> str:
+        if method.wire_is_msg and self.supports(method.compressor):
+            return "wire"
+        return "dense"
+
+    def supports(self, comp) -> bool:
+        # has_sparse_carrier is the compressor's opt-in; the isinstance check
+        # narrows to the families whose fixed-size geometry _geom understands
+        # (RandK opts in but needs rng-dependent indices — not expressible as
+        # a deterministic block wire, so it degrades to dense)
+        return (comp.has_sparse_carrier
+                and isinstance(comp, (comp_lib.TopK, comp_lib.BlockTopK)))
+
+    def _geom(self, comp, d: int) -> Tuple[int, int, int]:
+        """(nb, block, kb). Plain TopK = one block spanning the leaf."""
+        if isinstance(comp, comp_lib.BlockTopK):
+            block, kb = comp.block, comp._kb()
+        elif isinstance(comp, comp_lib.TopK):
+            block, kb = d, comp._k(d)
+        else:
+            raise ValueError(
+                f"sparse carrier cannot ship {type(comp).__name__}")
+        nb = -(-d // block)
+        return nb, block, kb
+
+    @staticmethod
+    def _blocked(x: jax.Array, nb: int, block: int) -> jax.Array:
+        return jnp.pad(x, (0, nb * block - x.size)).reshape(nb, block)
+
+    def encode(self, comp, delta, rng=None):
+        nb, block, kb = self._geom(comp, delta.size)
+        xb = self._blocked(delta, nb, block)
+        _, idx = jax.lax.top_k(jnp.abs(xb), kb)          # (nb, kb), sorted
+        vals = jnp.take_along_axis(xb, idx, axis=1)
+        return vals, idx.astype(jnp.int32)               # block-LOCAL indices
+
+    def local_c(self, comp, delta, wire):
+        # exact decode of the wire (scatter of the shipped values), NOT a
+        # threshold mask: the client's gᵢ update must see precisely what the
+        # server aggregated, or a tie at the kb-th rank would leave mass the
+        # client believes transmitted but the server never received — error
+        # feedback would then never re-send it
+        vals, idx = wire
+        nb, block, _ = self._geom(comp, delta.size)
+        rows = jnp.broadcast_to(
+            jnp.arange(nb, dtype=jnp.int32)[:, None], idx.shape)
+        buf = jnp.zeros((nb, block), delta.dtype).at[rows, idx].set(vals)
+        return buf.reshape(-1)[: delta.size]
+
+    def aggregate(self, comp, wire, *, d, dtype, dp=None, axes=None):
+        vals, idx = wire
+        nb, block, kb = self._geom(comp, d)
+        if axes is not None:
+            n = 1
+            for a in axes:                               # explicit wire
+                n = n * axis_size(a)
+                vals = jax.lax.all_gather(vals, a)
+                idx = jax.lax.all_gather(idx, a)
+            vals = vals.reshape(-1, nb, kb)
+            idx = idx.reshape(-1, nb, kb)
+        else:
+            n = dp                                       # (dp, nb, kb) layout
+        rows = jnp.broadcast_to(
+            jnp.arange(nb, dtype=jnp.int32)[None, :, None], idx.shape)
+        buf = jnp.zeros((nb, block), dtype).at[rows, idx].add(vals) / n
+        return buf.reshape(-1)[:d]
+
+    def wire_words(self, comp, d):
+        nb, _, kb = self._geom(comp, d)
+        return 2.0 * nb * kb                             # values + int32 idx
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FusedPallasCarrier(DenseCarrier):
+    """Dense wire + the whole EF21-SGD(M) client update in one HBM pass.
+
+    ``fused_update`` replaces pre_compress → C(·) → post_compress for
+    EF21SGDM / EF21SGD with a BlockTopK compressor by a single call into
+    ``kernels/ef_update.py::ef21_sgdm_update`` per leaf (EF21SGD is the η = 1
+    special case: v' = grad). The kernel needs a *static* momentum, so the
+    plan degrades to 'dense' whenever η is traced (time-varying schedules).
+
+    ``interpret=None`` auto-selects the Pallas interpreter off-TPU so the
+    carrier runs (slowly but correctly) in CPU containers and under tests.
+    """
+
+    name: str = "fused"
+    interpret: Optional[bool] = None
+
+    def _interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def plan(self, method, eta=None) -> str:
+        static_eta = eta is None or isinstance(eta, (int, float))
+        if (method.name in ("ef21_sgdm", "ef21_sgd") and static_eta
+                and isinstance(method.compressor, comp_lib.BlockTopK)):
+            return "fused"
+        return "dense"
+
+    def fused_update(self, method, grads, state, *, eta=None,
+                     batched: bool = False):
+        """One fused HBM pass per leaf. ``grads``/``state`` leaves are either
+        client-local (shard_map runtime, ``batched=False``) or carry a leading
+        client axis (vmap runtimes, ``batched=True`` — clients become extra
+        tile rows, so no vmap-of-pallas_call is ever emitted).
+        Returns (c_tree, new_state)."""
+        from repro.kernels import ef_update as ef_kernel
+
+        comp = method.compressor
+        block, kb = comp.block, comp._kb()
+        if method.name == "ef21_sgd":
+            eta_f = 1.0                                  # v' = grad exactly
+            v_tree = state["g"]
+        else:
+            eta_f = float(eta) if eta is not None else float(method.eta)
+            v_tree = state["v"]
+        interp = self._interpret()
+
+        g_leaves, treedef = jax.tree_util.tree_flatten(state["g"])
+        v_leaves = jax.tree_util.tree_leaves(v_tree)
+        grad_leaves = jax.tree_util.tree_leaves(grads)
+
+        v_out, g_out, c_out = [], [], []
+        for grad, v, g in zip(grad_leaves, v_leaves, g_leaves):
+            if batched:
+                # pad each client's leaf to whole blocks FIRST so client
+                # boundaries and block boundaries coincide in the flat view
+                dp = grad.shape[0]
+                d = grad[0].size
+                nb = -(-d // block)
+                pad = nb * block - d
+
+                def prep(x):
+                    return jnp.pad(x.reshape(dp, d), ((0, 0), (0, pad)))
+
+                v2, g2, c = ef_kernel.ef21_sgdm_update(
+                    prep(grad), prep(v), prep(g), eta=eta_f, block=block,
+                    k=kb, interpret=interp)
+                unprep = lambda x: x[:, :d].reshape(grad.shape)  # noqa: E731
+                v2, g2, c = unprep(v2), unprep(g2), unprep(c)
+            else:
+                v2, g2, c = ef_kernel.ef21_sgdm_update(
+                    grad, v, g, eta=eta_f, block=block, k=kb,
+                    interpret=interp)
+            v_out.append(v2)
+            g_out.append(g2)
+            c_out.append(c)
+
+        unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)  # noqa: E731
+        c_tree = unf(c_out)
+        g_new = method._cast(unf(g_out))
+        if method.name == "ef21_sgd":
+            new_state = {"g": g_new}
+        else:
+            new_state = {"v": method._cast(unf(v_out)), "g": g_new}
+        return c_tree, new_state
+
+
+# ---------------------------------------------------------------------------
+# shared per-leaf dispatch for the 'wire' plan (used by every runtime)
+# ---------------------------------------------------------------------------
+
+def wire_round_batched(carrier: Carrier, comp, deltas: PyTree, dp: int
+                       ) -> Tuple[PyTree, PyTree]:
+    """encode → local_c → aggregate per leaf, clients on a leading axis (vmap
+    runtimes). Returns (c_tree, msg_mean_tree)."""
+    dleaves, dtree = jax.tree_util.tree_flatten(deltas)
+    c_leaves, agg_leaves = [], []
+    for leaf in dleaves:
+        d = int(leaf[0].size)
+        flat = leaf.reshape(dp, d)
+        wire = jax.vmap(lambda x: carrier.encode(comp, x))(flat)
+        c_loc = jax.vmap(lambda x, w: carrier.local_c(comp, x, w))(flat, wire)
+        agg = carrier.aggregate(comp, wire, d=d, dtype=leaf.dtype, dp=dp)
+        c_leaves.append(c_loc.reshape(leaf.shape))
+        agg_leaves.append(agg.reshape(leaf.shape[1:]))
+    return (jax.tree_util.tree_unflatten(dtree, c_leaves),
+            jax.tree_util.tree_unflatten(dtree, agg_leaves))
+
+
+def wire_round_local(carrier: Carrier, comp, deltas: PyTree,
+                     axes: Tuple[str, ...], rng=None) -> Tuple[PyTree, PyTree]:
+    """encode → local_c → aggregate per leaf, client-local inside shard_map
+    (explicit named-axis collectives). Returns (c_tree, msg_mean_tree)."""
+    dleaves, dtree = jax.tree_util.tree_flatten(deltas)
+    c_leaves, agg_leaves = [], []
+    for leaf in dleaves:
+        flat = leaf.reshape(-1)
+        wire = carrier.encode(comp, flat, rng)
+        c_leaves.append(carrier.local_c(comp, flat, wire).reshape(leaf.shape))
+        agg_leaves.append(carrier.aggregate(
+            comp, wire, d=leaf.size, dtype=leaf.dtype, axes=axes)
+            .reshape(leaf.shape))
+    return (jax.tree_util.tree_unflatten(dtree, c_leaves),
+            jax.tree_util.tree_unflatten(dtree, agg_leaves))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+REGISTRY = {
+    "dense": DenseCarrier,
+    "sparse": SparseBlockCarrier,
+    "fused": FusedPallasCarrier,
+}
+
+
+def make(name) -> Carrier:
+    if isinstance(name, Carrier):
+        return name
+    if name not in REGISTRY:
+        raise ValueError(f"unknown carrier {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]()

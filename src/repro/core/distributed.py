@@ -7,16 +7,18 @@ gradients are obtained *inside* the jitted step by reshaping the global batch to
 (dp, B/dp, …) and vmapping the loss gradient — no collective is needed to keep them
 per-client, because batch and state shardings agree on the leading axis.
 
-Aggregation carriers:
+Aggregation carriers (core/carriers.py, DESIGN.md §6): both runtimes here
+dispatch the wire format of meanᵢ(cᵢ) through :mod:`repro.core.carriers` —
 
-  'dense'  — paper-faithful semantics with a dense wire format: meanᵢ(cᵢ) lowers to
-             a d-word all-reduce over the data axes (what the paper's own
-             simulations do; no wire savings — the baseline for §Perf).
-  'sparse' — beyond-paper optimized carrier for TopK/BlockTopK: each client ships
-             its fixed-K (values, indices); an explicit sharding constraint forces
-             an all-gather of (dp·K) words over the data axes, followed by a local
-             scatter-add. Collective bytes drop by ~d/(dp·K) on the gradient-sync
-             path. Identical math (validated in tests against 'dense').
+  'dense'  — paper-faithful: a d-word all-reduce over the data axes (what the
+             paper's own simulations do; no wire savings — the §Perf baseline).
+  'sparse' — fixed-(values, block-local indices) wire for the TopK family: an
+             all-gather of the small arrays over the data axes plus a local
+             scatter-add. Collective bytes drop by ~d/(2·dp·K) on the
+             gradient-sync path. Identical math (validated against 'dense').
+  'fused'  — dense wire, but the whole EF21-SGD(M) client update runs as ONE
+             Pallas HBM pass (kernels/ef_update.py) instead of the unfused
+             pre_compress → C(·) → post_compress chain.
 """
 from __future__ import annotations
 
@@ -25,9 +27,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.core import compressors as comp_lib
+from repro.core import carriers as carrier_lib
 from repro.core import ef as ef_lib
 
 PyTree = Any
@@ -36,20 +38,9 @@ PyTree = Any
 @dataclasses.dataclass(frozen=True)
 class EFConfig:
     method: ef_lib.Method
-    carrier: str = "dense"                 # 'dense' | 'sparse'
+    carrier: str = "dense"                 # 'dense' | 'sparse' | 'fused'
     data_axes: Tuple[str, ...] = ("data",)  # mesh axes forming the client dim
     b_init_scale: bool = True              # Alg 1 line 2: init v⁰=g⁰ to first grads
-
-
-def _maybe_shard(x, spec):
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
-            return x
-        return jax.lax.with_sharding_constraint(
-            x, NamedSharding(jax.sharding.get_mesh(), spec))
-    except Exception:
-        return x
 
 
 # ---------------------------------------------------------------------------
@@ -99,35 +90,21 @@ def init_ef_state(efc: EFConfig, params: PyTree, dp: int,
 # one synchronization round
 # ---------------------------------------------------------------------------
 
-def _sparse_aggregate(comp, deltas_flat: jax.Array, dp: int, d: int) -> Tuple[
-        jax.Array, jax.Array]:
-    """deltas_flat: (dp, d). Returns (agg (d,), c_dense (dp, d))."""
-    vals, idx = jax.vmap(comp.sparse)(deltas_flat)          # (dp, K) ×2
-    # local dense cᵢ (stays client-local; needed for the gᵢ state update)
-    c_dense = jax.vmap(
-        lambda v, i: jnp.zeros((d,), deltas_flat.dtype).at[i].set(v))(vals, idx)
-    # wire: ship only (values, indices) — force the all-gather of the small arrays
-    vals_g = _maybe_shard(vals, P(None, None))
-    idx_g = _maybe_shard(idx, P(None, None))
-    # scatter-ADD tolerates index collisions across clients (we want the sum)
-    agg = jnp.zeros((d,), deltas_flat.dtype).at[idx_g.reshape(-1)].add(
-        vals_g.reshape(-1)) / dp
-    return agg, c_dense
-
-
 def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
                      rng: Optional[jax.Array], mesh, grads_specs: PyTree,
                      state_specs: Dict, eta: Optional[float] = None
                      ) -> Tuple[PyTree, Dict]:
     """shard_map EF sync: each device runs its client's update on its LOCAL param
     shard (per-shard Block-TopK — contractive with the same α, DESIGN.md §4), then
-    the aggregation collective is issued *explicitly*:
+    the aggregation collective is issued *explicitly* by the carrier
+    (core/carriers.py):
 
-      dense carrier : psum(cᵢ)/n over the client axes — an all-reduce of d/tp
-                      words per device (the paper-faithful wire format)
-      sparse carrier: all_gather of the local (values, indices) over the client
-                      axes — dp·K/tp words per device — followed by a local
-                      scatter-add (the beyond-paper wire format)
+      'dense'  : psum(cᵢ)/n over the client axes — an all-reduce of d/tp words
+                 per device (the paper-faithful wire format)
+      'sparse' : all_gather of the local (values, block-local indices) over the
+                 client axes — 2·dp·K/tp words per device — followed by a local
+                 scatter-add (the beyond-paper wire format)
+      'fused'  : dense aggregation, but the client chain ran as one Pallas pass
 
     This keeps compression 100% collective-free (no flatten-induced gathers) and
     makes the collective schedule ours rather than the SPMD partitioner's.
@@ -136,63 +113,38 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
 
     method = efc.method
     c_axes = efc.data_axes
+    carrier = carrier_lib.make(efc.carrier)
+    plan = carrier.plan(method, eta)
 
     def body(grads_l, clients_l, server_l, rng_l):
         # local client index for rng decorrelation
         if rng_l is not None:
             idx = 0
             for a in c_axes:
-                idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+                idx = idx * carrier_lib.axis_size(a) + jax.lax.axis_index(a)
             rng_l = jax.random.fold_in(rng_l, idx)
         sq = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
         ex = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
         g, cl = sq(grads_l), sq(clients_l)        # strip the client dim (local=1)
-        deltas, ctx = method.pre_compress(g, cl, eta=eta)
 
-        if efc.carrier == "sparse" and method.compressor.has_sparse_carrier:
-            # block-wise carriers: (nb, kb) values + BLOCK-LOCAL int32 indices —
-            # no flat index ever exceeds the block size, so leaves > 2³¹
-            # elements (grok expert weights) are safe, and the local cᵢ is a
-            # scatter-free threshold mask.
-            comp = method.compressor
-            block = getattr(comp, "block", 1024)
-            kb = comp._kb() if hasattr(comp, "_kb") else max(
-                1, int(getattr(comp, "ratio", 0.01) * block))
-            n = 1
-            for a in c_axes:
-                n *= jax.lax.axis_size(a)
-            c_loc, agg = [], []
-            dleaves, dtree = jax.tree_util.tree_flatten(deltas)
-            for leaf in dleaves:
-                d = leaf.size
-                nb = -(-d // block)
-                xb = jnp.pad(leaf.reshape(-1), (0, nb * block - d)
-                             ).reshape(nb, block)
-                ab = jnp.abs(xb)
-                vals, idx_ = jax.lax.top_k(ab, kb)           # (nb, kb)
-                thresh = vals[:, -1:]
-                c_loc.append(jnp.where(ab >= thresh, xb, 0.0)
-                             .reshape(-1)[:d].reshape(leaf.shape))
-                vv = jnp.take_along_axis(xb, idx_, axis=1)
-                vg, ig = vv, idx_.astype(jnp.int32)
-                for a in c_axes:                             # explicit wire
-                    vg = jax.lax.all_gather(vg, a)
-                    ig = jax.lax.all_gather(ig, a)
-                vg = vg.reshape(-1, nb, kb)                  # (n, nb, kb)
-                ig = ig.reshape(-1, nb, kb)
-                rows = jnp.broadcast_to(
-                    jnp.arange(nb, dtype=jnp.int32)[None, :, None], ig.shape)
-                buf = jnp.zeros((nb, block), xb.dtype
-                                ).at[rows, ig].add(vg) / n
-                agg.append(buf.reshape(-1)[:d].reshape(leaf.shape))
-            c_tree = jax.tree_util.tree_unflatten(dtree, c_loc)
-            msg_mean = jax.tree_util.tree_unflatten(dtree, agg)
-        else:
-            c_tree = ef_lib.tree_compress(method.compressor, deltas, rng_l)
+        if plan == "fused":
+            c_tree, new_cl = carrier.fused_update(method, g, cl, eta=eta)
             msg_mean = jax.tree_util.tree_map(
                 lambda c: jax.lax.pmean(c, c_axes), c_tree)
+        elif plan == "wire":
+            deltas, ctx = method.pre_compress(g, cl, eta=eta)
+            c_tree, msg_mean = carrier_lib.wire_round_local(
+                carrier, method.compressor, deltas, c_axes, rng_l)
+            _, new_cl = method.post_compress(c_tree, ctx)
+        else:
+            # dense plan: aggregate the method's actual MESSAGE (for
+            # wire_is_msg=False methods msg ≠ c, e.g. Abs ships γ·c), and go
+            # through method.update so methods without a two-phase API
+            # (neolithic, ideal) also run on the sharded path
+            msg, new_cl = method.update(g, cl, rng_l, eta=eta)
+            msg_mean = jax.tree_util.tree_map(
+                lambda m: jax.lax.pmean(m, c_axes), msg)
 
-        msg, new_cl = method.post_compress(c_tree, ctx)
         new_server = ef_lib.server_step(method, server_l, msg_mean)
         return ex(new_cl), new_server, msg_mean
 
@@ -210,12 +162,25 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
 def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
              rng: Optional[jax.Array], eta: Optional[float] = None
              ) -> Tuple[PyTree, Dict]:
-    """grads: per-client (dp leading). Returns (gᵗ⁺¹ estimate, new ef_state)."""
+    """vmap EF sync (single-device tests, exact global-TopK semantics).
+    grads: per-client (dp leading). Returns (gᵗ⁺¹ estimate, new ef_state)."""
     method, dp = efc.method, jax.tree_util.tree_leaves(grads)[0].shape[0]
     clients, server = ef_state["clients"], ef_state["server"]
+    carrier = carrier_lib.make(efc.carrier)
+    plan = carrier.plan(method, eta)
     rngs = jax.random.split(rng, dp) if rng is not None else None
 
-    if efc.carrier == "dense" or not method.compressor.has_sparse_carrier:
+    if plan == "fused":
+        c_tree, new_clients = carrier.fused_update(
+            method, grads, clients, eta=eta, batched=True)
+        msg_mean = jax.tree_util.tree_map(lambda c: c.mean(0), c_tree)
+    elif plan == "wire":
+        deltas, ctxs = jax.vmap(
+            lambda g, s: method.pre_compress(g, s, eta=eta))(grads, clients)
+        c_tree, msg_mean = carrier_lib.wire_round_batched(
+            carrier, method.compressor, deltas, dp)
+        _, new_clients = jax.vmap(method.post_compress)(c_tree, ctxs)
+    else:
         def upd(g, s, r):
             return method.update(g, s, r, eta=eta)
         if rngs is None:
@@ -224,20 +189,6 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
         else:
             msgs, new_clients = jax.vmap(upd)(grads, clients, rngs)
         msg_mean = jax.tree_util.tree_map(lambda m: m.mean(0), msgs)
-    else:
-        deltas, ctxs = jax.vmap(
-            lambda g, s: method.pre_compress(g, s, eta=eta))(grads, clients)
-        comp = method.compressor
-        agg_leaves, c_leaves = [], []
-        dleaves, dtree = jax.tree_util.tree_flatten(deltas)
-        for leaf in dleaves:
-            d = int(leaf[0].size)
-            agg, c_dense = _sparse_aggregate(comp, leaf.reshape(dp, d), dp, d)
-            agg_leaves.append(agg.reshape(leaf.shape[1:]))
-            c_leaves.append(c_dense.reshape(leaf.shape))
-        msg_mean = jax.tree_util.tree_unflatten(dtree, agg_leaves)
-        c_tree = jax.tree_util.tree_unflatten(dtree, c_leaves)
-        _, new_clients = jax.vmap(method.post_compress)(c_tree, ctxs)
 
     new_server = ef_lib.server_step(method, server, msg_mean)
     return new_server, {"clients": new_clients, "server": new_server}

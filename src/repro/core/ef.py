@@ -120,6 +120,11 @@ class Method:
     name: str = "base"
     mode: str = "delta"            # 'delta' | 'absolute'
     needs_paired_grads: bool = False
+    # True iff the transmitted message IS the compressed tensor c (post_compress
+    # returns c unchanged) — the condition for non-dense carriers to aggregate
+    # the wire directly (core/carriers.py). False for methods whose message is a
+    # transform of c (Abs scaling) or that bypass the two-phase API entirely.
+    wire_is_msg: bool = True
 
     # -- client: two-phase API ----------------------------------------------
     def init(self, params_like: PyTree, init_grads: Optional[PyTree] = None) -> Dict:
@@ -141,7 +146,15 @@ class Method:
         return self.post_compress(c, ctx)
 
     # -- accounting (paper plots use "# transmitted coordinates") -----------
-    def coords_per_message(self, d: int) -> float:
+    def coords_per_message(self, d: int, carrier=None) -> float:
+        """Idealized transmitted-coordinate count (paper x-axes) when
+        ``carrier`` is None; otherwise delegates to ``Carrier.wire_words`` —
+        the honest word count of the actual wire format (dense all-reduce
+        ships d words even for a sparse-valued c; the sparse carrier ships
+        values AND indices)."""
+        if carrier is not None:
+            from repro.core import carriers as carrier_lib
+            return carrier_lib.make(carrier).wire_words(self.compressor, d)
         c = self.compressor
         if isinstance(c, comp_lib.TopK):
             return c._k(d)
@@ -258,6 +271,7 @@ class EF21SGDMIdeal(Method):
     name: str = "ef21_sgdm_ideal"
     mode: str = "absolute"          # server uses gᵗ = meanᵢ gᵢᵗ directly
     needs_paired_grads: bool = True  # (stochastic, exact) pair
+    wire_is_msg: bool = False        # msg = ∇fᵢ + c, not c (no two-phase API)
 
     def init(self, params_like, init_grads=None):
         return {}
@@ -282,6 +296,7 @@ class EF21SGDMAbs(Method):
     gamma: float = 1e-2
     name: str = "ef21_sgdm_abs"
     mode: str = "delta"
+    wire_is_msg: bool = False        # msg = γ·c — a transform of the wire
 
     def init(self, params_like, init_grads=None):
         v = init_grads if init_grads is not None else tree_zeros_like(params_like)
@@ -393,6 +408,7 @@ class Neolithic(Method):
     rounds: int = 4
     name: str = "neolithic"
     mode: str = "absolute"
+    wire_is_msg: bool = False        # R-round accumulator, no two-phase API
 
     def init(self, params_like, init_grads=None):
         return {}
@@ -407,8 +423,8 @@ class Neolithic(Method):
             resid = tree_sub(resid, c)
         return acc, state
 
-    def coords_per_message(self, d: int) -> float:
-        return self.rounds * super().coords_per_message(d)
+    def coords_per_message(self, d: int, carrier=None) -> float:
+        return self.rounds * super().coords_per_message(d, carrier)
 
 
 # ---------------------------------------------------------------------------

@@ -4,8 +4,10 @@ This is the exact loop of Algorithm 1 / 3 / 4 / 5 (and the EF14/SGD baselines) r
 over an arbitrary :class:`repro.core.problems.Problem`, with all n clients carried as
 a leading axis and stepped by ``vmap`` — a faithful single-host emulation of the
 distributed method that the paper's own experiments use. The production multi-chip
-path lives in core/distributed.py; both share the Method implementations, so what is
-validated here is what runs on the mesh.
+path lives in core/distributed.py; both share the Method implementations AND the
+wire carrier (core/carriers.py), so what is validated here is what runs on the
+mesh: ``SimConfig.carrier`` selects dense / sparse / fused exactly like
+``EFConfig.carrier`` does on the production path.
 """
 from __future__ import annotations
 
@@ -16,6 +18,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import carriers as carrier_lib
 from repro.core import ef as ef_lib
 
 PyTree = Any
@@ -31,6 +34,7 @@ class SimConfig:
     b_init: int = 1                 # initial batch size B_init (Alg 1 line 2)
     time_varying: bool = False      # γₜ = γ/√(t+1), ηₜ = η/√(t+1) (App. J / Fig 4)
     record_every: int = 1
+    carrier: str = "dense"          # 'dense' | 'sparse' | 'fused'
 
 
 def _client_rngs(rng, n):
@@ -62,35 +66,56 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
     g_server = ef_lib.server_init(
         method, x0, jax.tree_util.tree_map(lambda g: g.mean(0), g0))
 
+    carrier = carrier_lib.make(cfg.carrier)
+
     def step(carry, t):
         x, states, g_server, rng = carry
         rng, r_grad, r_comp = jax.random.split(rng, 3)
-        # App. J schedule when time_varying: γₜ = γ/√(t+1), ηₜ = 1/√(t+1);
-        # otherwise the constant-parameter setting of Theorems 2/3.
-        scale = jnp.where(cfg.time_varying, 1.0 / jnp.sqrt(t + 1.0), 1.0)
-        gamma_t = cfg.gamma * scale
         eta0 = cfg.eta if cfg.eta is not None else getattr(method, "eta", 1.0)
-        eta_t = jnp.where(cfg.time_varying, jnp.minimum(scale, 1.0), eta0)
+        if cfg.time_varying:
+            # App. J schedule: γₜ = γ/√(t+1), ηₜ = 1/√(t+1)
+            scale = 1.0 / jnp.sqrt(t + 1.0)
+            gamma_t = cfg.gamma * scale
+            eta_t = jnp.minimum(scale, 1.0)
+        else:
+            # constant-parameter setting of Theorems 2/3 — η stays a python
+            # float so the fused carrier can bake it into the Pallas kernel
+            gamma_t, eta_t = cfg.gamma, eta0
 
         x_next = jax.tree_util.tree_map(lambda p, g: p - gamma_t * g, x, g_server)
 
-        def client_update(c, st, rg, rc):
+        def client_grads(c, rg):
             if method.needs_paired_grads:
                 g_new = problem.stoch_grad(x_next, c, rg, cfg.batch_size)
                 if method.name == "ef21_sgdm_ideal":
                     exact = getattr(problem, "client_grad",
                                     lambda xx, cc: problem.full_grad(xx))
-                    grads = (g_new, exact(x_next, c))
-                else:   # STORM: two stochastic grads under the SAME ξ
-                    g_prev = problem.stoch_grad(x, c, rg, cfg.batch_size)
-                    grads = (g_new, g_prev)
-            else:
-                grads = problem.stoch_grad(x_next, c, rg, cfg.batch_size)
-            return method.update(grads, st, rc, eta=eta_t)
+                    return (g_new, exact(x_next, c))
+                # STORM: two stochastic grads under the SAME ξ
+                return (g_new, problem.stoch_grad(x, c, rg, cfg.batch_size))
+            return problem.stoch_grad(x_next, c, rg, cfg.batch_size)
 
-        msgs, states_new = jax.vmap(client_update)(
-            clients, states, _client_rngs(r_grad, cfg.n), _client_rngs(r_comp, cfg.n))
-        msg_mean = jax.tree_util.tree_map(lambda m: m.mean(0), msgs)
+        r_grads = _client_rngs(r_grad, cfg.n)
+        plan = carrier.plan(method, eta_t)   # static: traced ηₜ forces 'dense'
+        if plan == "fused":
+            grads = jax.vmap(client_grads)(clients, r_grads)
+            c_tree, states_new = carrier.fused_update(
+                method, grads, states, eta=eta_t, batched=True)
+            msg_mean = jax.tree_util.tree_map(lambda c: c.mean(0), c_tree)
+        elif plan == "wire":
+            grads = jax.vmap(client_grads)(clients, r_grads)
+            deltas, ctxs = jax.vmap(
+                lambda g, s: method.pre_compress(g, s, eta=eta_t))(
+                grads, states)
+            c_tree, msg_mean = carrier_lib.wire_round_batched(
+                carrier, method.compressor, deltas, cfg.n)
+            _, states_new = jax.vmap(method.post_compress)(c_tree, ctxs)
+        else:
+            def client_update(c, st, rg, rc):
+                return method.update(client_grads(c, rg), st, rc, eta=eta_t)
+            msgs, states_new = jax.vmap(client_update)(
+                clients, states, r_grads, _client_rngs(r_comp, cfg.n))
+            msg_mean = jax.tree_util.tree_map(lambda m: m.mean(0), msgs)
         g_server_new = ef_lib.server_step(method, g_server, msg_mean)
 
         gn = ef_lib.tree_norm_sq(problem.full_grad(x_next))
@@ -99,11 +124,24 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
 
     (x_fin, _, _, _), (gns, fls) = jax.lax.scan(
         step, (x0, states, g_server, rng), jnp.arange(cfg.steps))
+    d_total = ef_lib.tree_dim(x0)
+    # honest wire accounting follows the plan that actually EXECUTED: when the
+    # carrier degrades to the dense plan (unsupported compressor/method,
+    # traced ηₜ), what went on the wire was the dense tensor — d words
+    eta_static = None if cfg.time_varying else (
+        cfg.eta if cfg.eta is not None else getattr(method, "eta", 1.0))
+    executed = cfg.carrier \
+        if carrier.plan(method, eta_static) != "dense" else "dense"
     return {
         "grad_norm_sq": gns,
         "loss": fls,
         "x_final": x_fin,
-        "coords_per_round": method.coords_per_message(ef_lib.tree_dim(x0)) * cfg.n,
+        # paper x-axis: idealized transmitted-coordinate count
+        "coords_per_round": method.coords_per_message(d_total) * cfg.n,
+        # honest word count of the executed wire (values + indices; dense
+        # all-reduce ships d) — see Carrier.wire_words
+        "wire_words_per_round":
+            method.coords_per_message(d_total, carrier=executed) * cfg.n,
     }
 
 

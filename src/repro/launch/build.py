@@ -29,6 +29,8 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
                       compressor_name: str = "block_topk",
                       ratio: float = 0.01, eta: float = 0.1,
                       carrier: str = "dense") -> dist.EFConfig:
+    from repro.core import carriers as carrier_lib
+    carrier_obj = carrier_lib.make(carrier)  # fail fast on unknown names
     comp = (comp_lib.make(compressor_name, ratio=ratio)
             if compressor_name != "identity" else comp_lib.Identity())
     state_dtype = jnp.bfloat16 if plan.ef_state_dtype == "bfloat16" else None
@@ -36,6 +38,16 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
     if method_name in ("ef21_sgdm", "ef21_sgd2m", "sgdm", "ef21_storm"):
         kwargs["eta"] = eta
     method = ef_lib.make(method_name, **kwargs)
+    # the carrier itself is the source of truth for what it can execute; an
+    # explicitly requested fused carrier that would silently degrade to the
+    # unfused dense plan is a misconfiguration worth failing fast on
+    if carrier == "fused" and carrier_obj.plan(method, eta) != "fused":
+        raise ValueError(
+            "--carrier fused would silently run the UNFUSED dense plan for "
+            f"method={method_name!r} compressor={compressor_name!r} (the "
+            "fused kernel covers the chains FusedPallasCarrier.plan accepts, "
+            "currently EF21-SGD(M) × block_topk). Pick --carrier dense or "
+            "sparse for this combination.")
     # the EF client axes follow the plan's client granularity (pod clients
     # aggregate over 'pod' only; the within-pod mean happens in the vmapped
     # per-client loss)

@@ -77,7 +77,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                         ef_state_dtype=ef_state_dtype)
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with mesh_lib.mesh_context(mesh):
             if shape.kind == "train":
                 efc = build_lib.default_ef_config(
                     mesh, plan, method_name=method, compressor_name=compressor,
@@ -92,7 +92,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             t_compile = time.time() - t0 - t_lower
 
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis() or {}
+            cost = hlo_analysis.cost_analysis_dict(compiled)
             hlo = hlo_analysis.analyze(compiled.as_text(), mesh.size)
         rec.update(
             status="OK",

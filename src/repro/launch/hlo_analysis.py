@@ -31,6 +31,16 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+def cost_analysis_dict(compiled) -> Dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions: older
+    releases return a one-element **list** of per-module dicts, newer ones the
+    dict itself (and it may be None/empty for some backends)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
+
 _SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
 _INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
 _COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")

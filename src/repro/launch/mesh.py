@@ -10,14 +10,40 @@ from typing import Tuple
 import jax
 
 
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Version-portable ``jax.make_mesh``: newer JAX wants explicit
+    ``axis_types`` (we always use Auto — shard_map handles Manual itself);
+    older JAX (< 0.5) has neither ``jax.sharding.AxisType`` nor the kwarg."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where it exists (JAX ≥ 0.6); the ``Mesh``
+    context manager itself on older releases. Use as ``with mesh_context(m):``."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+# production mesh geometry (also consumed by benchmarks/roofline.py, which
+# must not instantiate the mesh — that would lock the jax device count)
+PROD_DATA = 16
+PROD_MODEL = 16
+PROD_PODS = 2
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
     Multi-pod:  (pod=2, data=16, model=16) = 512 chips across DCI."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    shape = (PROD_PODS, PROD_DATA, PROD_MODEL) if multi_pod \
+        else (PROD_DATA, PROD_MODEL)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> Tuple[str, ...]:
@@ -33,5 +59,4 @@ def dp_size(mesh) -> int:
 
 def make_smoke_mesh():
     """1-device mesh for CPU tests."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))

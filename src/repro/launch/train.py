@@ -45,7 +45,11 @@ def main() -> None:
     ap.add_argument("--compressor", default="block_topk")
     ap.add_argument("--ratio", type=float, default=0.05)
     ap.add_argument("--optimizer", default="sgd")
-    ap.add_argument("--carrier", default="dense")
+    ap.add_argument("--carrier", default="dense",
+                    choices=["dense", "sparse", "fused"],
+                    help="wire carrier for the EF sync (core/carriers.py): "
+                         "dense all-reduce, sparse (values,indices) "
+                         "all-gather, or the fused Pallas client update")
     ap.add_argument("--b-init", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)

@@ -1,0 +1,171 @@
+"""Wire-carrier subsystem (core/carriers.py): dense / sparse / fused carriers
+must produce the same g_server trajectories (the wire format is transport, not
+semantics), and wire_words accounting must stay honest."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import carriers as carrier_lib
+from repro.core import compressors as C
+from repro.core import distributed as D
+from repro.core import ef, problems, simulate
+from repro.optim import optimizer as opt_lib
+
+
+def loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+
+@pytest.fixture
+def setup():
+    rng = jax.random.PRNGKey(0)
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    x = jax.random.normal(rng, (16, 8))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (8, 4))
+    return params, {"x": x, "y": x @ w}
+
+
+BLOCK_TOPK = C.BlockTopK(block=8, k_per_block=3)
+
+
+def _trajectory(setup, method, carrier, steps=40):
+    """g_server / loss trajectory of the production train step."""
+    params, batch = setup
+    dp = 4
+    efc = D.EFConfig(method=method, carrier=carrier)
+    opt = opt_lib.sgd(0.2)
+    step = jax.jit(D.make_train_step(loss_fn, efc, opt, dp))
+    _, _, g0 = D.per_client_value_and_grad(loss_fn, params, batch, dp)
+    p, os_, es = params, opt.init(params), D.init_ef_state(
+        efc, params, dp, init_grads=g0)
+    rng = jax.random.PRNGKey(1)
+    servers = []
+    for t in range(steps):
+        p, os_, es, m = step(p, os_, es, batch, jax.random.fold_in(rng, t), t)
+        servers.append(np.asarray(es["server"]["w"]))
+    return np.stack(servers)
+
+
+@pytest.mark.parametrize("carrier", ["sparse", "fused"])
+@pytest.mark.parametrize("method_name", ["ef21_sgdm", "ef21_sgd"])
+def test_train_step_g_server_matches_dense(setup, carrier, method_name):
+    """Every carrier is a pure transport: the server estimate gᵗ it produces
+    over a full training run must equal the dense (paper-faithful) one up to
+    float/tie tolerance."""
+    kwargs = {"compressor": BLOCK_TOPK}
+    if method_name == "ef21_sgdm":
+        kwargs["eta"] = 0.3
+    method = ef.make(method_name, **kwargs)
+    ref = _trajectory(setup, method, "dense")
+    got = _trajectory(setup, method, carrier)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("carrier", ["sparse", "fused"])
+def test_simulator_matches_dense_on_quadratic(carrier):
+    """All three runtimes share one carrier implementation — the vmap
+    simulator's whole trajectory on a quadratic problem must match dense."""
+    prob = problems.QuadraticT1()
+    method = ef.EF21SGDM(compressor=C.BlockTopK(block=2, k_per_block=1),
+                         eta=0.2)
+    out = {}
+    for c in ("dense", carrier):
+        cfg = simulate.SimConfig(n=4, batch_size=2, gamma=1e-2, steps=200,
+                                 carrier=c)
+        out[c] = simulate.run_numpy(prob, method, cfg, seed=0)
+    np.testing.assert_allclose(out[carrier]["grad_norm_sq"],
+                               out["dense"]["grad_norm_sq"],
+                               rtol=1e-4, atol=1e-7)
+
+
+def test_fused_degrades_to_dense_plan_when_unfusable():
+    fused = carrier_lib.make("fused")
+    assert fused.plan(ef.EF21SGDM(compressor=C.BlockTopK())) == "fused"
+    # TopK is not the kernel's compressor; traced η can't be baked in
+    assert fused.plan(ef.EF21SGDM(compressor=C.TopK())) == "dense"
+    assert fused.plan(ef.EF21SGDM(compressor=C.BlockTopK()),
+                      eta=jnp.float32(0.1)) == "dense"
+    assert fused.plan(ef.EF14SGD(compressor=C.BlockTopK())) == "dense"
+
+
+def test_sparse_plan_respects_wire_is_msg():
+    sparse = carrier_lib.make("sparse")
+    assert sparse.plan(ef.EF21SGDM(compressor=C.TopK())) == "wire"
+    assert sparse.plan(ef.EF21SGDM(compressor=C.BlockTopK())) == "wire"
+    # Abs transforms c into γ·c — the wire is not the message
+    assert sparse.plan(ef.EF21SGDMAbs(compressor=C.TopK())) == "dense"
+    # RandK needs rng in encode; carrier degrades rather than miscompress
+    assert sparse.plan(ef.EF21SGDM(compressor=C.RandK())) == "dense"
+
+
+def test_wire_words_accounting():
+    d = 4096
+    dense, sparse, fused = (carrier_lib.make(n)
+                            for n in ("dense", "sparse", "fused"))
+    topk = C.TopK(ratio=0.01)
+    btk = C.BlockTopK(block=1024, k_per_block=16)
+    # dense/fused all-reduce ships every coordinate regardless of sparsity
+    assert dense.wire_words(topk, d) == d
+    assert fused.wire_words(btk, d) == d
+    # sparse ships values AND int32 indices: 2× the coordinate count
+    assert sparse.wire_words(topk, d) == 2 * topk._k(d)
+    assert sparse.wire_words(btk, d) == 2 * (d // 1024) * 16
+    # Method.coords_per_message delegates when a carrier is named
+    m = ef.EF21SGDM(compressor=btk)
+    assert m.coords_per_message(d) == (d // 1024) * 16          # paper x-axis
+    assert m.coords_per_message(d, carrier="sparse") == \
+        sparse.wire_words(btk, d)
+    assert m.coords_per_message(d, carrier="dense") == d
+    neo = ef.Neolithic(compressor=topk, rounds=4)
+    assert neo.coords_per_message(d, carrier="sparse") == \
+        4 * sparse.wire_words(topk, d)
+
+
+def test_simulator_reports_wire_words():
+    prob = problems.QuadraticT1()
+    method = ef.EF21SGDM(compressor=C.TopK(k=1), eta=0.5)
+    for carrier, expect in (("dense", 2.0), ("sparse", 2.0)):
+        cfg = simulate.SimConfig(n=2, steps=3, carrier=carrier)
+        out = simulate.run_numpy(prob, method, cfg, seed=0)
+        # d = 2, n = 2: TopK(k=1) → 1 coord (paper), dense wire = 2 words,
+        # sparse wire = 2 words (1 value + 1 index)
+        assert out["coords_per_round"] == 1 * 2
+        assert out["wire_words_per_round"] == expect * 2
+
+
+def test_sparse_carrier_roundtrip_matches_compressor():
+    """encode→local_c equals the compressor's dense C(x); encode→aggregate
+    with one client equals it too (ties aside, none here)."""
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(50).astype(np.float32))
+    sparse = carrier_lib.make("sparse")
+    for comp in (C.TopK(ratio=0.2), C.BlockTopK(block=16, k_per_block=4)):
+        wire = sparse.encode(comp, x)
+        c_loc = sparse.local_c(comp, x, wire)
+        np.testing.assert_allclose(np.asarray(c_loc), np.asarray(comp(x)),
+                                   rtol=1e-6)
+        wire1 = jax.tree_util.tree_map(lambda a: a[None], wire)
+        agg = sparse.aggregate(comp, wire1, d=x.size, dtype=x.dtype, dp=1)
+        np.testing.assert_allclose(np.asarray(agg), np.asarray(comp(x)),
+                                   rtol=1e-6)
+
+
+def test_sparse_local_c_is_exact_wire_decode():
+    """On a tie at the k-th rank, local_c must keep exactly what the wire
+    shipped (k entries), not the threshold mask (which would keep both tied
+    coordinates and desynchronize client state from the server aggregate)."""
+    x = jnp.asarray([1.0, -1.0, 0.5, 0.25], jnp.float32)   # |tie| at rank 1
+    comp = C.TopK(k=1)
+    sparse = carrier_lib.make("sparse")
+    wire = sparse.encode(comp, x)
+    c = np.asarray(sparse.local_c(comp, x, wire))
+    assert (c != 0).sum() == 1
+    vals, idx = (np.asarray(a).reshape(-1) for a in wire)
+    np.testing.assert_allclose(c[idx[0]], vals[0])
+
+
+def test_unknown_carrier_rejected():
+    with pytest.raises(ValueError):
+        carrier_lib.make("carrier-pigeon")

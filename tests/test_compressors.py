@@ -3,9 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import compressors as C
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import compressors as C  # noqa: E402
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")

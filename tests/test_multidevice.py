@@ -13,9 +13,9 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core import compressors as C, distributed as D, ef
+    from repro.launch import mesh as mesh_lib
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = mesh_lib.make_mesh((4, 2), ("data", "model"))
     dp = 4
     params = {"w": jnp.zeros((8, 4))}
     rng = jax.random.PRNGKey(0)
@@ -30,11 +30,11 @@ SCRIPT = textwrap.dedent("""
     sspecs = {"clients": {k: {"w": P("data", None, None)} for k in ("v", "g")},
               "server": {"w": P(None, None)}}
 
-    for carrier in ("dense", "sparse"):
+    for carrier in ("dense", "sparse", "fused"):
         efc = D.EFConfig(method=method, carrier=carrier, data_axes=("data",))
         st = D.init_ef_state(efc, params, dp, init_grads=grads_t)
         g_ref, st_ref = D.ef_round(efc, grads_t, st, None)
-        with jax.set_mesh(mesh):
+        with mesh_lib.mesh_context(mesh):
             g_sm, st_sm = jax.jit(lambda g, s: D.ef_round_sharded(
                 efc, g, s, None, mesh, gspecs, sspecs))(grads_t, st)
         np.testing.assert_allclose(np.asarray(g_sm["w"]),
@@ -43,6 +43,20 @@ SCRIPT = textwrap.dedent("""
             np.asarray(st_sm["clients"]["g"]["w"]),
             np.asarray(st_ref["clients"]["g"]["w"]), rtol=1e-5)
         print(f"carrier={carrier} OK")
+
+    # wire_is_msg=False on the sharded dense plan: the server must receive the
+    # method's MESSAGE (γ·c for Abs), not the raw compressed tensor c
+    m_abs = ef.EF21SGDMAbs(compressor=C.HardThreshold(lam=1e-3), eta=0.3,
+                           gamma=0.1)
+    efc = D.EFConfig(method=m_abs, carrier="dense", data_axes=("data",))
+    st = D.init_ef_state(efc, params, dp, init_grads=grads_t)
+    g_ref, _ = D.ef_round(efc, grads_t, st, None)
+    with mesh_lib.mesh_context(mesh):
+        g_sm, _ = jax.jit(lambda g, s: D.ef_round_sharded(
+            efc, g, s, None, mesh, gspecs, sspecs))(grads_t, st)
+    np.testing.assert_allclose(np.asarray(g_sm["w"]), np.asarray(g_ref["w"]),
+                               rtol=1e-5)
+    print("abs-method message aggregation OK")
     print("MULTIDEVICE_OK")
 """)
 
