@@ -59,6 +59,44 @@ def _train_step_compare(out: dict) -> None:
             lambda t: one(params, os_, es, t), 0, iters=3)
 
 
+def _quantize_bench(out: dict, x) -> None:
+    """Wire-codec wall time: Pallas block-quantize/dequantize (interpret on
+    CPU) vs the jit'd jnp oracle the vmap runtimes execute."""
+    d = x.size
+    nb = d // 1024
+    for bits in (8, 4):
+        out[f"quantize{bits}_pallas_interp_us"] = _bench(
+            lambda t, b=bits: ops.block_quantize(t, block=1024, bits=b),
+            x, iters=2)
+        out[f"quantize{bits}_ref_us"] = _bench(
+            jax.jit(lambda t, b=bits: ref.block_quantize_ref(
+                t.reshape(nb, 1024), b)), x)
+        q, s = ops.block_quantize(x, block=1024, bits=bits)
+        out[f"dequantize{bits}_pallas_interp_us"] = _bench(
+            lambda a, b, bb=bits: ops.block_dequantize(
+                a, b, d=d, block=1024, bits=bb), q, s, iters=2)
+        out[f"dequantize{bits}_ref_us"] = _bench(
+            jax.jit(lambda a, b, bb=bits: ref.block_dequantize_ref(
+                a, b, bits=bb, cols=1024)), q, s)
+
+
+def _wire_savings(out: dict) -> None:
+    """Honest per-client wire words of one d-dim EF message per carrier at
+    equal K (core/carriers.py::Carrier.wire_words): the x-axis the paper's
+    per-bit plots use, and the collective-bytes lever --carrier buys."""
+    from repro.core import carriers as carrier_lib
+    from repro.core import compressors as C
+
+    d = 1 << 20
+    btk = C.BlockTopK(block=1024, k_per_block=16)
+    for name in ("dense", "sparse", "quant8", "quant4"):
+        out[f"wire_words_{name}"] = carrier_lib.make(name).wire_words(btk, d)
+    out["wire_savings_quant8_vs_sparse"] = (
+        out["wire_words_sparse"] / out["wire_words_quant8"])
+    out["wire_savings_quant4_vs_sparse"] = (
+        out["wire_words_sparse"] / out["wire_words_quant4"])
+
+
 def run() -> dict:
     rng = np.random.RandomState(0)
     out = {}
@@ -87,6 +125,8 @@ def run() -> dict:
         jax.jit(lambda a, b, c: ref.ef21_sgdm_update_ref(
             a, b, c, eta=0.1, block=1024, k=16)), g, vv, gg)
 
+    _quantize_bench(out, x)
+    _wire_savings(out)
     _train_step_compare(out)
 
     save_json("kernel_bench", out)
@@ -94,7 +134,9 @@ def run() -> dict:
             f"topk_ref_us={out['block_topk_ref_us']:.0f};"
             f"ef_ref_us={out['ef_update_ref_us']:.0f};"
             f"step_dense_us={out['train_step_dense_us']:.0f};"
-            f"step_fused_us={out['train_step_fused_us']:.0f}")
+            f"step_fused_us={out['train_step_fused_us']:.0f};"
+            f"wire_q8_x={out['wire_savings_quant8_vs_sparse']:.1f};"
+            f"wire_q4_x={out['wire_savings_quant4_vs_sparse']:.1f}")
     return out
 
 

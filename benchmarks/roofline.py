@@ -66,6 +66,31 @@ def ef_update_memory_terms(rec: Dict) -> Optional[Dict]:
     }
 
 
+def ef_wire_terms(rec: Dict) -> Optional[Dict]:
+    """Analytic per-carrier EF-sync wire term for a train record: seconds to
+    put one client's message on the links, for the default production
+    compressor (BlockTopK block=1024, ratio=1%). ``Carrier.wire_words`` is
+    the honest fractional count (values + indices + scales; a 4-bit mantissa
+    is 1/8 word of 4 bytes) — this is the term the sparse/quant carriers
+    attack, exactly as the fused carrier attacks the memory term."""
+    from repro.core import carriers as carrier_lib
+    from repro.core import compressors as comp_lib
+    from repro.launch import mesh as mesh_lib
+    shape = cb.INPUT_SHAPES[rec["shape"]]
+    if shape.kind != "train":
+        return None
+    cfg = cb.get(rec["arch"])
+    d_per_dev = cfg.active_param_count() / mesh_lib.PROD_MODEL
+    btk = comp_lib.BlockTopK(block=1024, ratio=0.01)
+    word = 4.0
+    return {
+        f"ef_wire_{name}_s":
+            carrier_lib.make(name).wire_words(btk, int(d_per_dev))
+            * word / LINK_BW
+        for name in ("dense", "sparse", "quant8", "quant4")
+    }
+
+
 def model_flops_per_device(rec: Dict) -> float:
     cfg = cb.get(rec["arch"])
     shape = cb.INPUT_SHAPES[rec["shape"]]
@@ -99,8 +124,11 @@ def analyze_record(rec: Dict) -> Optional[Dict]:
                    "kernels/ef_update.py), bf16 EF state, ZeRO state "
                    "sharding (--state-sharding zero)"),
         "collective": ("switch the EF sync to the sparse (values,indices) "
-                       "carrier (--carrier sparse); pod-granularity clients "
-                       "put the compressed bytes on the slow inter-pod links"),
+                       "carrier (--carrier sparse) or the block-quantized "
+                       "wire (--carrier quant8/quant4 — int8/uint4 mantissas "
+                       "cut the value words another 4–8×); pod-granularity "
+                       "clients put the compressed bytes on the slow "
+                       "inter-pod links"),
     }[dominant]
     row = {
         "arch": rec["arch"], "shape": rec["shape"], "tag": rec.get("tag", ""),
@@ -117,13 +145,17 @@ def analyze_record(rec: Dict) -> Optional[Dict]:
     ef_terms = ef_update_memory_terms(rec)
     if ef_terms:
         row.update(ef_terms)
+    wire_terms = ef_wire_terms(rec)
+    if wire_terms:
+        row.update(wire_terms)
     return row
 
 
 def to_markdown(rows: List[Dict]) -> str:
     hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
-           "MODEL/HLO | temp GiB | fits 16G | EF upd s unfused→fused |\n|"
-           + "---|" * 10 + "\n")
+           "MODEL/HLO | temp GiB | fits 16G | EF upd s unfused→fused | "
+           "EF wire s sparse→q8→q4 |\n|"
+           + "---|" * 11 + "\n")
     lines = []
     for r in rows:
         if "ef_mem_unfused_s" in r:
@@ -131,12 +163,19 @@ def to_markdown(rows: List[Dict]) -> str:
                   f"({r['ef_mem_unfused_s'] / r['ef_mem_fused_s']:.1f}×)")
         else:
             ef = "—"
+        if "ef_wire_sparse_s" in r:
+            wire = (f"{r['ef_wire_sparse_s']:.2e} → "
+                    f"{r['ef_wire_quant8_s']:.2e} → "
+                    f"{r['ef_wire_quant4_s']:.2e} "
+                    f"({r['ef_wire_sparse_s'] / r['ef_wire_quant4_s']:.1f}×)")
+        else:
+            wire = "—"
         lines.append(
             f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
             f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
             f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
             f"{r['temp_gib']:.1f} | {'✓' if r['fits_hbm16'] else '✗'} | "
-            f"{ef} |")
+            f"{ef} | {wire} |")
     return hdr + "\n".join(lines) + "\n"
 
 

@@ -8,7 +8,7 @@ owns how c travels, every runtime (the vmap simulator in core/simulate.py, the
 vmap runtime ``ef_round``, and the shard_map runtime ``ef_round_sharded`` in
 core/distributed.py) dispatches through it, and methods never see the wire.
 
-Three carriers:
+Five carriers:
 
   DenseCarrier        paper-faithful: c is shipped as a dense d-word tensor and
                       the mean lowers to an all-reduce (lax.pmean on the mesh,
@@ -26,6 +26,18 @@ Three carriers:
                       roofline term of the client update). Falls back to the
                       Pallas interpreter off-TPU, and to the unfused dense plan
                       for methods/compressors the kernel does not cover.
+  QuantCarrier        block-quantized wire (kernels/quantize.py +
+                      kernels/ref.py oracles): per-block absmax scale + int8
+                      (``quant8``) or packed-uint4 (``quant4``) mantissas, for
+                      both dense payloads (quantized C(δ)) and sparse-block
+                      payloads (quantized TopK values + block-local indices).
+                      EF21's contraction argument absorbs the extra bounded
+                      wire distortion into the residual (``local_c`` is the
+                      decode of the wire, so quantization error is re-sent in
+                      later rounds), cutting wire words another 4–8× on top of
+                      sparsification. Aggregation always dequantizes BEFORE
+                      the collective arithmetic: summing int8 mantissas across
+                      blocks with different scales is not associative.
 
 Execution plans — a runtime asks ``carrier.plan(method, eta)`` and gets:
 
@@ -35,6 +47,11 @@ Execution plans — a runtime asks ``carrier.plan(method, eta)`` and gets:
            then post_compress (message must equal the wire, method.wire_is_msg);
   'fused'  call ``carrier.fused_update`` which replaces the entire three-phase
            chain with the fused kernel; aggregate the dense c it returns.
+
+``plan_with_reason`` additionally returns WHY a carrier degraded to the
+always-correct dense plan (empty reason = the native plan runs). Launch
+surfaces print it, so a misconfigured run no longer looks identical to a
+working one in logs.
 
 Aggregation runs in one of two contexts, selected by keyword:
 
@@ -70,6 +87,47 @@ def axis_size(axis_name) -> jax.Array:
     return jax.lax.psum(1, axis_name)
 
 
+def sparse_geom(comp, d: int) -> Tuple[int, int, int]:
+    """(nb, block, kb) geometry of the fixed-size TopK-family wire for a flat
+    (d,) leaf. Plain TopK = one block spanning the leaf (exact global TopK);
+    shared by the sparse and quantized carriers."""
+    if isinstance(comp, comp_lib.BlockTopK):
+        block, kb = comp.block, comp._kb()
+    elif isinstance(comp, comp_lib.TopK):
+        block, kb = d, comp._k(d)
+    else:
+        raise ValueError(
+            f"no fixed-size sparse wire for {type(comp).__name__}")
+    nb = -(-d // block)
+    return nb, block, kb
+
+
+def sparse_select(comp, delta: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """The TopK-family wire selection shared by every carrier that ships it:
+    pad to whole blocks, per-block top-|·|-k. Returns (vals, idx), both
+    (nb, kb), idx block-LOCAL and sorted by magnitude rank. One
+    implementation so tie-breaking/padding can never diverge between the
+    sparse and quantized wires."""
+    nb, block, kb = sparse_geom(comp, delta.size)
+    xb = jnp.pad(delta, (0, nb * block - delta.size)).reshape(nb, block)
+    _, idx = jax.lax.top_k(jnp.abs(xb), kb)
+    vals = jnp.take_along_axis(xb, idx, axis=1)
+    return vals, idx
+
+
+def scatter_blocks(vals: jax.Array, idx: jax.Array, *, nb: int, block: int,
+                   d: int, dtype) -> jax.Array:
+    """Scatter one client's (nb, kb) block-wire values back to a flat (d,)
+    tensor — the shared decode of the block-sparse wires. ``set`` semantics:
+    indices are unique within one wire; cross-client aggregation must
+    scatter-ADD instead (see the aggregate methods)."""
+    rows = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32)[:, None],
+                            idx.shape)
+    buf = jnp.zeros((nb, block), dtype)
+    buf = buf.at[rows, idx.astype(jnp.int32)].set(vals)
+    return buf.reshape(-1)[:d]
+
+
 @dataclasses.dataclass(frozen=True)
 class Carrier:
     """Base carrier. Frozen dataclass → hashable, usable inside jit statics."""
@@ -77,11 +135,19 @@ class Carrier:
     name: str = "abstract"
 
     # -- plan selection ------------------------------------------------------
+    def plan_with_reason(self, method, eta=None) -> Tuple[str, str]:
+        """(plan, reason): plan is 'dense' | 'wire' | 'fused'. The reason is
+        the empty string when the carrier's native plan runs, and a
+        human-readable explanation whenever it degraded to 'dense' — runtimes
+        stay silent, but launch surfaces print it so a degraded configuration
+        is visible in logs."""
+        return "dense", "abstract base carrier has no wire format"
+
     def plan(self, method, eta=None) -> str:
         """'dense' | 'wire' | 'fused' — how a runtime should execute one round
         of ``method``. Carriers must degrade to 'dense' (always correct) when
         they cannot ship this method's messages."""
-        return "dense"
+        return self.plan_with_reason(method, eta)[0]
 
     # -- per-client wire API (flat (d,) leaves) ------------------------------
     def encode(self, comp: comp_lib.Compressor, delta: jax.Array,
@@ -89,11 +155,27 @@ class Carrier:
         """delta: flat (d,). Returns the wire representation of C(delta)."""
         raise NotImplementedError
 
+    def encode_local(self, comp: comp_lib.Compressor, delta: jax.Array,
+                     rng: Optional[jax.Array] = None) -> Wire:
+        """``encode`` for the client-local (shard_map, unbatched) context —
+        carriers with a Pallas fast path override this (the batched runtimes
+        keep the pure-jnp ``encode`` so no vmap-of-pallas_call is emitted).
+        Must be bit-compatible with ``encode``."""
+        return self.encode(comp, delta, rng)
+
+    def decode(self, comp: comp_lib.Compressor, wire: Wire, *, d: int,
+               dtype) -> jax.Array:
+        """The dense decode of one client's wire. ``local_c`` is DEFINED as
+        this decode (not an independent recomputation of C(δ)): client state
+        and the server aggregate must agree on exactly what was shipped, or
+        error feedback would never re-send mass lost to ties/quantization."""
+        raise NotImplementedError
+
     def local_c(self, comp: comp_lib.Compressor, delta: jax.Array,
                 wire: Wire) -> jax.Array:
         """The dense C(delta) the client keeps locally for its gᵢ update —
         never transmitted. Returns flat (d,)."""
-        raise NotImplementedError
+        return self.decode(comp, wire, d=delta.size, dtype=delta.dtype)
 
     def aggregate(self, comp: comp_lib.Compressor, wire: Wire, *, d: int,
                   dtype, dp: Optional[int] = None,
@@ -126,10 +208,13 @@ class DenseCarrier(Carrier):
 
     name: str = "dense"
 
+    def plan_with_reason(self, method, eta=None):
+        return "dense", ""          # dense IS this carrier's native wire
+
     def encode(self, comp, delta, rng=None):
         return comp(delta, rng)
 
-    def local_c(self, comp, delta, wire):
+    def decode(self, comp, wire, *, d, dtype):
         return wire
 
     def aggregate(self, comp, wire, *, d, dtype, dp=None, axes=None):
@@ -157,10 +242,16 @@ class SparseBlockCarrier(Carrier):
 
     name: str = "sparse"
 
-    def plan(self, method, eta=None) -> str:
-        if method.wire_is_msg and self.supports(method.compressor):
-            return "wire"
-        return "dense"
+    def plan_with_reason(self, method, eta=None):
+        if not method.wire_is_msg:
+            return "dense", (
+                f"method {method.name!r} transmits a transform of c "
+                "(wire_is_msg=False); a non-dense wire cannot ship it")
+        if not self.supports(method.compressor):
+            return "dense", (
+                f"compressor {type(method.compressor).__name__} has no "
+                "deterministic fixed-size (values, indices) wire")
+        return "wire", ""
 
     def supports(self, comp) -> bool:
         # has_sparse_carrier is the compressor's opt-in; the isinstance check
@@ -171,40 +262,22 @@ class SparseBlockCarrier(Carrier):
                 and isinstance(comp, (comp_lib.TopK, comp_lib.BlockTopK)))
 
     def _geom(self, comp, d: int) -> Tuple[int, int, int]:
-        """(nb, block, kb). Plain TopK = one block spanning the leaf."""
-        if isinstance(comp, comp_lib.BlockTopK):
-            block, kb = comp.block, comp._kb()
-        elif isinstance(comp, comp_lib.TopK):
-            block, kb = d, comp._k(d)
-        else:
-            raise ValueError(
-                f"sparse carrier cannot ship {type(comp).__name__}")
-        nb = -(-d // block)
-        return nb, block, kb
-
-    @staticmethod
-    def _blocked(x: jax.Array, nb: int, block: int) -> jax.Array:
-        return jnp.pad(x, (0, nb * block - x.size)).reshape(nb, block)
+        return sparse_geom(comp, d)
 
     def encode(self, comp, delta, rng=None):
-        nb, block, kb = self._geom(comp, delta.size)
-        xb = self._blocked(delta, nb, block)
-        _, idx = jax.lax.top_k(jnp.abs(xb), kb)          # (nb, kb), sorted
-        vals = jnp.take_along_axis(xb, idx, axis=1)
+        vals, idx = sparse_select(comp, delta)           # (nb, kb), sorted
         return vals, idx.astype(jnp.int32)               # block-LOCAL indices
 
-    def local_c(self, comp, delta, wire):
+    def decode(self, comp, wire, *, d, dtype):
         # exact decode of the wire (scatter of the shipped values), NOT a
         # threshold mask: the client's gᵢ update must see precisely what the
         # server aggregated, or a tie at the kb-th rank would leave mass the
         # client believes transmitted but the server never received — error
         # feedback would then never re-send it
         vals, idx = wire
-        nb, block, _ = self._geom(comp, delta.size)
-        rows = jnp.broadcast_to(
-            jnp.arange(nb, dtype=jnp.int32)[:, None], idx.shape)
-        buf = jnp.zeros((nb, block), delta.dtype).at[rows, idx].set(vals)
-        return buf.reshape(-1)[: delta.size]
+        nb, block, _ = self._geom(comp, d)
+        return scatter_blocks(vals, idx, nb=nb, block=block, d=d,
+                              dtype=dtype)
 
     def aggregate(self, comp, wire, *, d, dtype, dp=None, axes=None):
         vals, idx = wire
@@ -255,12 +328,19 @@ class FusedPallasCarrier(DenseCarrier):
             return self.interpret
         return jax.default_backend() != "tpu"
 
-    def plan(self, method, eta=None) -> str:
-        static_eta = eta is None or isinstance(eta, (int, float))
-        if (method.name in ("ef21_sgdm", "ef21_sgd") and static_eta
-                and isinstance(method.compressor, comp_lib.BlockTopK)):
-            return "fused"
-        return "dense"
+    def plan_with_reason(self, method, eta=None):
+        if method.name not in ("ef21_sgdm", "ef21_sgd"):
+            return "dense", (
+                f"the fused kernel implements the EF21-SGD(M) client chain "
+                f"only, not {method.name!r}")
+        if not isinstance(method.compressor, comp_lib.BlockTopK):
+            return "dense", (
+                f"the fused kernel compresses with BlockTopK only, not "
+                f"{type(method.compressor).__name__}")
+        if not (eta is None or isinstance(eta, (int, float))):
+            return "dense", ("momentum η is traced (time-varying schedule); "
+                             "the kernel needs a static η to bake in")
+        return "fused", ""
 
     def fused_update(self, method, grads, state, *, eta=None,
                      batched: bool = False):
@@ -322,6 +402,186 @@ class FusedPallasCarrier(DenseCarrier):
 
 
 # ---------------------------------------------------------------------------
+# quantized wires
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantCarrier(Carrier):
+    """Block-quantized wire: per-block absmax scale (1 f32 word) + ``bits``-bit
+    mantissas (int8, or two uint4 packed per byte), in one of two payloads:
+
+      sparse-block  for the TopK family (the sparse carrier's geometry): the
+                    kb selected values of each block are quantized against one
+                    shared scale and travel with their block-local indices
+                    (int16 when the block fits, else int32) —
+                    nb·(1 + kb·(bits/32 + idx_words)) words/client.
+      dense         for every other deterministic compressor: C(δ) itself is
+                    quantized in ``qblock``-sized blocks —
+                    nbq·(1 + qblock·bits/32) words/client.
+
+    ``local_c`` is the decode of the wire (base-class invariant), so EF21's
+    residual absorbs the quantization error and re-sends it in later rounds —
+    the same contraction argument that lets Fatkhullin et al. treat C as a
+    black box covers the extra bounded wire distortion (``composed_err_factor``
+    gives the predicted Definition-1 constant of decode∘quantize∘C).
+
+    Aggregation ALWAYS dequantizes before the collective arithmetic: int8
+    mantissas under different per-block scales do not form an associative
+    monoid, so an int8 all-reduce would be wrong. On the shard_map runtime the
+    sparse payload all-gathers the still-quantized wire (the savings are on
+    the links) and dequantizes locally; the dense payload dequantizes locally
+    and psums f32 (its collective operand is dense — the wire savings of the
+    dense payload are client→server bytes, not all-reduce bytes).
+
+    The unbatched (shard_map) encode runs the Pallas codec
+    (kernels/quantize.py, interpreter off-TPU); the vmap runtimes run the
+    bit-compatible pure-jnp oracle (kernels/ref.py) so no vmap-of-pallas_call
+    is ever emitted.
+    """
+
+    name: str = "quant8"
+    bits: int = 8
+    qblock: int = 256          # dense-payload quantization block (even)
+
+    # -- plan ---------------------------------------------------------------
+    def plan_with_reason(self, method, eta=None):
+        if not method.wire_is_msg:
+            return "dense", (
+                f"method {method.name!r} transmits a transform of c "
+                "(wire_is_msg=False); a non-dense wire cannot ship it")
+        if method.compressor.needs_rng:
+            return "dense", (
+                f"compressor {type(method.compressor).__name__} draws "
+                "randomness inside encode; the quantized wire ships "
+                "deterministic compressors only")
+        return "wire", ""
+
+    def _sparse_ok(self, comp) -> bool:
+        return (comp.has_sparse_carrier
+                and isinstance(comp, (comp_lib.TopK, comp_lib.BlockTopK)))
+
+    @staticmethod
+    def _idx_dtype(block: int):
+        # block-LOCAL indices: int16 halves the index words whenever the
+        # block fits (the common case); the single-block TopK wire on a large
+        # leaf falls back to int32
+        return jnp.int16 if block <= 2 ** 15 - 1 else jnp.int32
+
+    # -- wire ---------------------------------------------------------------
+    def encode(self, comp, delta, rng=None):
+        from repro.kernels import ref as kref
+        if self._sparse_ok(comp):
+            _, block, _ = sparse_geom(comp, delta.size)
+            vals, idx = sparse_select(comp, delta)
+            q, scales = kref.block_quantize_ref(vals, self.bits)
+            return q, scales, idx.astype(self._idx_dtype(block))
+        c = comp(delta, rng).astype(jnp.float32)
+        nbq = -(-delta.size // self.qblock)
+        cb = jnp.pad(c, (0, nbq * self.qblock - c.size)).reshape(nbq, self.qblock)
+        q, scales = kref.block_quantize_ref(cb, self.bits)
+        return q, scales
+
+    def encode_local(self, comp, delta, rng=None):
+        # client-local (shard_map) context: the Pallas codec quantizes the
+        # dense payload in one kernel pass (interpreter off-TPU); the sparse
+        # payload quantizes (nb, kb) value rows — lane-unfriendly tiles, so it
+        # stays on the jnp oracle everywhere
+        if self._sparse_ok(comp):
+            return self.encode(comp, delta, rng)
+        from repro.kernels import quantize as qz
+        c = comp(delta, rng).astype(jnp.float32)
+        interpret = jax.default_backend() != "tpu"
+        return qz.block_quantize(c, block=self.qblock, bits=self.bits,
+                                 interpret=interpret)
+
+    def decode(self, comp, wire, *, d, dtype):
+        # payload dispatch on the same predicate encode used — never on the
+        # wire's shape, so a future layout change fails loudly instead of
+        # being sniffed into the wrong branch
+        from repro.kernels import ref as kref
+        if self._sparse_ok(comp):                        # sparse payload
+            q, scales, idx = wire
+            nb, block, kb = sparse_geom(comp, d)
+            vals = kref.block_dequantize_ref(q, scales, bits=self.bits,
+                                             cols=kb)
+            return scatter_blocks(vals, idx, nb=nb, block=block, d=d,
+                                  dtype=jnp.float32).astype(dtype)
+        q, scales = wire                                 # dense payload
+        vals = kref.block_dequantize_ref(q, scales, bits=self.bits,
+                                         cols=self.qblock)
+        return vals.reshape(-1)[:d].astype(dtype)
+
+    def aggregate(self, comp, wire, *, d, dtype, dp=None, axes=None):
+        from repro.kernels import ref as kref
+        if self._sparse_ok(comp):                        # sparse payload
+            q, scales, idx = wire
+            nb, block, kb = sparse_geom(comp, d)
+            if axes is not None:
+                n = 1
+                for a in axes:                           # gather the QUANTIZED
+                    n = n * axis_size(a)                 # wire — savings live
+                    q = jax.lax.all_gather(q, a)         # on the links
+                    scales = jax.lax.all_gather(scales, a)
+                    idx = jax.lax.all_gather(idx, a)
+                q = q.reshape(-1, nb, q.shape[-1])
+                scales = scales.reshape(-1, nb)
+                idx = idx.reshape(-1, nb, kb)
+            else:
+                n = dp                                   # (dp, nb, ·) layout
+            vals = kref.block_dequantize_ref(
+                q.reshape(-1, q.shape[-1]), scales.reshape(-1),
+                bits=self.bits, cols=kb).reshape(-1, nb, kb)
+            rows = jnp.broadcast_to(
+                jnp.arange(nb, dtype=jnp.int32)[None, :, None], idx.shape)
+            buf = jnp.zeros((nb, block), jnp.float32)
+            buf = buf.at[rows, idx.astype(jnp.int32)].add(vals) / n
+            return buf.reshape(-1)[:d].astype(dtype)
+        if axes is not None:                             # dense payload:
+            deq = self.decode(comp, wire, d=d, dtype=jnp.float32)
+            return jax.lax.pmean(deq, axes).astype(dtype)  # dequant THEN psum
+        q, scales = wire                                 # (dp, nbq, ·) layout
+        dp_, nbq = scales.shape
+        vals = kref.block_dequantize_ref(
+            q.reshape(dp_ * nbq, q.shape[-1]), scales.reshape(-1),
+            bits=self.bits, cols=self.qblock)
+        return vals.reshape(dp_, -1)[:, :d].mean(0).astype(dtype)
+
+    # -- accounting ---------------------------------------------------------
+    def wire_words(self, comp, d):
+        frac = self.bits / 32.0                          # 4-bit = 1/8 word
+        if self._sparse_ok(comp):
+            nb, block, kb = sparse_geom(comp, d)
+            idx_words = 0.5 if block <= 2 ** 15 - 1 else 1.0
+            return nb * (1.0 + kb * (frac + idx_words))
+        nbq = -(-d // self.qblock)
+        return nbq * (1.0 + self.qblock * frac)
+
+    def quant_eps(self, comp, d: int) -> float:
+        """Relative per-message quantization error bound: with B elements per
+        scale, ‖Q(x) − x‖² ≤ Σ_b B·(absmax_b/2qmax)² ≤ B/(4·qmax²)·‖x‖²."""
+        qmax = 2 ** (self.bits - 1) - 1
+        if self._sparse_ok(comp):
+            _, _, kb = sparse_geom(comp, d)
+            per_scale = kb
+        else:
+            per_scale = min(self.qblock, d)
+        return per_scale / (4.0 * qmax * qmax)
+
+    def composed_err_factor(self, comp, d: int) -> float:
+        """Definition-1 constant of the composed compressor decode∘Q∘C:
+        ‖QC(x) − x‖ ≤ ‖QC(x) − C(x)‖ + ‖C(x) − x‖ ≤ (√ε + √(1−α))·‖x‖
+        (C is a norm-contraction, so ‖C(x)‖ ≤ ‖x‖). Returns (√(1−α) + √ε)²."""
+        root = ((1.0 - comp.alpha(d)) ** 0.5
+                + self.quant_eps(comp, d) ** 0.5)
+        return root * root
+
+    def composed_alpha(self, comp, d: int) -> float:
+        """Predicted α of the composed compressor (0 when the bound is
+        vacuous — the wire still works, EF just loses the rate guarantee)."""
+        return max(0.0, 1.0 - self.composed_err_factor(comp, d))
+
+
+# ---------------------------------------------------------------------------
 # shared per-leaf dispatch for the 'wire' plan (used by every runtime)
 # ---------------------------------------------------------------------------
 
@@ -351,7 +611,7 @@ def wire_round_local(carrier: Carrier, comp, deltas: PyTree,
     c_leaves, agg_leaves = [], []
     for leaf in dleaves:
         flat = leaf.reshape(-1)
-        wire = carrier.encode(comp, flat, rng)
+        wire = carrier.encode_local(comp, flat, rng)
         c_leaves.append(carrier.local_c(comp, flat, wire).reshape(leaf.shape))
         agg_leaves.append(carrier.aggregate(
             comp, wire, d=leaf.size, dtype=leaf.dtype, axes=axes)
@@ -364,10 +624,20 @@ def wire_round_local(carrier: Carrier, comp, deltas: PyTree,
 # registry
 # ---------------------------------------------------------------------------
 
+def _quant8() -> "QuantCarrier":
+    return QuantCarrier(name="quant8", bits=8)
+
+
+def _quant4() -> "QuantCarrier":
+    return QuantCarrier(name="quant4", bits=4)
+
+
 REGISTRY = {
     "dense": DenseCarrier,
     "sparse": SparseBlockCarrier,
     "fused": FusedPallasCarrier,
+    "quant8": _quant8,
+    "quant4": _quant4,
 }
 
 

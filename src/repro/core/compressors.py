@@ -47,6 +47,12 @@ class Compressor:
     def has_sparse_carrier(self) -> bool:
         return False
 
+    @property
+    def needs_rng(self) -> bool:
+        """True iff ``__call__`` draws randomness — such compressors cannot
+        ride deterministic wire formats (core/carriers.py degrades to dense)."""
+        return False
+
 
 @dataclasses.dataclass(frozen=True)
 class Identity(Compressor):
@@ -114,6 +120,10 @@ class RandK(Compressor):
 
     @property
     def has_sparse_carrier(self) -> bool:
+        return True
+
+    @property
+    def needs_rng(self) -> bool:
         return True
 
     def sparse(self, x: Array, rng=None) -> Tuple[Array, Array]:
@@ -213,6 +223,10 @@ class NaturalCompression(Compressor):
     def alpha(self, d: int) -> float:
         return 7.0 / 8.0
 
+    @property
+    def needs_rng(self) -> bool:
+        return True
+
     def __call__(self, x: Array, rng=None) -> Array:
         assert rng is not None, "NaturalCompression requires a PRNG key"
         ax = jnp.abs(x)
@@ -249,6 +263,44 @@ class Rank1(Compressor):
         return approx.reshape(x.shape)
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockQuant(Compressor):
+    """Per-block absmax quantization as a standalone compressor:
+    C(x) = dequantize(quantize(x)) with ``bits``-bit mantissas and one f32
+    scale per ``block`` elements — the dense payload of the quantized wire
+    carriers (core/carriers.py::QuantCarrier), exposed so the *naive*
+    no-error-feedback quantized baseline is expressible (ship Q(∇f) directly).
+
+    Deterministic round-to-nearest, hence BIASED. Contractive (Definition 1)
+    with α = 1 − block/(4·qmax²) when that is positive: the per-block error is
+    ≤ block·(absmax/2qmax)² against ‖x_block‖² ≥ absmax². For 4-bit mantissas
+    at block ≥ 4·49 the bound is vacuous (α = 0) — exactly the regime where
+    naive quantized compression stalls and EF21-SGDM still converges
+    (tests/test_paper_claims.py)."""
+
+    bits: int = 8
+    block: int = 256
+
+    def alpha(self, d: int) -> float:
+        qmax = 2 ** (self.bits - 1) - 1
+        return max(0.0, 1.0 - min(self.block, d) / (4.0 * qmax * qmax))
+
+    @property
+    def is_contractive(self) -> bool:
+        return self.alpha(self.block) > 0.0
+
+    def __call__(self, x: Array, rng=None) -> Array:
+        from repro.kernels import ref as kref
+        d = x.size
+        nb = -(-d // self.block)
+        xb = jnp.pad(x.reshape(-1).astype(jnp.float32),
+                     (0, nb * self.block - d)).reshape(nb, self.block)
+        q, scales = kref.block_quantize_ref(xb, self.bits)
+        deq = kref.block_dequantize_ref(q, scales, bits=self.bits,
+                                        cols=self.block)
+        return deq.reshape(-1)[:d].reshape(x.shape).astype(x.dtype)
+
+
 REGISTRY = {
     "identity": Identity,
     "topk": TopK,
@@ -257,6 +309,7 @@ REGISTRY = {
     "hard_threshold": HardThreshold,
     "natural": NaturalCompression,
     "rank1": Rank1,
+    "block_quant": BlockQuant,
 }
 
 

@@ -19,6 +19,13 @@ dispatch the wire format of meanᵢ(cᵢ) through :mod:`repro.core.carriers` —
   'fused'  — dense wire, but the whole EF21-SGD(M) client update runs as ONE
              Pallas HBM pass (kernels/ef_update.py) instead of the unfused
              pre_compress → C(·) → post_compress chain.
+  'quant8' / 'quant4'
+           — block-quantized wire (per-block absmax scale + int8 or packed
+             uint4 mantissas, kernels/quantize.py): sparse-block payloads
+             all-gather the still-quantized (mantissas, scales, indices)
+             arrays; dense payloads dequantize locally before the psum (an
+             int8 all-reduce across differing scales is not associative).
+             EF re-sends the quantization error — local_c is the wire decode.
 """
 from __future__ import annotations
 
@@ -38,7 +45,7 @@ PyTree = Any
 @dataclasses.dataclass(frozen=True)
 class EFConfig:
     method: ef_lib.Method
-    carrier: str = "dense"                 # 'dense' | 'sparse' | 'fused'
+    carrier: str = "dense"     # 'dense'|'sparse'|'fused'|'quant8'|'quant4'
     data_axes: Tuple[str, ...] = ("data",)  # mesh axes forming the client dim
     b_init_scale: bool = True              # Alg 1 line 2: init v⁰=g⁰ to first grads
 

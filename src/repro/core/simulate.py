@@ -6,8 +6,8 @@ a leading axis and stepped by ``vmap`` — a faithful single-host emulation of t
 distributed method that the paper's own experiments use. The production multi-chip
 path lives in core/distributed.py; both share the Method implementations AND the
 wire carrier (core/carriers.py), so what is validated here is what runs on the
-mesh: ``SimConfig.carrier`` selects dense / sparse / fused exactly like
-``EFConfig.carrier`` does on the production path.
+mesh: ``SimConfig.carrier`` selects dense / sparse / fused / quant8 / quant4
+exactly like ``EFConfig.carrier`` does on the production path.
 """
 from __future__ import annotations
 
@@ -34,7 +34,7 @@ class SimConfig:
     b_init: int = 1                 # initial batch size B_init (Alg 1 line 2)
     time_varying: bool = False      # γₜ = γ/√(t+1), ηₜ = η/√(t+1) (App. J / Fig 4)
     record_every: int = 1
-    carrier: str = "dense"          # 'dense' | 'sparse' | 'fused'
+    carrier: str = "dense"     # 'dense'|'sparse'|'fused'|'quant8'|'quant4'
 
 
 def _client_rngs(rng, n):

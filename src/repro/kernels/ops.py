@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ef_update as _ef
 from repro.kernels import flash_attention as _fa
+from repro.kernels import quantize as _qz
 from repro.kernels import topk_compress as _tk
 
 
@@ -39,4 +40,19 @@ def block_topk(x, *, block: int = 1024, k: int = 16) -> jax.Array:
 def ef21_sgdm_update(grad, v, g, *, eta: float, block: int = 1024,
                      k: int = 16) -> Tuple[jax.Array, jax.Array, jax.Array]:
     return _ef.ef21_sgdm_update(grad, v, g, eta=eta, block=block, k=k,
+                                interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bits"))
+def block_quantize(x, *, block: int = 256,
+                   bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Per-block absmax wire quantization → (mantissas, scales)."""
+    return _qz.block_quantize(x, block=block, bits=bits,
+                              interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("d", "block", "bits"))
+def block_dequantize(q, scales, *, d: int, block: int = 256,
+                     bits: int = 8) -> jax.Array:
+    return _qz.block_dequantize(q, scales, d=d, block=block, bits=bits,
                                 interpret=_interpret())

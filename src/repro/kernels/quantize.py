@@ -1,0 +1,104 @@
+"""Block-quantize / dequantize (Pallas TPU) — the wire codec of the quantized
+carriers (core/carriers.py::QuantCarrier).
+
+One grid step quantizes a tile of rows: each row is an independent
+quantization block (per-row absmax scale + int8 or packed-uint4 mantissas).
+Everything is elementwise + a per-row max, so the kernel is purely
+VPU/memory-bound: on TPU it streams the f32 input once and writes mantissas at
+1/4 (int8) or 1/8 (uint4) of the input bytes. Deterministic round-to-nearest —
+bit-identical to the pure-jnp oracle (kernels/ref.py::block_quantize_ref),
+which is what the carriers run under vmap (no vmap-of-pallas_call is ever
+emitted; the unbatched shard_map encode path calls the kernel directly).
+
+Guards (same contract as the oracle): non-finite inputs quantize to exactly 0
+with a finite scale; an all-zero block gets scale 0 and decodes to exact zeros.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)
+    x = jnp.where(jnp.isfinite(x), x, 0.0)
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(x), axis=1) / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe[:, None]), -qmax, qmax)
+    s_ref[...] = scale[:, None]
+    if bits == 8:
+        q_ref[...] = q.astype(jnp.int8)
+    else:
+        u = (q + 8.0).astype(jnp.uint8).reshape(q.shape[0], -1, 2)
+        q_ref[...] = (u[:, :, 0] << 4) | u[:, :, 1]
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, bits: int):
+    scale = s_ref[...][:, 0]
+    if bits == 8:
+        vals = q_ref[...].astype(jnp.float32)
+    else:
+        p = q_ref[...]
+        hi = (p >> 4).astype(jnp.float32) - 8.0
+        lo = (p & 0xF).astype(jnp.float32) - 8.0
+        vals = jnp.stack([hi, lo], axis=-1).reshape(p.shape[0], -1)
+    o_ref[...] = (vals * scale[:, None]).astype(o_ref.dtype)
+
+
+def _row_tiles(nb: int, rows_per_tile: int) -> int:
+    rt = min(rows_per_tile, nb)
+    while nb % rt:
+        rt -= 1
+    return rt
+
+
+def block_quantize(x: jax.Array, *, block: int = 256, bits: int = 8,
+                   rows_per_tile: int = 8, interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """x: any shape, flattened and zero-padded to whole blocks. Returns
+    (q, scales): q int8 (nb, block) for bits=8, uint8 (nb, block//2) packed
+    uint4 pairs for bits=4 (block must be even), scales f32 (nb,)."""
+    assert bits in (8, 4), bits
+    assert bits == 8 or block % 2 == 0, "uint4 packing needs an even block"
+    d = x.size
+    nb = -(-d // block)
+    xb = jnp.pad(x.reshape(-1), (0, nb * block - d)).reshape(nb, block)
+    rt = _row_tiles(nb, rows_per_tile)
+    qcols = block if bits == 8 else block // 2
+    qdtype = jnp.int8 if bits == 8 else jnp.uint8
+
+    q, scales = pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits),
+        grid=(nb // rt,),
+        in_specs=[pl.BlockSpec((rt, block), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((rt, qcols), lambda i: (i, 0)),
+                   pl.BlockSpec((rt, 1), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((nb, qcols), qdtype),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)),
+        interpret=interpret,
+    )(xb)
+    return q, scales.reshape(-1)
+
+
+def block_dequantize(q: jax.Array, scales: jax.Array, *, d: int,
+                     block: int = 256, bits: int = 8, rows_per_tile: int = 8,
+                     interpret: bool = False) -> jax.Array:
+    """Inverse of :func:`block_quantize`; returns the flat (d,) f32 decode."""
+    assert bits in (8, 4), bits
+    nb = q.shape[0]
+    rt = _row_tiles(nb, rows_per_tile)
+    out = pl.pallas_call(
+        functools.partial(_dequant_kernel, bits=bits),
+        grid=(nb // rt,),
+        in_specs=[pl.BlockSpec((rt, q.shape[1]), lambda i: (i, 0)),
+                  pl.BlockSpec((rt, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rt, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(q, scales.reshape(-1, 1))
+    return out.reshape(-1)[:d]

@@ -46,3 +46,40 @@ def ef21_sgdm_update_ref(grad: jax.Array, v: jax.Array, g: jax.Array, *,
     v_new = (1.0 - eta) * v + eta * grad
     c = block_topk_ref(v_new - g, block, k)
     return v_new, g + c, c
+
+
+def block_quantize_ref(x: jax.Array, bits: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Per-row absmax quantization of a (rows, cols) array — each row is one
+    quantization block. Symmetric signed grid: scale = absmax/(2^(bits−1)−1),
+    q = round(x/scale) ∈ [−qmax, qmax]. bits=8 stores int8 mantissas; bits=4
+    packs two uint4 mantissas (offset by +8) per uint8 byte, odd cols padded.
+    Non-finite inputs are treated as 0 (the scale stays finite; they decode to
+    exactly 0 — EF then re-sends that mass as ordinary residual).
+    A zero row gets scale 0 and decodes to exact zeros.
+    Returns (q, scales): q int8 (rows, cols) | uint8 (rows, ceil(cols/2)),
+    scales f32 (rows,)."""
+    x = x.astype(jnp.float32)
+    x = jnp.where(jnp.isfinite(x), x, 0.0)
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(x), axis=1) / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe[:, None]), -qmax, qmax)
+    if bits == 8:
+        return q.astype(jnp.int8), scale
+    if q.shape[1] % 2:
+        q = jnp.pad(q, ((0, 0), (0, 1)))
+    u = (q + 8.0).astype(jnp.uint8).reshape(q.shape[0], -1, 2)
+    return (u[:, :, 0] << 4) | u[:, :, 1], scale
+
+
+def block_dequantize_ref(q: jax.Array, scales: jax.Array, *, bits: int,
+                         cols: int) -> jax.Array:
+    """Inverse of :func:`block_quantize_ref`: q·scale per row, f32 (rows, cols)."""
+    if bits == 8:
+        vals = q.astype(jnp.float32)
+    else:
+        hi = (q >> 4).astype(jnp.float32) - 8.0
+        lo = (q & 0xF).astype(jnp.float32) - 8.0
+        vals = jnp.stack([hi, lo], axis=-1).reshape(q.shape[0], -1)[:, :cols]
+    return vals * scales.astype(jnp.float32)[:, None]

@@ -40,14 +40,19 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
     method = ef_lib.make(method_name, **kwargs)
     # the carrier itself is the source of truth for what it can execute; an
     # explicitly requested fused carrier that would silently degrade to the
-    # unfused dense plan is a misconfiguration worth failing fast on
-    if carrier == "fused" and carrier_obj.plan(method, eta) != "fused":
+    # unfused dense plan is a misconfiguration worth failing fast on, and any
+    # other degraded carrier must at least say so in logs
+    exec_plan, reason = carrier_obj.plan_with_reason(method, eta)
+    if carrier == "fused" and exec_plan != "fused":
         raise ValueError(
-            "--carrier fused would silently run the UNFUSED dense plan for "
-            f"method={method_name!r} compressor={compressor_name!r} (the "
-            "fused kernel covers the chains FusedPallasCarrier.plan accepts, "
-            "currently EF21-SGD(M) × block_topk). Pick --carrier dense or "
-            "sparse for this combination.")
+            "--carrier fused would silently run the UNFUSED dense plan: "
+            f"{reason}. Pick --carrier dense or sparse for "
+            f"method={method_name!r} compressor={compressor_name!r}.")
+    if carrier != "dense" and exec_plan == "dense":
+        import warnings
+        warnings.warn(
+            f"--carrier {carrier} degrades to the dense plan: {reason}",
+            stacklevel=2)
     # the EF client axes follow the plan's client granularity (pod clients
     # aggregate over 'pod' only; the within-pod mean happens in the vmapped
     # per-client loss)

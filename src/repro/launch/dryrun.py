@@ -126,7 +126,8 @@ def main() -> None:
     ap.add_argument("--shape", default=None, choices=[*cb.INPUT_SHAPES, None])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--carrier", default="dense", choices=["dense", "sparse"])
+    ap.add_argument("--carrier", default="dense",
+                    choices=["dense", "sparse", "fused", "quant8", "quant4"])
     ap.add_argument("--method", default="ef21_sgdm")
     ap.add_argument("--compressor", default="block_topk")
     ap.add_argument("--ratio", type=float, default=0.01)

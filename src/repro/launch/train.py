@@ -46,10 +46,12 @@ def main() -> None:
     ap.add_argument("--ratio", type=float, default=0.05)
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--carrier", default="dense",
-                    choices=["dense", "sparse", "fused"],
+                    choices=["dense", "sparse", "fused", "quant8", "quant4"],
                     help="wire carrier for the EF sync (core/carriers.py): "
                          "dense all-reduce, sparse (values,indices) "
-                         "all-gather, or the fused Pallas client update")
+                         "all-gather, the fused Pallas client update, or "
+                         "block-quantized wires (int8 / packed-uint4 "
+                         "mantissas + per-block scales)")
     ap.add_argument("--b-init", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -85,6 +87,11 @@ def main() -> None:
     efc = build_lib.default_ef_config(
         mesh, plan, method_name=args.method, compressor_name=args.compressor,
         ratio=args.ratio, eta=args.eta, carrier=args.carrier)
+    from repro.core import carriers as carrier_lib
+    ex_plan, reason = carrier_lib.make(args.carrier).plan_with_reason(
+        efc.method, args.eta)
+    print(f"carrier={args.carrier} plan={ex_plan}"
+          + (f" (degraded: {reason})" if reason else ""))
     opt = opt_lib.make(args.optimizer, lr=args.lr)
     step_fn = jax.jit(dist.make_train_step(loss_fn, efc, opt, n))
 

@@ -1,0 +1,286 @@
+"""Property-based carrier equivalence harness (core/carriers.py).
+
+Carrier correctness was previously asserted on a handful of hand-picked
+shapes; this harness states the invariants as properties and sweeps
+(method × compressor × carrier × shape), including non-block-multiple sizes
+and scalar leaves:
+
+  (a) ``local_c`` IS the decode of the wire, bit-exactly — the EF invariant
+      (client state and server aggregate must agree on what was shipped);
+  (b) ``aggregate`` equals the mean of the per-client wire decodes;
+  (c) quantize round-trip error ≤ absmax/2^(bits−1) per block;
+  (d) the composed compressor decode∘Q∘C still satisfies Definition 1 with
+      the predicted constant (``QuantCarrier.composed_err_factor``);
+  (e) one EF round keeps server and clients consistent: the server increment
+      equals the mean client g-increment for every delta-mode method/carrier.
+
+Each property is a plain checker driven two ways: a deterministic
+parametrized grid that ALWAYS runs (the container has no hypothesis), and a
+hypothesis fuzzer over the same space that engages wherever hypothesis is
+installed (CI, dev machines with requirements-dev.txt).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("carrier", max_examples=10, deadline=None)
+    settings.load_profile("carrier")
+except ImportError:                                   # deterministic grid only
+    HAVE_HYPOTHESIS = False
+
+from repro.core import carriers as carrier_lib
+from repro.core import compressors as C
+from repro.core import distributed as D
+from repro.core import ef
+from repro.kernels import ref as kref
+
+fuzz = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis fuzzing needs hypothesis "
+    "(pip install -r requirements-dev.txt); the deterministic grid ran")
+
+CARRIER_NAMES = sorted(carrier_lib.REGISTRY)
+
+# deterministic compressors that every non-dense wire can ship; the block
+# sizes are small and non-pretty on purpose (the dims below are NOT multiples)
+COMPRESSORS = {
+    "topk": lambda: C.TopK(ratio=0.3),
+    "block_topk": lambda: C.BlockTopK(block=12, k_per_block=5),
+    "identity": lambda: C.Identity(),
+}
+
+# one representative per shape class — scalar leaf, exact single block,
+# non-block-multiple, multi-block (also crossing the quant qblock boundary);
+# the hypothesis fuzzers sweep the full 1..300 range in CI
+DIMS = [1, 12, 50, 257]
+DELTA_METHODS = ["ef21_sgd", "ef21_sgdm"]
+
+
+def _vec(d, seed, rows=None):
+    rng = np.random.RandomState(seed)
+    shape = (d,) if rows is None else (rows, d)
+    return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+
+def _require_wire(carrier_name, comp, unsupported=pytest.skip):
+    """Reject combos whose carrier has no wire for this compressor (the plan
+    degrades to dense and encode is never reached in production — that
+    degradation is itself asserted in tests/test_carriers.py). The grid
+    drivers skip; the fuzzers discard the example (hypothesis.assume)."""
+    car = carrier_lib.make(carrier_name)
+    plan, reason = car.plan_with_reason(ef.EF21SGD(compressor=comp))
+    if plan == "dense" and car.name not in ("dense", "fused"):
+        unsupported(f"{carrier_name} has no wire for this combo: {reason}")
+    return car
+
+
+def _assume_supported(msg):
+    hypothesis.assume(False)
+
+
+# ---------------------------------------------------------------------------
+# (a) local_c == decode(wire), bit-exact
+# ---------------------------------------------------------------------------
+
+def check_local_c_is_wire_decode(carrier_name, comp_name, d, seed,
+                                 unsupported=pytest.skip):
+    comp = COMPRESSORS[comp_name]()
+    car = _require_wire(carrier_name, comp, unsupported)
+    x = _vec(d, seed)
+
+    @jax.jit                       # one compile per case, not one per op
+    def case(x):
+        wire = car.encode(comp, x)
+        return car.local_c(comp, x, wire), car.decode(comp, wire, d=d,
+                                                      dtype=x.dtype)
+
+    c, dec = case(x)
+    np.testing.assert_array_equal(np.asarray(c),
+                                  np.asarray(dec).reshape(c.shape))
+
+
+@pytest.mark.parametrize("carrier_name", CARRIER_NAMES)
+@pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
+@pytest.mark.parametrize("d", DIMS)
+def test_local_c_is_wire_decode_bit_exact(carrier_name, comp_name, d):
+    """(a) what the client keeps equals the decode of what it shipped —
+    bit-exactly, for every carrier (a drifted reimplementation of local_c
+    would silently break error feedback on ties/quantization)."""
+    check_local_c_is_wire_decode(carrier_name, comp_name, d, seed=d)
+
+
+if HAVE_HYPOTHESIS:
+    @fuzz
+    @given(st.sampled_from(CARRIER_NAMES),
+           st.sampled_from(sorted(COMPRESSORS)),
+           st.integers(1, 300), st.integers(0, 10_000))
+    def test_local_c_is_wire_decode_fuzz(carrier_name, comp_name, d, seed):
+        check_local_c_is_wire_decode(carrier_name, comp_name, d, seed,
+                                     unsupported=_assume_supported)
+
+
+# ---------------------------------------------------------------------------
+# (b) aggregate == mean of per-client decodes
+# ---------------------------------------------------------------------------
+
+def check_aggregate_is_mean_of_decodes(carrier_name, comp_name, d, n, seed,
+                                       unsupported=pytest.skip):
+    comp = COMPRESSORS[comp_name]()
+    car = _require_wire(carrier_name, comp, unsupported)
+    xs = _vec(d, seed, rows=n)
+
+    @jax.jit
+    def case(xs):
+        wire = jax.vmap(lambda v: car.encode(comp, v))(xs)
+        agg = car.aggregate(comp, wire, d=d, dtype=xs.dtype, dp=n)
+        decs = jax.vmap(lambda i: car.decode(
+            comp, jax.tree_util.tree_map(lambda a: a[i], wire),
+            d=d, dtype=xs.dtype))(jnp.arange(n))
+        return agg, decs
+
+    agg, decs = case(xs)
+    np.testing.assert_allclose(np.asarray(agg),
+                               np.asarray(decs).mean(0),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("carrier_name", CARRIER_NAMES)
+@pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
+@pytest.mark.parametrize("d,n", [(1, 2), (12, 3), (50, 4)])
+def test_aggregate_is_mean_of_decodes(carrier_name, comp_name, d, n):
+    """(b) the server-side aggregate is exactly the mean of the per-client
+    wire decodes (scatter-add collisions must SUM, quantized wires must
+    dequantize before averaging)."""
+    check_aggregate_is_mean_of_decodes(carrier_name, comp_name, d, n,
+                                       seed=d * 7 + n)
+
+
+if HAVE_HYPOTHESIS:
+    @fuzz
+    @given(st.sampled_from(CARRIER_NAMES),
+           st.sampled_from(sorted(COMPRESSORS)),
+           st.integers(1, 300), st.integers(1, 5), st.integers(0, 10_000))
+    def test_aggregate_is_mean_of_decodes_fuzz(carrier_name, comp_name, d, n,
+                                               seed):
+        check_aggregate_is_mean_of_decodes(carrier_name, comp_name, d, n,
+                                           seed,
+                                           unsupported=_assume_supported)
+
+
+# ---------------------------------------------------------------------------
+# (c) quantize round-trip error bound
+# ---------------------------------------------------------------------------
+
+def check_quantize_roundtrip_bound(bits, rows, cols, seed):
+    x = _vec(cols, seed, rows=rows)
+    q, s = kref.block_quantize_ref(x, bits)
+    y = kref.block_dequantize_ref(q, s, bits=bits, cols=cols)
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    bound = np.abs(np.asarray(x)).max(axis=1) / 2 ** (bits - 1)
+    assert (err <= bound[:, None] + 1e-7).all()
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("rows,cols", [(1, 1), (2, 7), (5, 16), (3, 33)])
+def test_quantize_roundtrip_error_bound(bits, rows, cols):
+    """(c) per-block round-trip error ≤ absmax/2^(bits−1): the grid step is
+    absmax/qmax and round-to-nearest loses at most half a step, so the bound
+    holds with a factor-2 margin."""
+    check_quantize_roundtrip_bound(bits, rows, cols, seed=rows * 31 + cols)
+
+
+if HAVE_HYPOTHESIS:
+    @fuzz
+    @given(st.sampled_from([8, 4]), st.integers(1, 12), st.integers(1, 40),
+           st.integers(0, 10_000))
+    def test_quantize_roundtrip_error_bound_fuzz(bits, rows, cols, seed):
+        check_quantize_roundtrip_bound(bits, rows, cols, seed)
+
+
+# ---------------------------------------------------------------------------
+# (d) composed compressor still satisfies Definition 1 with the predicted α
+# ---------------------------------------------------------------------------
+
+def check_composed_definition1(carrier_name, comp_name, d, seed,
+                               unsupported=pytest.skip):
+    comp = COMPRESSORS[comp_name]()
+    car = _require_wire(carrier_name, comp, unsupported)
+    x = _vec(d, seed)
+    cx = np.asarray(jax.jit(
+        lambda x: car.decode(comp, car.encode(comp, x), d=d,
+                             dtype=x.dtype))(x))
+    err = float(np.sum((cx - np.asarray(x)) ** 2))
+    nx = float(np.sum(np.asarray(x) ** 2))
+    factor = car.composed_err_factor(comp, d)
+    assert err <= factor * nx + 1e-6
+    assert car.composed_alpha(comp, d) == pytest.approx(
+        max(0.0, 1.0 - factor))
+
+
+@pytest.mark.parametrize("carrier_name", ["quant8", "quant4"])
+@pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
+@pytest.mark.parametrize("d", DIMS)
+def test_composed_compressor_satisfies_definition1(carrier_name, comp_name,
+                                                   d):
+    """(d) decode∘quantize∘C is still a Definition-1 compressor with the
+    predicted constant: ‖QC(x) − x‖² ≤ (√(1−α) + √ε)²·‖x‖²."""
+    check_composed_definition1(carrier_name, comp_name, d, seed=d * 13)
+
+
+if HAVE_HYPOTHESIS:
+    @fuzz
+    @given(st.sampled_from(["quant8", "quant4"]),
+           st.sampled_from(sorted(COMPRESSORS)),
+           st.integers(1, 300), st.integers(0, 10_000))
+    def test_composed_definition1_fuzz(carrier_name, comp_name, d, seed):
+        check_composed_definition1(carrier_name, comp_name, d, seed,
+                                   unsupported=_assume_supported)
+
+
+# ---------------------------------------------------------------------------
+# (e) one EF round: server increment == mean client increment
+# ---------------------------------------------------------------------------
+
+def check_ef_round_consistency(carrier_name, method_name, d, seed):
+    comp = C.BlockTopK(block=12, k_per_block=5)
+    kwargs = {"compressor": comp}
+    if method_name == "ef21_sgdm":
+        kwargs["eta"] = 0.4
+    method = ef.make(method_name, **kwargs)
+    dp = 3
+    grads = {"w": _vec(d, seed, rows=dp)}
+    efc = D.EFConfig(method=method, carrier=carrier_name)
+    state = D.init_ef_state(efc, {"w": jnp.zeros((d,), jnp.float32)}, dp,
+                            init_grads=grads)
+    g0_client = np.asarray(state["clients"]["g"]["w"])
+    g0_server = np.asarray(state["server"]["w"])
+    g_new, state_new = jax.jit(
+        lambda g, s: D.ef_round(efc, g, s, None))(grads, state)
+    d_server = np.asarray(g_new["w"]) - g0_server
+    d_clients = (np.asarray(state_new["clients"]["g"]["w"])
+                 - g0_client).mean(0)
+    np.testing.assert_allclose(d_server, d_clients, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("carrier_name", CARRIER_NAMES)
+@pytest.mark.parametrize("method_name", DELTA_METHODS)
+@pytest.mark.parametrize("d", [12, 50])
+def test_ef_round_server_matches_mean_client_increment(carrier_name,
+                                                       method_name, d):
+    """(e) transport neutrality of one full EF round: for delta-mode methods
+    the server increment is the mean of the client gᵢ increments, whatever
+    wire carried them — if a carrier dropped or double-counted mass, the two
+    sides would disagree and EF would never re-send the difference."""
+    check_ef_round_consistency(carrier_name, method_name, d, seed=d * 3)
+
+
+if HAVE_HYPOTHESIS:
+    @fuzz
+    @given(st.sampled_from(CARRIER_NAMES), st.sampled_from(DELTA_METHODS),
+           st.integers(2, 150), st.integers(0, 10_000))
+    def test_ef_round_consistency_fuzz(carrier_name, method_name, d, seed):
+        check_ef_round_consistency(carrier_name, method_name, d, seed)

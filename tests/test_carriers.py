@@ -30,13 +30,24 @@ def setup():
 BLOCK_TOPK = C.BlockTopK(block=8, k_per_block=3)
 
 
-def _trajectory(setup, method, carrier, steps=40):
-    """g_server / loss trajectory of the production train step."""
+def _trajectory(setup, method, carrier, steps=40, cache=None):
+    """g_server / loss trajectory of the production train step. ``cache`` is
+    the session-scoped step_cache fixture: the jitted step for a given
+    (method, carrier, dp) compiles once per test session."""
     params, batch = setup
     dp = 4
+    lr = 0.2
     efc = D.EFConfig(method=method, carrier=carrier)
-    opt = opt_lib.sgd(0.2)
-    step = jax.jit(D.make_train_step(loss_fn, efc, opt, dp))
+    opt = opt_lib.sgd(lr)
+    # the key must cover everything the jitted step closes over (step_cache
+    # is shared session-wide)
+    key = (loss_fn, "sgd", lr, method, carrier, dp)
+    if cache is None or key not in cache:
+        step = jax.jit(D.make_train_step(loss_fn, efc, opt, dp))
+        if cache is not None:
+            cache[key] = step
+    else:
+        step = cache[key]
     _, _, g0 = D.per_client_value_and_grad(loss_fn, params, batch, dp)
     p, os_, es = params, opt.init(params), D.init_ef_state(
         efc, params, dp, init_grads=g0)
@@ -50,7 +61,8 @@ def _trajectory(setup, method, carrier, steps=40):
 
 @pytest.mark.parametrize("carrier", ["sparse", "fused"])
 @pytest.mark.parametrize("method_name", ["ef21_sgdm", "ef21_sgd"])
-def test_train_step_g_server_matches_dense(setup, carrier, method_name):
+def test_train_step_g_server_matches_dense(setup, carrier, method_name,
+                                           step_cache):
     """Every carrier is a pure transport: the server estimate gᵗ it produces
     over a full training run must equal the dense (paper-faithful) one up to
     float/tie tolerance."""
@@ -58,11 +70,12 @@ def test_train_step_g_server_matches_dense(setup, carrier, method_name):
     if method_name == "ef21_sgdm":
         kwargs["eta"] = 0.3
     method = ef.make(method_name, **kwargs)
-    ref = _trajectory(setup, method, "dense")
-    got = _trajectory(setup, method, carrier)
+    ref = _trajectory(setup, method, "dense", cache=step_cache)
+    got = _trajectory(setup, method, carrier, cache=step_cache)
     np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("carrier", ["sparse", "fused"])
 def test_simulator_matches_dense_on_quadratic(carrier):
     """All three runtimes share one carrier implementation — the vmap
@@ -88,6 +101,85 @@ def test_fused_degrades_to_dense_plan_when_unfusable():
     assert fused.plan(ef.EF21SGDM(compressor=C.BlockTopK()),
                       eta=jnp.float32(0.1)) == "dense"
     assert fused.plan(ef.EF14SGD(compressor=C.BlockTopK())) == "dense"
+
+
+def test_every_method_carrier_pair_roundtrips_or_reports_why():
+    """Carrier.plan used to degrade to 'dense' silently — a misconfigured run
+    looked identical to a working one in logs. Every (method × carrier) pair
+    must now either run the carrier's native plan or return a non-empty
+    plan_reason explaining the degradation (launch/build.py warns with it,
+    launch/train.py prints it)."""
+    comp = C.BlockTopK(block=8, k_per_block=3)
+    for m_name in ef.REGISTRY:
+        method = ef.make(m_name, compressor=comp)
+        for c_name in carrier_lib.REGISTRY:
+            car = carrier_lib.make(c_name)
+            plan, reason = car.plan_with_reason(method)
+            assert plan == car.plan(method)
+            if plan == "dense" and c_name != "dense":
+                assert reason, (m_name, c_name)
+            else:
+                assert reason == "", (m_name, c_name, reason)
+
+
+def test_quant_plan_degradations_have_reasons():
+    for name in ("quant8", "quant4"):
+        car = carrier_lib.make(name)
+        assert car.plan(ef.EF21SGDM(compressor=BLOCK_TOPK)) == "wire"
+        # dense payload: any deterministic compressor rides the wire
+        assert car.plan(ef.EF21SGDM(compressor=C.HardThreshold())) == "wire"
+        plan, reason = car.plan_with_reason(
+            ef.EF21SGDM(compressor=C.RandK()))
+        assert plan == "dense" and "randomness" in reason
+        plan, reason = car.plan_with_reason(
+            ef.EF21SGDMAbs(compressor=BLOCK_TOPK))
+        assert plan == "dense" and "wire_is_msg" in reason
+
+
+def test_quant_wire_words_fractional_accounting():
+    """A 4-bit mantissa is 1/8 word, int8 is 1/4, each block ships one f32
+    scale, block-local indices are int16 (1/2 word) when the block fits —
+    and at equal K the quantized wires undercut the sparse carrier."""
+    d = 4096
+    btk = C.BlockTopK(block=1024, k_per_block=16)
+    sparse, q8, q4 = (carrier_lib.make(n)
+                      for n in ("sparse", "quant8", "quant4"))
+    nb, kb = 4, 16
+    assert q8.wire_words(btk, d) == nb * (1 + kb * (8 / 32 + 0.5))
+    assert q4.wire_words(btk, d) == nb * (1 + kb * (4 / 32 + 0.5))
+    assert (q4.wire_words(btk, d) < q8.wire_words(btk, d)
+            < sparse.wire_words(btk, d))
+    # single-block TopK on a large leaf: indices fall back to a full word
+    big = 2 ** 16
+    topk = C.TopK(k=8)
+    assert q8.wire_words(topk, big) == 1 + 8 * (8 / 32 + 1.0)
+    # dense payload: scales + packed mantissas, no indices
+    ident = C.Identity()
+    nbq = -(-d // q4.qblock)
+    assert q4.wire_words(ident, d) == nbq * (1 + q4.qblock * 4 / 32)
+    # coords_per_message delegation
+    m = ef.EF21SGDM(compressor=btk)
+    assert m.coords_per_message(d, carrier="quant4") == \
+        q4.wire_words(btk, d)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("carrier", ["quant8", "quant4"])
+def test_quant_carrier_converges_like_dense_on_quadratic(carrier):
+    """Quantization changes the trajectory (unlike sparse/fused, the wire is
+    lossy beyond C), but EF re-sends the quantization error, so the simulator
+    must reach the same gradient-norm floor as the dense wire."""
+    prob = problems.QuadraticT1()
+    method = ef.EF21SGDM(compressor=C.BlockTopK(block=2, k_per_block=1),
+                         eta=0.2)
+    out = {}
+    for c in ("dense", carrier):
+        cfg = simulate.SimConfig(n=4, batch_size=2, gamma=1e-2, steps=300,
+                                 carrier=c)
+        out[c] = simulate.run_numpy(prob, method, cfg, seed=0)
+    end_d = out["dense"]["grad_norm_sq"][-50:].mean()
+    end_q = out[carrier]["grad_norm_sq"][-50:].mean()
+    assert end_q < 3 * end_d + 1e-6, (end_q, end_d)
 
 
 def test_sparse_plan_respects_wire_is_msg():
@@ -126,13 +218,20 @@ def test_wire_words_accounting():
 def test_simulator_reports_wire_words():
     prob = problems.QuadraticT1()
     method = ef.EF21SGDM(compressor=C.TopK(k=1), eta=0.5)
-    for carrier, expect in (("dense", 2.0), ("sparse", 2.0)):
+    out = {}
+    for carrier, expect in (("dense", 2.0), ("sparse", 2.0),
+                            ("quant8", 1.75), ("quant4", 1.625)):
         cfg = simulate.SimConfig(n=2, steps=3, carrier=carrier)
-        out = simulate.run_numpy(prob, method, cfg, seed=0)
+        out[carrier] = simulate.run_numpy(prob, method, cfg, seed=0)
         # d = 2, n = 2: TopK(k=1) → 1 coord (paper), dense wire = 2 words,
-        # sparse wire = 2 words (1 value + 1 index)
-        assert out["coords_per_round"] == 1 * 2
-        assert out["wire_words_per_round"] == expect * 2
+        # sparse wire = 2 words (1 value + 1 int32 index), quant wires =
+        # 1 scale + quantized value (1/4 | 1/8 word) + int16 index (1/2)
+        assert out[carrier]["coords_per_round"] == 1 * 2
+        assert out[carrier]["wire_words_per_round"] == expect * 2
+    # acceptance: at equal K the quant carriers undercut the sparse wire
+    assert (out["quant4"]["wire_words_per_round"]
+            < out["quant8"]["wire_words_per_round"]
+            < out["sparse"]["wire_words_per_round"])
 
 
 def test_sparse_carrier_roundtrip_matches_compressor():

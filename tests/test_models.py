@@ -23,6 +23,7 @@ def make_batch(cfg, rng, B=2, S=128):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", cb.ARCH_IDS)
 def test_arch_smoke_forward_and_train_step(arch):
     """Reduced variant of each assigned architecture: one forward + one EF21-SGDM
@@ -51,6 +52,7 @@ def test_arch_smoke_forward_and_train_step(arch):
         assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all(), arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", cb.ARCH_IDS)
 def test_arch_prefill_decode(arch):
     cfg = cb.get_smoke(arch)
@@ -72,6 +74,7 @@ def test_arch_prefill_decode(arch):
     assert np.isfinite(np.asarray(logits2, np.float32)).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["smollm_360m", "falcon_mamba_7b",
                                   "zamba2_1p2b", "gemma2_9b",
                                   "h2o_danube3_4b", "olmoe_1b_7b"])
@@ -149,6 +152,7 @@ def test_gqa_grouping():
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_routing_capacity_and_balance():
     from repro.models import moe as moe_lib
     rng = jax.random.PRNGKey(0)
@@ -162,6 +166,7 @@ def test_moe_routing_capacity_and_balance():
     assert float(aux["load_balance"]) >= 0.99  # ≥ 1 by Cauchy-Schwarz-ish
 
 
+@pytest.mark.slow
 def test_mamba1_chunked_equals_sequential():
     """Chunked selective scan == step-by-step recurrence."""
     from repro.models import ssm
@@ -186,6 +191,7 @@ def test_mamba1_chunked_equals_sequential():
                                rtol=1e-3, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_mamba2_chunked_equals_sequential():
     from repro.models import ssm
     cfg = cb.get_smoke("zamba2_1p2b")
@@ -228,6 +234,7 @@ def test_param_counts_sane():
             (arch, int(actual), int(analytic))
 
 
+@pytest.mark.slow
 def test_tp_head_padding_function_preserving():
     """MHA-expand (tp_pad_heads): manually padding an unpadded layer's weights
     must reproduce its output exactly (zero-wo padded q heads, replicated kv)."""
@@ -254,6 +261,7 @@ def test_tp_head_padding_function_preserving():
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_tp_head_padding_init_shapes():
     cfg = dataclasses.replace(cb.get_smoke("musicgen_medium"), tp_pad_heads=4)
     assert cfg.eff_heads == (4, 4)
