@@ -1,4 +1,7 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities, built on the RunSpec/Session API
+(launch/spec.py, launch/session.py): a benchmark names its configuration as a
+declarative ``bench_spec(...)`` and drives the SAME production path the
+train driver uses via ``bench_session`` — no bespoke step assembly."""
 from __future__ import annotations
 
 import json
@@ -9,6 +12,24 @@ from typing import Dict, List
 import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def bench_spec(**overrides):
+    """A RunSpec with CPU-bench-sized defaults (reduced smollm, 4 clients,
+    tiny batch); override any field. Import-light — building the spec (for
+    sweep emission or accounting) costs no jax import."""
+    from repro.launch.spec import RunSpec
+    base = dict(arch="smollm-360m", smoke=True, clients=4, global_batch=8,
+                seq_len=32)
+    base.update(overrides)
+    return RunSpec(**base)
+
+
+def bench_session(**overrides):
+    """Session over ``bench_spec`` — the unit of work benchmarks time is
+    ``session.step_once()`` (the jitted production train step)."""
+    from repro.launch.session import Session
+    return Session(bench_spec(**overrides))
 
 
 def save_json(name: str, payload) -> str:

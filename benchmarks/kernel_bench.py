@@ -24,39 +24,26 @@ def _bench(fn, *args, iters=3):
 
 def _train_step_compare(out: dict) -> None:
     """Full train-step wall time, fused vs unfused carrier (core/carriers.py):
-    the SAME ``make_train_step`` production path, dispatched through
-    DenseCarrier (unfused pre→C→post chain) vs FusedPallasCarrier (one
-    interpreted Pallas pass per leaf on CPU — compiled Mosaic on TPU)."""
-    from repro.core import compressors as C
-    from repro.core import distributed as dist
-    from repro.core import ef
-    from repro.optim import optimizer as opt_lib
+    the SAME production path the train driver runs — one RunSpec per carrier,
+    stepped through ``Session.step_once`` (launch/session.py) — dispatched
+    through DenseCarrier (unfused pre→C→post chain) vs FusedPallasCarrier
+    (one interpreted Pallas pass per leaf on CPU — compiled Mosaic on TPU)."""
+    from benchmarks.common import bench_session
 
-    dp, d_in, d_out = 4, 128, 64
-    rng = np.random.RandomState(1)
-    params = {"w": jnp.zeros((d_in, d_out), jnp.float32)}
-    batch = {"x": jnp.asarray(rng.randn(16, d_in), jnp.float32),
-             "y": jnp.asarray(rng.randn(16, d_out), jnp.float32)}
-
-    def loss_fn(p, b):
-        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2), {}
-
-    method = ef.EF21SGDM(
-        compressor=C.BlockTopK(block=1024, k_per_block=16), eta=0.1)
-    opt = opt_lib.make("sgd", lr=0.1)
-    key = jax.random.PRNGKey(0)
     for carrier in ("dense", "fused"):
-        efc = dist.EFConfig(method=method, carrier=carrier)
-        step = jax.jit(dist.make_train_step(loss_fn, efc, opt, dp))
-        _, _, g0 = dist.per_client_value_and_grad(loss_fn, params, batch, dp)
-        es = dist.init_ef_state(efc, params, dp, init_grads=g0)
-        os_ = opt.init(params)
+        sess = bench_session(
+            carrier=carrier, method="ef21_sgdm", compressor="block_topk",
+            compressor_kw={"block": 1024, "k_per_block": 16}, eta=0.1)
+        # time ONLY the jitted step on a fixed batch/state — host-side batch
+        # synthesis must not dilute the fused-vs-dense device delta
+        step, batch = sess.step_fn, sess.batch_for(0)
+        state = (sess.params, sess.opt_state, sess.ef_state)
+        key = jax.random.PRNGKey(0)
 
-        def one(p, o, e, t):
-            return step(p, o, e, batch, jax.random.fold_in(key, t), t)
+        def one(t):
+            return step(*state, batch, jax.random.fold_in(key, t), t)[3]
 
-        out[f"train_step_{carrier}_us"] = _bench(
-            lambda t: one(params, os_, es, t), 0, iters=3)
+        out[f"train_step_{carrier}_us"] = _bench(one, 0, iters=3)
 
 
 def _quantize_bench(out: dict, x) -> None:

@@ -1,6 +1,13 @@
 """Ablation: every EF method × several compressors on one problem (the paper's
 method zoo side by side), reporting final ‖∇f‖² and transmitted coordinates.
 
+Each grid cell is named by a declarative RunSpec (launch/spec.py) — the same
+serializable surface the production drivers use — and the Method object is
+derived from it via ``session.make_method``, so the simulator sweep and the
+production train path can never disagree about what a cell means. Swap
+``simulate.run_numpy`` for ``Session(spec).train`` to run any cell at model
+scale.
+
     PYTHONPATH=src python examples/compression_ablation.py
 """
 import os
@@ -10,37 +17,39 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import compressors as C, ef, problems, simulate
+from repro.core import problems, simulate
+from repro.launch import session as session_lib
+from repro.launch.spec import RunSpec
 
 prob = problems.LogisticRegression(n=8, m_per_client=128, l=32, c=5, seed=0)
 d = prob.dim
 STEPS = 1200
 
-rows = []
-for cname, comp in [
-    ("top10", C.TopK(k=10)),
-    ("block_topk", C.BlockTopK(block=64, k_per_block=4)),
-    ("randk10", C.RandK(k=10)),
-    ("natural", C.NaturalCompression()),
-    ("rank1", C.Rank1(rows=15)),
-]:
-    for mname in ["ef21_sgd", "ef21_sgdm", "ef21_sgd2m", "ef14_sgd"]:
-        kw = {"compressor": comp}
-        if "sgdm" in mname or "2m" in mname:
-            kw["eta"] = 0.1
-        m = ef.make(mname, **kw)
-        cfg = simulate.SimConfig(n=8, batch_size=4, gamma=0.05, steps=STEPS,
-                                 b_init=4)
-        out = simulate.run_numpy(prob, m, cfg, seed=0)
-        gn = float(np.asarray(out["grad_norm_sq"][-100:]).mean())
-        rows.append((mname, cname, gn, m.coords_per_message(d)))
+COMPRESSORS = [
+    ("top10", "topk", {"k": 10}),
+    ("block_topk", "block_topk", {"block": 64, "k_per_block": 4}),
+    ("randk10", "randk", {"k": 10}),
+    ("natural", "natural", {}),
+    ("rank1", "rank1", {"rows": 15}),
+]
 
+grid = [RunSpec(method=mname, compressor=cname, compressor_kw=ckw, eta=0.1)
+        for _, cname, ckw in COMPRESSORS
+        for mname in ["ef21_sgd", "ef21_sgdm", "ef21_sgd2m", "ef14_sgd"]]
 # absolute compressor variant (Algorithm 4)
-m = ef.EF21SGDMAbs(compressor=C.HardThreshold(lam=0.05), eta=0.1, gamma=0.05)
-out = simulate.run_numpy(prob, m, simulate.SimConfig(
-    n=8, batch_size=4, gamma=0.05, steps=STEPS, b_init=4), seed=0)
-rows.append(("ef21_sgdm_abs", "hard_thresh",
-             float(np.asarray(out["grad_norm_sq"][-100:]).mean()), d))
+grid.append(RunSpec(method="ef21_sgdm_abs", compressor="hard_threshold",
+                    compressor_kw={"lam": 0.05}, method_kw={"gamma": 0.05},
+                    eta=0.1))
+
+rows = []
+for spec in grid:
+    m = session_lib.make_method(spec)
+    cfg = simulate.SimConfig(n=8, batch_size=4, gamma=0.05, steps=STEPS,
+                             b_init=4)
+    out = simulate.run_numpy(prob, m, cfg, seed=0)
+    gn = float(np.asarray(out["grad_norm_sq"][-100:]).mean())
+    rows.append((spec.method, spec.compressor, gn,
+                 m.coords_per_message(d)))
 
 print(f"{'method':15s} {'compressor':12s} {'end ‖∇f‖²':>12s} {'coords/round':>13s}")
 for mname, cname, gn, coords in sorted(rows, key=lambda r: r[2]):

@@ -1,5 +1,7 @@
 """Serving demo: batched prefill + decode across three architecture families
-(dense SWA, Mamba1, hybrid), showing the cache machinery end-to-end.
+(dense SWA, Mamba1, hybrid) via the RunSpec/Session API — each arch is one
+spec, and ``Session.serve`` routes through the production
+``build_prefill``/``build_decode`` shardings (launch/build.py).
 
     PYTHONPATH=src python examples/distributed_serve.py
 """
@@ -9,36 +11,13 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import base as cb
-from repro.models import model as M
+from repro.launch.session import Session
+from repro.launch.spec import RunSpec
 
 for arch in ["h2o-danube-3-4b", "falcon-mamba-7b", "zamba2-1.2b"]:
-    cfg = cb.get_smoke(arch)
-    rng = jax.random.PRNGKey(0)
-    params = M.init_params(cfg, rng)
-    B, S, DEC = 2, 64, 16
-    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
-    cache = M.init_cache(cfg, B, S + DEC)
-
-    prefill = jax.jit(lambda p, b, c: M.prefill(cfg, p, b, c))
-    decode = jax.jit(lambda p, c, t, q: M.decode_step(cfg, p, c, t, q))
-
+    sess = Session(RunSpec(arch=arch, smoke=True))
     t0 = time.time()
-    logits, cache = prefill(params, {"tokens": tokens}, cache)
-    tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
-    gen = [tok]
-    for i in range(DEC):
-        logits, cache = decode(params, cache, tok,
-                               jnp.asarray(S + i, jnp.int32))
-        tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
-        gen.append(tok)
-    jax.block_until_ready(tok)
-    out = jnp.concatenate(gen, axis=1)
-    cache_mb = sum(x.size * x.dtype.itemsize
-                   for x in jax.tree_util.tree_leaves(cache)) / 2 ** 20
-    print(f"{arch:18s} family={cfg.family:7s} prefill+{DEC}tok: "
-          f"{time.time() - t0:5.1f}s  cache={cache_mb:6.1f} MiB  "
-          f"sample={jax.device_get(out)[0, :8].tolist()}")
+    out = sess.serve(batch=2, prompt_len=64, decode_steps=16)
+    print(f"{arch:18s} family={sess.cfg.family:7s} prefill+16tok: "
+          f"{time.time() - t0:5.1f}s  cache={out['cache_bytes']/2**20:6.1f} "
+          f"MiB  sample={out['tokens'][0, :8].tolist()}")

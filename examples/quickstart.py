@@ -1,8 +1,11 @@
-"""Quickstart: EF21-SGDM (Algorithm 1) end-to-end in ~40 lines.
+"""Quickstart: EF21-SGDM (Algorithm 1) end-to-end through the RunSpec/Session
+API (launch/spec.py, launch/session.py — DESIGN.md §7).
 
-Trains a reduced SmolLM on the synthetic pipeline with 4 emulated clients and
-Top-1%-per-block compression, then compares against uncompressed SGDM at equal
-steps and prints the transmitted-coordinate savings.
+Each experiment is ONE declarative, JSON-serializable RunSpec; Session owns
+the rest (mesh, EFConfig, pipeline, jitted step). Trains a reduced SmolLM on
+the synthetic pipeline with 4 emulated clients and Top-16-per-block
+compression, then compares against uncompressed SGDM at equal steps and
+prints the transmitted-coordinate savings.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,47 +14,26 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
+from repro.launch.session import Session
+from repro.launch.spec import RunSpec
 
-from repro.configs import base as cb
-from repro.core import compressors as C, distributed as D, ef
-from repro.data.pipeline import DataConfig, SyntheticTokens
-from repro.models import model as M
-from repro.optim import optimizer as opt_lib
+STEPS = 120
+base = dict(arch="smollm-360m", smoke=True, clients=4, global_batch=8,
+            seq_len=128, eta=0.2, lr=0.5)
 
-ARCH, CLIENTS, BATCH, SEQ, STEPS = "smollm-360m", 4, 8, 128, 120
-
-cfg = cb.get_smoke(ARCH)
-rng = jax.random.PRNGKey(0)
-pipe = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ,
-                                  global_batch=BATCH, dp_groups=CLIENTS))
-
-
-def loss_fn(p, b):
-    return M.train_loss(cfg, p, b)
-
-
-d = cfg.param_count()
-for name, method in [
+for name, spec in [
     ("EF21-SGDM + BlockTopK(1.6%)",
-     ef.EF21SGDM(compressor=C.BlockTopK(block=1024, k_per_block=16), eta=0.2)),
-    ("SGDM (uncompressed)", ef.SGDM(eta=0.2)),
+     RunSpec(**base, method="ef21_sgdm", compressor="block_topk",
+             compressor_kw={"block": 1024, "k_per_block": 16})),
+    ("SGDM (uncompressed)",
+     RunSpec(**base, method="sgdm", compressor="identity")),
 ]:
-    params = M.init_params(cfg, rng)
-    efc = D.EFConfig(method=method)
-    opt = opt_lib.sgd(0.5)
-    step = jax.jit(D.make_train_step(loss_fn, efc, opt, CLIENTS))
-    _, _, g0 = D.per_client_value_and_grad(loss_fn, params, pipe.batch(0),
-                                           CLIENTS)
-    p, os_, es = params, opt.init(params), D.init_ef_state(
-        efc, params, CLIENTS, init_grads=g0)
-    for t in range(STEPS):
-        p, os_, es, m = step(p, os_, es, pipe.batch(t),
-                             jax.random.fold_in(rng, t), t)
-        if t % 40 == 0 or t == STEPS - 1:
-            print(f"  [{name}] step {t:4d} loss {float(m['loss']):.4f}")
-    coords = method.coords_per_message(d)
-    print(f"{name}: final loss {float(m['loss']):.4f}, "
+    print(f"== {name}")
+    sess = Session(spec)
+    sess.train(STEPS, log_every=40, verbose=True)   # prints loss live
+    d = sess.cfg.param_count()
+    coords = sess.method.coords_per_message(d)
+    print(f"{name}: final loss {sess.history[-1]['loss']:.4f}, "
           f"{coords:.3g}/{d:.3g} coords per client per round "
-          f"({100 * coords / d:.1f}% of uncompressed)\n")
+          f"({100 * coords / d:.1f}% of uncompressed)")
+    print(f"  spec: {spec.to_json()}\n")

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import tempfile
 from typing import Any, Dict, Optional, Tuple
 
@@ -32,9 +33,18 @@ def _part(p) -> str:
 _NATIVE_KINDS = set("biufc")
 
 
-def save(path: str, tree: PyTree, step: int = 0, meta: Optional[dict] = None
-         ) -> None:
+def save(path: str, tree: PyTree, step: int = 0, meta: Optional[dict] = None,
+         spec: Optional[Any] = None) -> None:
+    """``spec`` (anything with ``to_dict()`` / ``spec_hash()`` — a
+    launch.spec.RunSpec) is embedded in ``__meta__`` so a checkpoint names the
+    exact experiment that wrote it: ``restore``/``Session.resume`` can rebuild
+    the run without re-passing flags, and refuse a checkpoint written by a
+    different RunSpec (the hash comparison)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    if spec is not None:
+        meta = dict(meta or {})
+        meta.setdefault("spec", spec.to_dict())
+        meta.setdefault("spec_hash", spec.spec_hash())
     flat = _flatten(tree)
     # extension dtypes (bfloat16, fp8) round-trip poorly through npz: store as
     # f32 — restore() casts back to the target leaf dtype (lossless for bf16)
@@ -46,8 +56,11 @@ def save(path: str, tree: PyTree, step: int = 0, meta: Optional[dict] = None
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                suffix=".tmp.npz")
     os.close(fd)
+    # the mkstemp suffix already ends in .npz, so np.savez never renames the
+    # temp file (and latest() relies on the '.tmp.npz' suffix to skip
+    # partials from killed saves)
     np.savez(tmp, **flat)
-    os.replace(tmp if tmp.endswith(".npz") else tmp, path)
+    os.replace(tmp, path)
 
 
 def restore(path: str, like: PyTree) -> Tuple[PyTree, dict]:
@@ -67,10 +80,34 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, dict]:
         jax.tree_util.tree_structure(like), out), meta
 
 
+def read_meta(path: str) -> dict:
+    """The ``__meta__`` dict alone, without materializing any arrays."""
+    with np.load(path) as z:
+        return json.loads(bytes(z["__meta__"]).decode())
+
+
+def parse_step(filename: str) -> Optional[int]:
+    """Step number encoded in a checkpoint filename (the LAST digit run in the
+    stem, so ``run2/step_100.npz`` → 100), or None for digit-free names."""
+    stem = os.path.splitext(os.path.basename(filename))[0]
+    groups = re.findall(r"\d+", stem)
+    return int(groups[-1]) if groups else None
+
+
 def latest(ckpt_dir: str) -> Optional[str]:
+    """Newest checkpoint by PARSED step number — ``max()`` over filenames is
+    lexicographic and would rank step_2 above step_10 when the zero padding
+    ever differs. Digit-free names sort before any numbered checkpoint and
+    fall back to lexicographic order among themselves."""
     if not os.path.isdir(ckpt_dir):
         return None
-    cands = [f for f in os.listdir(ckpt_dir) if f.endswith(".npz")]
+    # a save() killed mid-write leaves a mkstemp '*.tmp.npz' partial behind;
+    # it must never win over the last complete checkpoint (resume would die
+    # on a truncated zip, or silently adopt stale state)
+    cands = [f for f in os.listdir(ckpt_dir)
+             if f.endswith(".npz") and not f.endswith(".tmp.npz")]
     if not cands:
         return None
-    return os.path.join(ckpt_dir, max(cands))
+    best = max(cands, key=lambda f: (parse_step(f) is not None,
+                                     parse_step(f) or 0, f))
+    return os.path.join(ckpt_dir, best)

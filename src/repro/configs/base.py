@@ -10,7 +10,10 @@ import dataclasses
 import importlib
 from typing import Optional, Tuple
 
-import jax.numpy as jnp
+# NOTE: no top-level jax import. This module is the arch/shape *registry* and
+# is consumed by launch/spec.py, which must stay importable without jax so
+# sweep tooling (`python -m repro.launch.spec --print`) can emit RunSpec JSON
+# from lightweight processes. jnp is imported lazily where needed.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +100,7 @@ class ArchConfig:
 
     @property
     def activation_dtype(self):
+        import jax.numpy as jnp
         return jnp.dtype(self.dtype)
 
     @property

@@ -21,6 +21,37 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# frontend prefix padding (DESIGN.md §5): modality-frontend archs (musicgen,
+# internvl2) are trained/served with precomputed patch/frame embeddings
+# prepended to the token sequence. Drivers pad the prefix to at least
+# PREFIX_PAD_MIN tokens; the dry-run input specs (launch/shardings.py) pad to
+# the production alignment PREFIX_PAD_SPEC.
+PREFIX_PAD_MIN = 8
+PREFIX_PAD_SPEC = 64
+
+
+def prefix_token_count(cfg, pad_to: int = PREFIX_PAD_MIN) -> int:
+    """Number of prefix-embedding tokens a batch for ``cfg`` carries (0 for
+    archs without a modality frontend)."""
+    if cfg.frontend is None:
+        return 0
+    return max(cfg.frontend_tokens, pad_to)
+
+
+def with_prefix_embeds(cfg, batch: Dict, pad_to: int = PREFIX_PAD_MIN) -> Dict:
+    """Attach the zero ``prefix_embeds`` stub to ``batch`` when ``cfg`` has a
+    modality frontend. The single implementation of the padding rule shared by
+    every driver (Session train/serve) and the dry-run input specs — the shape
+    logic must never diverge between them."""
+    nt = prefix_token_count(cfg, pad_to)
+    if nt == 0:
+        return batch
+    batch = dict(batch)
+    batch["prefix_embeds"] = jnp.zeros(
+        (batch["tokens"].shape[0], nt, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
 @dataclasses.dataclass(frozen=True)
 class DataConfig:
     vocab_size: int

@@ -28,16 +28,25 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
                       method_name: str = "ef21_sgdm",
                       compressor_name: str = "block_topk",
                       ratio: float = 0.01, eta: float = 0.1,
-                      carrier: str = "dense") -> dist.EFConfig:
+                      carrier: str = "dense",
+                      method: Optional[ef_lib.Method] = None
+                      ) -> dist.EFConfig:
+    """EFConfig assembly + the authoritative carrier-plan checks. Pass a
+    prebuilt ``method`` (launch/session.py builds one from the RunSpec,
+    including method_kw/compressor_kw) to skip the name-based construction
+    here — the carrier validation below runs either way."""
     from repro.core import carriers as carrier_lib
     carrier_obj = carrier_lib.make(carrier)  # fail fast on unknown names
-    comp = (comp_lib.make(compressor_name, ratio=ratio)
-            if compressor_name != "identity" else comp_lib.Identity())
-    state_dtype = jnp.bfloat16 if plan.ef_state_dtype == "bfloat16" else None
-    kwargs: Dict[str, Any] = {"compressor": comp, "state_dtype": state_dtype}
-    if method_name in ("ef21_sgdm", "ef21_sgd2m", "sgdm", "ef21_storm"):
-        kwargs["eta"] = eta
-    method = ef_lib.make(method_name, **kwargs)
+    if method is None:
+        comp = (comp_lib.make(compressor_name, ratio=ratio)
+                if compressor_name != "identity" else comp_lib.Identity())
+        state_dtype = jnp.bfloat16 if plan.ef_state_dtype == "bfloat16" \
+            else None
+        kwargs: Dict[str, Any] = {"compressor": comp,
+                                  "state_dtype": state_dtype}
+        if method_name in ("ef21_sgdm", "ef21_sgd2m", "sgdm", "ef21_storm"):
+            kwargs["eta"] = eta
+        method = ef_lib.make(method_name, **kwargs)
     # the carrier itself is the source of truth for what it can execute; an
     # explicitly requested fused carrier that would silently degrade to the
     # unfused dense plan is a misconfiguration worth failing fast on, and any
@@ -47,7 +56,8 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
         raise ValueError(
             "--carrier fused would silently run the UNFUSED dense plan: "
             f"{reason}. Pick --carrier dense or sparse for "
-            f"method={method_name!r} compressor={compressor_name!r}.")
+            f"method={method.name!r} "
+            f"compressor={type(method.compressor).__name__!r}.")
     if carrier != "dense" and exec_plan == "dense":
         import warnings
         warnings.warn(
@@ -117,20 +127,30 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh,
     return step_fn, (params, opt_state, ef_state, batch, rng, step)
 
 
-def build_prefill(cfg: ArchConfig, shape: InputShape, mesh):
+def _cache_shape(shape: InputShape, decode_budget: int) -> InputShape:
+    """Serving sessions extend the cache past the prompt by the decode
+    budget; the named dry-run shapes keep their exact cache length."""
+    if not decode_budget:
+        return shape
+    return dataclasses.replace(shape, seq_len=shape.seq_len + decode_budget)
+
+
+def build_prefill(cfg: ArchConfig, shape: InputShape, mesh,
+                  decode_budget: int = 0):
     def fn(params, batch, cache):
         return model_lib.prefill(cfg, params, batch, cache)
     params = sh.param_specs(cfg, mesh)
     batch = sh.batch_specs(cfg, mesh, shape, "prefill")
-    cache = sh.cache_specs(cfg, mesh, shape)
+    cache = sh.cache_specs(cfg, mesh, _cache_shape(shape, decode_budget))
     return fn, (params, batch, cache)
 
 
-def build_decode(cfg: ArchConfig, shape: InputShape, mesh):
+def build_decode(cfg: ArchConfig, shape: InputShape, mesh,
+                 decode_budget: int = 0):
     def fn(params, cache, tokens, pos):
         return model_lib.decode_step(cfg, params, cache, tokens, pos)
     params = sh.param_specs(cfg, mesh)
-    cache = sh.cache_specs(cfg, mesh, shape)
+    cache = sh.cache_specs(cfg, mesh, _cache_shape(shape, decode_budget))
     B = shape.global_batch
     b_ax = mesh_lib.data_axes(mesh) if B % mesh_lib.dp_size(mesh) == 0 else None
     tokens = jax.ShapeDtypeStruct(

@@ -8,30 +8,29 @@ production mesh; record memory analysis, FLOPs/bytes, and the collective schedul
 
   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
-  ... --multi-pod          → (pod=2, data=16, model=16) = 512 chips
+  ... --mesh multi_pod     → (pod=2, data=16, model=16) = 512 chips
   ... --carrier sparse     → wire-optimized (values, indices) aggregation
   ... --granularity pod    → EF clients = pods (grok-scale memory plan)
   ... --state-sharding zero → ZeRO-sharded EF state
 
-A failure here (sharding mismatch, OOM at compile, unsupported collective) is a bug
-in the system, per the assignment spec. Skips (long_500k on pure full-attention
-archs) are recorded explicitly with reasons.
+Every combo is one RunSpec (launch/spec.py) lowered through Session.lower()
+(launch/session.py) — the same assembly path train/serve use, so a sweep is a
+list of spec files, not a bespoke driver. A failure here (sharding mismatch,
+OOM at compile, unsupported collective) is a bug in the system, per the
+assignment spec; a spec-level ValueError (e.g. the fused misconfiguration) is
+recorded as FAIL at construction, before anything is lowered. Skips
+(long_500k on pure full-attention archs) are recorded explicitly with reasons.
 """
 import argparse
 import json
-import re
 import sys
 import time
 import traceback
 from typing import Dict, Optional
 
-import jax
-
 from repro.configs import base as cb
-from repro.launch import build as build_lib
 from repro.launch import hlo_analysis
-from repro.launch import mesh as mesh_lib
-from repro.launch import shardings as sh
+from repro.launch import spec as spec_lib
 
 # long_500k requires sub-quadratic state (assignment spec): skip pure
 # full-attention archs, with reasons recorded in DESIGN.md §5 and the JSON.
@@ -45,8 +44,7 @@ LONG_SKIP = {
 }
 
 
-
-def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+def run_one(arch: str, shape_name: str, *, mesh: str = "pod",
             carrier: str = "dense", method: str = "ef21_sgdm",
             compressor: str = "block_topk", ratio: float = 0.01,
             granularity: str = "group", state_sharding: str = "client",
@@ -54,9 +52,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             moe_impl: str = "dispatch",
             optimizer: str = "sgd", extra_tag: str = "") -> Dict:
     mod = cb.ARCH_ALIASES.get(arch, arch)
-    shape = cb.INPUT_SHAPES[shape_name]
     rec: Dict = {
-        "arch": mod, "shape": shape_name, "multi_pod": multi_pod,
+        "arch": mod, "shape": shape_name, "multi_pod": mesh == "multi_pod",
         "carrier": carrier, "method": method, "compressor": compressor,
         "granularity": granularity, "state_sharding": state_sharding,
         "optimizer": optimizer, "tag": extra_tag,
@@ -65,39 +62,30 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec.update(status="SKIP", reason=LONG_SKIP[mod])
         return rec
 
-    cfg = cb.get(mod)
-    import dataclasses as _dc
-    if pad_heads:
-        cfg = _dc.replace(cfg, tp_pad_heads=pad_heads)
-    if moe_impl != "dispatch":
-        cfg = _dc.replace(cfg, moe_impl=moe_impl)
-    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
-    plan = sh.ShardPlan(client_granularity=granularity,
-                        state_sharding=state_sharding,
-                        ef_state_dtype=ef_state_dtype)
     t0 = time.time()
     try:
-        with mesh_lib.mesh_context(mesh):
-            if shape.kind == "train":
-                efc = build_lib.default_ef_config(
-                    mesh, plan, method_name=method, compressor_name=compressor,
-                    ratio=ratio, carrier=carrier)
-                fn, specs = build_lib.build_step(cfg, shape, mesh, plan, efc,
-                                                 optimizer_name=optimizer)
-            else:
-                fn, specs = build_lib.build_step(cfg, shape, mesh, plan)
-            lowered = jax.jit(fn).lower(*specs)
+        spec = spec_lib.RunSpec(
+            arch=mod, shape=shape_name, mesh=mesh, carrier=carrier,
+            method=method, compressor=compressor, ratio=ratio,
+            client_granularity=granularity, state_sharding=state_sharding,
+            ef_state_dtype=ef_state_dtype, tp_pad_heads=pad_heads,
+            moe_impl=moe_impl, optimizer=optimizer)
+        from repro.launch.session import Session
+        sess = Session(spec)
+        rec["spec_hash"] = spec.spec_hash()
+        with sess.mesh_context():
+            lowered = sess.lower()
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
 
             mem = compiled.memory_analysis()
             cost = hlo_analysis.cost_analysis_dict(compiled)
-            hlo = hlo_analysis.analyze(compiled.as_text(), mesh.size)
+            hlo = hlo_analysis.analyze(compiled.as_text(), sess.mesh.size)
         rec.update(
             status="OK",
             lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
-            n_devices=mesh.size,
+            n_devices=sess.mesh.size,
             # XLA-reported (while bodies counted ONCE — see hlo_analysis.py):
             xla_flops_loop_once=float(cost.get("flops", 0.0)),
             xla_bytes_loop_once=float(cost.get("bytes accessed", 0.0)),
@@ -125,9 +113,11 @@ def main() -> None:
                     help="arch id (e.g. gemma2-9b); omit with --all")
     ap.add_argument("--shape", default=None, choices=[*cb.INPUT_SHAPES, None])
     ap.add_argument("--all", action="store_true")
-    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="alias for --mesh multi_pod")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multi_pod"])
     ap.add_argument("--carrier", default="dense",
-                    choices=["dense", "sparse", "fused", "quant8", "quant4"])
+                    choices=sorted(spec_lib.CARRIERS))
     ap.add_argument("--method", default="ef21_sgdm")
     ap.add_argument("--compressor", default="block_topk")
     ap.add_argument("--ratio", type=float, default=0.01)
@@ -142,6 +132,7 @@ def main() -> None:
     ap.add_argument("--tag", default="")
     ap.add_argument("--out", default=None, help="JSON output path")
     args = ap.parse_args()
+    mesh = "multi_pod" if args.multi_pod else args.mesh
 
     combos = []
     if args.all:
@@ -155,7 +146,7 @@ def main() -> None:
     results = []
     for a, s in combos:
         rec = run_one(
-            a, s, multi_pod=args.multi_pod, carrier=args.carrier,
+            a, s, mesh=mesh, carrier=args.carrier,
             method=args.method, compressor=args.compressor, ratio=args.ratio,
             granularity=args.granularity, state_sharding=args.state_sharding,
             ef_state_dtype=args.ef_state_dtype, pad_heads=args.pad_heads,

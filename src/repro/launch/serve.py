@@ -1,71 +1,41 @@
-"""Batched serving driver: prefill a prompt batch, then greedy-decode.
+"""Serving driver — a thin flags → RunSpec → Session shim.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
       --batch 4 --prompt-len 128 --decode-steps 32
+
+``Session.serve`` routes prefill/decode through ``launch/build.py``'s
+``build_prefill``/``build_decode`` on the spec's mesh, placing params, batch,
+and cache onto the production shardings (launch/shardings.py) — the old
+driver jitted unsharded lambdas and bypassed the sharding layer entirely.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import base as cb
-from repro.models import model as model_lib
+from repro.launch import spec as spec_lib
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--smoke", action="store_true")
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser("repro.launch.serve")
+    spec_lib.add_flags(ap)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--decode-steps", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+    spec = spec_lib.RunSpec.from_args(args)
 
-    cfg = cb.get_smoke(args.arch) if args.smoke else cb.get(args.arch)
-    rng = jax.random.PRNGKey(args.seed)
-    params = model_lib.init_params(cfg, rng)
+    from repro.launch.session import Session  # defer the jax-heavy import
+    sess = Session(spec)
+    out = sess.serve(batch=args.batch, prompt_len=args.prompt_len,
+                     decode_steps=args.decode_steps)
 
     B, S = args.batch, args.prompt_len
-    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
-    batch = {"tokens": tokens}
-    n_prefix = 0
-    if cfg.frontend is not None:
-        n_prefix = max(cfg.frontend_tokens, 8)
-        batch["prefix_embeds"] = jnp.zeros((B, n_prefix, cfg.d_model),
-                                           jnp.bfloat16)
-
-    max_seq = n_prefix + S + args.decode_steps
-    cache = model_lib.init_cache(cfg, B, max_seq)
-
-    prefill = jax.jit(lambda p, b, c: model_lib.prefill(cfg, p, b, c))
-    decode = jax.jit(lambda p, c, t, q: model_lib.decode_step(cfg, p, c, t, q))
-
-    t0 = time.time()
-    logits, cache = prefill(params, batch, cache)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    print(f"prefill {B}×{S}: {t_prefill:.2f}s "
-          f"({B*S/t_prefill:.0f} tok/s)")
-
-    tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
-    out_tokens = [tok]
-    t0 = time.time()
-    for i in range(args.decode_steps):
-        pos = jnp.asarray(n_prefix + S + i, jnp.int32)
-        logits, cache = decode(params, cache, tok, pos)
-        tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    print(f"decode {args.decode_steps} steps: {dt:.2f}s "
-          f"({args.decode_steps*B/dt:.1f} tok/s)")
-    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"prefill {B}×{S}: {out['prefill_s']:.2f}s "
+          f"({out['prefill_tok_s']:.0f} tok/s)")
+    print(f"decode {args.decode_steps} steps: {out['decode_s']:.2f}s "
+          f"({out['decode_tok_s']:.1f} tok/s)")
     print("sample generations (token ids):")
-    for row in jax.device_get(gen)[:2]:
+    for row in out["tokens"][:2]:
         print("  ", row[:16], "...")
 
 

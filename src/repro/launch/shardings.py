@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, InputShape
+from repro.data import pipeline as pipe_lib
 from repro.launch import mesh as mesh_lib
 from repro.models import model as model_lib
 
@@ -193,14 +194,16 @@ def batch_specs(cfg: ArchConfig, mesh, shape: InputShape, kind: str) -> Dict:
     if kind == "train":
         out_shapes["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
     if cfg.frontend is not None and kind in ("train", "prefill"):
-        nt = max(cfg.frontend_tokens, 64)
+        # the production-spec padding of the shared prefix-embed rule
+        # (data/pipeline.py — drivers pad the same batches to PREFIX_PAD_MIN)
+        nt = pipe_lib.prefix_token_count(cfg, pad_to=pipe_lib.PREFIX_PAD_SPEC)
         out_shapes["prefix_embeds"] = jax.ShapeDtypeStruct(
             (B, nt, cfg.d_model), jnp.bfloat16)
     return _sds(out_shapes, batch_pspecs(cfg, mesh, kind, B), mesh)
 
 
 def cache_specs(cfg: ArchConfig, mesh, shape: InputShape) -> Dict:
-    nt = max(cfg.frontend_tokens, 64) if cfg.frontend is not None else 0
+    nt = pipe_lib.prefix_token_count(cfg, pad_to=pipe_lib.PREFIX_PAD_SPEC)
     shapes = jax.eval_shape(
         lambda: model_lib.init_cache(cfg, shape.global_batch,
                                      shape.seq_len + nt))

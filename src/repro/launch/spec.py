@@ -1,0 +1,537 @@
+"""RunSpec: the single declarative, serializable name of one experiment.
+
+The paper's point is that one small knob (Polyak momentum on EF21) changes the
+complexity class — so the core workload of this repo is sweeping the
+(method × compressor × carrier × mesh × arch) grid. A ``RunSpec`` names one
+cell of that grid *completely*: arch + input geometry, mesh + ShardPlan,
+method/compressor/carrier (η, ratio, state dtype), optimizer + lr, data
+config, checkpoint policy, and seed. Every driver (launch/train.py,
+launch/serve.py, launch/dryrun.py), example, and benchmark constructs a
+RunSpec and hands it to :class:`repro.launch.session.Session` — there is no
+other assembly path.
+
+Design constraints:
+
+* **Import-light.** This module imports NO jax (and configs/base.py, the arch
+  registry it reads, stays jax-free too), so sweep tooling can emit spec
+  files via ``python -m repro.launch.spec --print`` without paying a jax
+  import, and the validation below runs in any process. The name/flag
+  universes that logically live in jax-importing registries (methods,
+  compressors, carriers, optimizers, mesh geometry, carrier degradation
+  rules) are mirrored here as pure data; ``tests/test_spec.py`` asserts the
+  mirrors equal the registries, so drift fails tier-1 loudly.
+* **Fail at construction, not mid-driver.** ``__post_init__`` validates every
+  field, including the carrier execution plan: a ``--carrier fused`` spec
+  whose (method, compressor) would silently degrade to the unfused dense
+  plan is a ``ValueError`` the moment the spec exists (mirroring the
+  ``plan_with_reason`` hard error in launch/build.py, which still runs as the
+  authoritative check when the EFConfig is built).
+* **Stable serialization.** ``to_json``/``from_json`` round-trip exactly
+  (``RunSpec.from_json(s.to_json()) == s``). The schema is versioned
+  (``SCHEMA_VERSION``) and ``from_json`` REJECTS unknown keys — a spec
+  written by a newer schema never silently drops experiment-defining fields.
+  New fields must ship with defaults (additive evolution); renames/removals
+  bump ``SCHEMA_VERSION``. ``results/specs/*.json`` holds golden fixtures
+  that fail tier-1 on any drift.
+* **Checkpoint compatibility.** ``spec_hash()`` hashes the canonical JSON of
+  every experiment-defining field (checkpoint *policy* — ckpt_dir/ckpt_every
+  — is excluded, so moving a checkpoint directory never invalidates it).
+  ``Session.save`` embeds spec + hash in checkpoint meta; ``Session.resume``
+  refuses a checkpoint written under a different hash unless overridden.
+
+See DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.configs import base as cb
+
+SCHEMA_VERSION = 1
+
+# ---------------------------------------------------------------------------
+# jax-free mirrors of the jax-importing registries (sync-tested in
+# tests/test_spec.py::test_name_universes_match_registries)
+# ---------------------------------------------------------------------------
+
+METHODS = frozenset({
+    "ef21_sgdm_ideal", "ef21_sgd", "ef21_sgdm", "ef21_sgd2m", "ef21_sgdm_abs",
+    "ef21_storm", "ef14_sgd", "sgdm", "sgd", "neolithic",
+})
+COMPRESSORS = frozenset({
+    "identity", "topk", "randk", "block_topk", "hard_threshold", "natural",
+    "rank1", "block_quant",
+})
+CARRIERS = frozenset({"dense", "sparse", "fused", "quant8", "quant4"})
+OPTIMIZERS = frozenset({"sgd", "adamw"})
+
+MESHES = ("smoke", "pod", "multi_pod")
+# geometry mirror of launch/mesh.py (PROD_DATA/PROD_MODEL/PROD_PODS)
+MESH_GEOM: Dict[str, Dict[str, int]] = {
+    "smoke": {"data": 1, "model": 1},
+    "pod": {"data": 16, "model": 16},
+    "multi_pod": {"pod": 2, "data": 16, "model": 16},
+}
+
+GRANULARITIES = ("group", "pod")
+STATE_SHARDINGS = ("client", "zero")
+EF_STATE_DTYPES = (None, "bfloat16")
+MOE_IMPLS = ("dispatch", "dense")
+
+# methods with an ``eta`` field — the spec's eta drives ALL of them (a spec
+# that records η=0.3 must never run a class default instead; method_kw can
+# still override). Mirror of {cls has 'eta' field} — sync-tested.
+ETA_METHODS = frozenset({"ef21_sgdm", "ef21_sgd2m", "sgdm", "ef21_storm",
+                         "ef21_sgdm_abs", "ef21_sgdm_ideal"})
+
+# attribute mirrors used by plan_preview (sync-tested against
+# Method.wire_is_msg / Compressor.needs_rng / the carriers' own support sets)
+WIRE_IS_NOT_MSG = frozenset({"ef21_sgdm_ideal", "ef21_sgdm_abs", "neolithic"})
+NEEDS_RNG = frozenset({"randk", "natural"})
+SPARSE_WIRE_OK = frozenset({"topk", "block_topk"})
+FUSED_METHODS = frozenset({"ef21_sgdm", "ef21_sgd"})
+FUSED_COMPRESSORS = frozenset({"block_topk"})
+
+
+def plan_preview(method: str, compressor: str, carrier: str
+                 ) -> Tuple[str, str]:
+    """Pure-python mirror of ``Carrier.plan_with_reason`` (core/carriers.py)
+    by name: (plan, reason) where plan ∈ {'dense','wire','fused'} and reason
+    is non-empty iff the carrier degraded to the always-correct dense plan.
+    η is always a static float in a RunSpec, so the fused carrier's
+    traced-η degradation can never trigger here. The plan (and reason
+    emptiness) is asserted equal to the real carriers over the whole
+    (method × compressor × carrier) grid in tests/test_spec.py."""
+    if carrier == "dense":
+        return "dense", ""
+    if method in WIRE_IS_NOT_MSG:
+        return "dense", (
+            f"method {method!r} transmits a transform of c "
+            "(wire_is_msg=False); a non-dense wire cannot ship it")
+    if carrier == "sparse":
+        if compressor not in SPARSE_WIRE_OK:
+            return "dense", (
+                f"compressor {compressor!r} has no deterministic fixed-size "
+                "(values, indices) wire")
+        return "wire", ""
+    if carrier == "fused":
+        if method not in FUSED_METHODS:
+            return "dense", ("the fused kernel implements the EF21-SGD(M) "
+                             f"client chain only, not {method!r}")
+        if compressor not in FUSED_COMPRESSORS:
+            return "dense", ("the fused kernel compresses with BlockTopK "
+                             f"only, not {compressor!r}")
+        return "fused", ""
+    # quant8 / quant4
+    if compressor in NEEDS_RNG:
+        return "dense", (
+            f"compressor {compressor!r} draws randomness inside encode; the "
+            "quantized wire ships deterministic compressors only")
+    return "wire", ""
+
+
+def _known_arch(arch: str) -> bool:
+    return arch in cb.ARCH_ALIASES or arch in cb.ARCH_IDS
+
+
+_JSON_SCALARS = (str, int, float, bool, type(None))
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """The full, JSON-round-trippable name of one experiment. Frozen; every
+    field is validated in ``__post_init__`` so an invalid spec never exists.
+
+    ``shape`` selects a *named* production InputShape (configs/base.py) for
+    ``Session.lower()`` / the dry-run; interactive training and serving use
+    the explicit (``seq_len``, ``global_batch``) geometry. ``clients`` is the
+    number of emulated EF clients on the single-device (smoke-mesh) path; on
+    multi-device meshes n is derived from mesh × client_granularity exactly
+    as DESIGN.md §3 maps clients onto data-parallel groups."""
+
+    version: int = SCHEMA_VERSION
+
+    # -- experiment identity -------------------------------------------------
+    arch: str = "smollm-360m"
+    smoke: bool = False                    # reduced per-arch config (CPU-sized)
+    shape: Optional[str] = None            # named InputShape for lower()/dryrun
+    seq_len: int = 256
+    global_batch: int = 16
+
+    # -- mesh / placement (ShardPlan) ----------------------------------------
+    mesh: str = "smoke"                    # 'smoke' | 'pod' | 'multi_pod'
+    client_granularity: str = "group"      # ShardPlan: 'group' | 'pod'
+    state_sharding: str = "client"         # ShardPlan: 'client' | 'zero'
+    ef_state_dtype: Optional[str] = None   # ShardPlan: None | 'bfloat16'
+    clients: int = 8                       # emulated clients on 1-device mesh
+
+    # -- method / transport --------------------------------------------------
+    method: str = "ef21_sgdm"
+    compressor: str = "block_topk"
+    ratio: float = 0.05
+    eta: float = 0.1
+    carrier: str = "dense"
+    method_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    compressor_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- arch overrides (dry-run sweep knobs, applied to the ArchConfig) -----
+    tp_pad_heads: int = 0
+    moe_impl: str = "dispatch"
+
+    # -- optimizer -----------------------------------------------------------
+    optimizer: str = "sgd"
+    lr: float = 0.5
+
+    # -- data ----------------------------------------------------------------
+    heterogeneity: float = 0.5
+    seed: int = 0
+
+    # -- checkpoint policy (excluded from spec_hash) -------------------------
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0                    # 0 → save only at end of train()
+
+    # ------------------------------------------------------------------ valid
+    def __post_init__(self):
+        errs: List[str] = []
+        if self.version != SCHEMA_VERSION:
+            errs.append(f"schema version {self.version} unsupported "
+                        f"(this build reads v{SCHEMA_VERSION})")
+        if not _known_arch(self.arch):
+            errs.append(f"unknown arch {self.arch!r}; have "
+                        f"{sorted(cb.ARCH_ALIASES)}")
+        if self.shape is not None and self.shape not in cb.INPUT_SHAPES:
+            errs.append(f"unknown shape {self.shape!r}; have "
+                        f"{sorted(cb.INPUT_SHAPES)}")
+        if self.mesh not in MESHES:
+            errs.append(f"unknown mesh {self.mesh!r}; have {list(MESHES)}")
+        for field, val, allowed in [
+                ("client_granularity", self.client_granularity, GRANULARITIES),
+                ("state_sharding", self.state_sharding, STATE_SHARDINGS),
+                ("ef_state_dtype", self.ef_state_dtype, EF_STATE_DTYPES),
+                ("moe_impl", self.moe_impl, MOE_IMPLS)]:
+            if val not in allowed:
+                errs.append(f"{field}={val!r} not in {list(allowed)}")
+        for field, val, universe in [
+                ("method", self.method, METHODS),
+                ("compressor", self.compressor, COMPRESSORS),
+                ("carrier", self.carrier, CARRIERS),
+                ("optimizer", self.optimizer, OPTIMIZERS)]:
+            if val not in universe:
+                errs.append(f"unknown {field} {val!r}; have {sorted(universe)}")
+        if self.seq_len <= 0:
+            errs.append(f"seq_len must be positive, got {self.seq_len}")
+        if self.global_batch <= 0:
+            errs.append(f"global_batch must be positive, got "
+                        f"{self.global_batch}")
+        if self.clients < 1:
+            errs.append(f"clients must be >= 1, got {self.clients}")
+        if not 0.0 < self.eta <= 1.0:
+            errs.append(f"eta must be in (0, 1], got {self.eta}")
+        if not 0.0 < self.ratio <= 1.0:
+            errs.append(f"ratio must be in (0, 1], got {self.ratio}")
+        if not 0.0 <= self.heterogeneity <= 1.0:
+            errs.append(f"heterogeneity must be in [0, 1], got "
+                        f"{self.heterogeneity}")
+        if self.tp_pad_heads < 0:
+            errs.append(f"tp_pad_heads must be >= 0, got {self.tp_pad_heads}")
+        if self.ckpt_every < 0:
+            errs.append(f"ckpt_every must be >= 0, got {self.ckpt_every}")
+        for kw_name, kw in [("method_kw", self.method_kw),
+                            ("compressor_kw", self.compressor_kw)]:
+            if not isinstance(kw, dict) or not all(
+                    isinstance(k, str) and isinstance(v, _JSON_SCALARS)
+                    for k, v in kw.items()):
+                errs.append(f"{kw_name} must map str keys to JSON scalars, "
+                            f"got {kw!r}")
+        # the (batch % clients) divisibility the runtime would assert
+        # mid-step — checked for BOTH batch geometries a spec can run: the
+        # interactive train geometry (global_batch, Session.train) and,
+        # when set, the named dry-run shape (Session.lower)
+        shape_ok = self.shape is None or self.shape in cb.INPUT_SHAPES
+        n = self.n_clients_preview() if self.mesh in MESHES else 1
+        batches = [self.global_batch]
+        if shape_ok and self.shape is not None \
+                and self.train_kind() == "train":
+            batches.append(self.train_batch())
+        for batch in batches:
+            if batch > 0 and n >= 1 and batch % n != 0:
+                errs.append(f"global batch {batch} not divisible by the "
+                            f"{n} EF clients of mesh={self.mesh!r} "
+                            f"granularity={self.client_granularity!r}")
+        # the fused-misconfig hard error, at construction time (the same check
+        # runs authoritatively against the real carrier in launch/build.py)
+        if self.carrier in CARRIERS and self.method in METHODS \
+                and self.compressor in COMPRESSORS:
+            plan, reason = self.plan()
+            if self.carrier == "fused" and plan != "fused":
+                errs.append(
+                    "carrier='fused' would silently run the UNFUSED dense "
+                    f"plan: {reason}. Pick carrier='dense' or 'sparse' for "
+                    f"method={self.method!r} compressor={self.compressor!r}")
+        if errs:
+            raise ValueError("invalid RunSpec:\n  - " + "\n  - ".join(errs))
+
+    # -------------------------------------------------------------- previews
+    def plan(self) -> Tuple[str, str]:
+        """(execution plan, degradation reason) for this spec's carrier —
+        see plan_preview."""
+        return plan_preview(self.method, self.compressor, self.carrier)
+
+    def train_kind(self) -> str:
+        """'train' | 'prefill' | 'decode' of the named shape (custom
+        geometry is always a train shape)."""
+        if self.shape is not None:
+            return cb.INPUT_SHAPES[self.shape].kind
+        return "train"
+
+    def train_batch(self) -> int:
+        if self.shape is not None:
+            return cb.INPUT_SHAPES[self.shape].global_batch
+        return self.global_batch
+
+    def n_clients_preview(self) -> int:
+        """The paper's n for this spec, computable without jax: the emulated
+        client count on the 1-device smoke mesh, else derived from mesh
+        geometry × client granularity (DESIGN.md §3)."""
+        if self.mesh == "smoke":
+            return self.clients
+        geom = MESH_GEOM[self.mesh]
+        if self.client_granularity == "pod":
+            return geom.get("pod", 1)
+        n = 1
+        for ax in ("pod", "data"):
+            n *= geom.get(ax, 1)
+        return n
+
+    # --------------------------------------------------------- serialization
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunSpec":
+        if "version" not in d:
+            raise ValueError("spec dict has no 'version' key — refusing to "
+                             "guess the schema")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(
+                f"unknown RunSpec keys {unknown} (schema v{d['version']}, "
+                f"this build reads v{SCHEMA_VERSION}) — refusing to silently "
+                "drop experiment-defining fields")
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunSpec":
+        return cls.from_dict(json.loads(s))
+
+    def spec_hash(self) -> str:
+        """Hash of the experiment-defining fields, in SPARSE canonical form:
+        only fields that differ from their defaults are hashed, and
+        ``version`` / checkpoint policy (ckpt_dir, ckpt_every) are excluded.
+        Consequences: moving a ckpt dir never invalidates a checkpoint, and
+        the documented additive schema evolution (new field + default) keeps
+        every existing checkpoint resumable — an old hash and a new one
+        agree whenever the explicitly-set fields agree. The flip side is
+        that changing a field's DEFAULT silently preserves hashes, so
+        semantic default changes must bump SCHEMA_VERSION (which gates
+        ``from_dict`` before any hash comparison happens)."""
+        d = self.to_dict()
+        base = dataclasses.asdict(_DEFAULT) if _DEFAULT is not None else {}
+        sparse = {k: v for k, v in d.items()
+                  if k not in ("version", "ckpt_dir", "ckpt_every")
+                  and v != base.get(k)}
+        return hashlib.sha256(
+            json.dumps(sparse, sort_keys=True).encode()).hexdigest()[:16]
+
+    def diff(self, other: "RunSpec") -> List[str]:
+        """Human-readable list of differing fields (for resume refusals)."""
+        out = []
+        for f in dataclasses.fields(self):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            if a != b:
+                out.append(f"{f.name}: {a!r} != {b!r}")
+        return out
+
+    # ------------------------------------------------------------------ flags
+    def to_flags(self) -> List[str]:
+        """CLI flags reconstructing this spec:
+        ``RunSpec.from_flags(s.to_flags()) == s`` (tier-1 tested)."""
+        default = _DEFAULT
+        out: List[str] = []
+        for flag, field, kind in _FLAGS:
+            val = getattr(self, field)
+            if val == getattr(default, field):
+                continue
+            if kind == "bool":
+                if val:
+                    out.append(flag)
+            elif kind == "json":
+                out.extend([flag, json.dumps(val, sort_keys=True)])
+            else:
+                out.extend([flag, str(val)])
+        return out
+
+    @classmethod
+    def from_flags(cls, argv: Optional[List[str]] = None) -> "RunSpec":
+        ap = argparse.ArgumentParser(add_help=False)
+        add_flags(ap)
+        return cls.from_args(ap.parse_args(argv))
+
+    @classmethod
+    def from_args(cls, args: argparse.Namespace) -> "RunSpec":
+        """Build a spec from parsed flags. ``--spec FILE`` (when present in
+        the namespace) loads a JSON spec as the base; explicitly passed flags
+        override it (unset flags parse as None and never override)."""
+        base = cls()
+        spec_file = getattr(args, "spec_file", None)
+        if spec_file:
+            with open(spec_file) as f:
+                base = cls.from_json(f.read())
+        overrides = {}
+        for _, field, kind in _FLAGS:
+            val = getattr(args, field, None)
+            if val is None:
+                continue
+            overrides[field] = val
+        return dataclasses.replace(base, **overrides) if overrides else base
+
+
+_DEFAULT = None  # set after class definition (RunSpec() self-validates)
+
+# (flag, field, kind) — dest is always the field name, so argparse namespaces
+# map 1:1 onto RunSpec fields
+_FLAGS: List[Tuple[str, str, str]] = [
+    ("--arch", "arch", "str"),
+    ("--smoke", "smoke", "bool"),
+    ("--shape", "shape", "str"),
+    ("--seq", "seq_len", "int"),
+    ("--global-batch", "global_batch", "int"),
+    ("--mesh", "mesh", "str"),
+    ("--granularity", "client_granularity", "str"),
+    ("--state-sharding", "state_sharding", "str"),
+    ("--ef-state-dtype", "ef_state_dtype", "str"),
+    ("--clients", "clients", "int"),
+    ("--method", "method", "str"),
+    ("--compressor", "compressor", "str"),
+    ("--ratio", "ratio", "float"),
+    ("--eta", "eta", "float"),
+    ("--carrier", "carrier", "str"),
+    ("--method-kw", "method_kw", "json"),
+    ("--compressor-kw", "compressor_kw", "json"),
+    ("--tp-pad-heads", "tp_pad_heads", "int"),
+    ("--moe-impl", "moe_impl", "str"),
+    ("--optimizer", "optimizer", "str"),
+    ("--lr", "lr", "float"),
+    ("--heterogeneity", "heterogeneity", "float"),
+    ("--seed", "seed", "int"),
+    ("--ckpt-dir", "ckpt_dir", "str"),
+    ("--ckpt-every", "ckpt_every", "int"),
+]
+
+_FLAG_HELP = {
+    "--smoke": "reduced per-arch config (CPU-sized)",
+    "--shape": "named production InputShape for lower()/dryrun",
+    "--carrier": "wire carrier for the EF sync (core/carriers.py): dense "
+                 "all-reduce, sparse (values,indices) all-gather, the fused "
+                 "Pallas client update, or block-quantized wires",
+    "--clients": "emulated EF clients on the single-device mesh",
+    "--method-kw": "JSON dict of extra Method kwargs (e.g. "
+                   "'{\"gamma\": 0.01}')",
+    "--compressor-kw": "JSON dict of extra Compressor kwargs (e.g. "
+                       "'{\"block\": 1024, \"k_per_block\": 16}')",
+}
+
+_FLAG_CHOICES = {
+    "--shape": sorted(cb.INPUT_SHAPES),
+    "--mesh": list(MESHES),
+    "--granularity": list(GRANULARITIES),
+    "--state-sharding": list(STATE_SHARDINGS),
+    "--ef-state-dtype": ["bfloat16"],
+    "--method": sorted(METHODS),
+    "--compressor": sorted(COMPRESSORS),
+    "--carrier": sorted(CARRIERS),
+    "--moe-impl": list(MOE_IMPLS),
+    "--optimizer": sorted(OPTIMIZERS),
+}
+
+_TYPES = {"int": int, "float": float, "str": str}
+
+
+def add_flags(ap: argparse.ArgumentParser) -> None:
+    """Register the RunSpec flag surface on a driver's parser. All defaults
+    are None so ``RunSpec.from_args`` can distinguish 'unset' from an
+    explicit value (needed for --spec overrides and resume handling)."""
+    ap.add_argument("--spec", dest="spec_file", default=None, metavar="FILE",
+                    help="JSON RunSpec file used as the base; explicit flags "
+                         "override its fields")
+    for flag, field, kind in _FLAGS:
+        kw: Dict[str, Any] = {"dest": field, "default": None,
+                              "help": _FLAG_HELP.get(flag)}
+        if kind == "bool":
+            kw["action"] = "store_true"
+            # --no-<flag> lets a CLI override a truthy bool in a --spec
+            # file back to False (None stays 'unset' → file/default wins)
+            ap.add_argument(flag.replace("--", "--no-", 1), dest=field,
+                            action="store_false", default=None,
+                            help=f"negate {flag}")
+        elif kind == "json":
+            kw["type"] = json.loads
+        else:
+            kw["type"] = _TYPES[kind]
+            if flag in _FLAG_CHOICES:
+                kw["choices"] = _FLAG_CHOICES[flag]
+        ap.add_argument(flag, **kw)
+
+
+_DEFAULT = RunSpec()
+
+
+def explicit_fields(args: argparse.Namespace,
+                    ignore: Tuple[str, ...] = ()) -> List[str]:
+    """RunSpec field names the user EXPLICITLY set on the command line (every
+    flag defaults to None, so non-None means passed — an explicit flag equal
+    to the field's default still counts). Drivers use this to decide whether
+    a ``--resume`` should enforce the flag-built spec against the
+    checkpoint's embedded one."""
+    out = [field for _, field, _ in _FLAGS
+           if field not in ignore and getattr(args, field, None) is not None]
+    if getattr(args, "spec_file", None):
+        out.append("spec_file")
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    """Emit RunSpec JSON without importing jax — the sweep-tooling entry:
+
+      python -m repro.launch.spec --print --arch gemma2-9b --carrier sparse
+      python -m repro.launch.spec --out sweep/cell_017.json --method ef21_sgd
+    """
+    ap = argparse.ArgumentParser(
+        "repro.launch.spec",
+        description="validate and print/write a RunSpec as canonical JSON")
+    add_flags(ap)
+    ap.add_argument("--print", dest="do_print", action="store_true",
+                    help="print the canonical JSON to stdout")
+    ap.add_argument("--out", default=None, help="write the JSON to a file")
+    args = ap.parse_args(argv)
+    spec = RunSpec.from_args(args)
+    text = spec.to_json(indent=1)
+    if args.out:
+        import os
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if args.do_print or not args.out:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,18 @@
-"""End-to-end training driver: EF21-SGDM distributed training of any --arch.
+"""Training driver — a thin flags → RunSpec → Session shim.
 
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
       --steps 200 --clients 8 --method ef21_sgdm --compressor block_topk
 
---smoke uses the reduced per-arch config on the local device(s) (the CPU
-container path); without it, the full config runs on whatever mesh the host set
-exposes (real TPU). The EF clients are emulated faithfully either way — the same
-Method/ef_round code runs on the production mesh via launch/build.py.
+All assembly (mesh, ShardPlan, EFConfig, data pipeline, jitted step,
+checkpointing) lives in launch/session.py behind the RunSpec
+(launch/spec.py); this module only parses flags and narrates. ``--spec
+FILE`` loads a serialized RunSpec instead of (or as a base for) flags.
+
+``--resume`` restores the FULL training state (params + opt_state + ef_state
++ data cursor) from the latest checkpoint under --ckpt-dir; the RunSpec
+embedded in the checkpoint is the source of truth when no spec flags are
+passed, and a mismatching flag-built spec is refused unless
+--allow-spec-mismatch (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -14,125 +20,81 @@ import argparse
 import dataclasses
 import json
 import os
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.checkpoint import checkpoint as ckpt_lib
-from repro.configs import base as cb
-from repro.core import distributed as dist
-from repro.data.pipeline import DataConfig, SyntheticTokens
-from repro.launch import build as build_lib
-from repro.launch import mesh as mesh_lib
-from repro.launch import shardings as sh
-from repro.models import model as model_lib
-from repro.optim import optimizer as opt_lib
+from repro.launch import spec as spec_lib
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--smoke", action="store_true",
-                    help="reduced config (CPU-sized)")
-    ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--clients", type=int, default=8)
-    ap.add_argument("--global-batch", type=int, default=16)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--lr", type=float, default=0.5)
-    ap.add_argument("--eta", type=float, default=0.1)
-    ap.add_argument("--method", default="ef21_sgdm")
-    ap.add_argument("--compressor", default="block_topk")
-    ap.add_argument("--ratio", type=float, default=0.05)
-    ap.add_argument("--optimizer", default="sgd")
-    ap.add_argument("--carrier", default="dense",
-                    choices=["dense", "sparse", "fused", "quant8", "quant4"],
-                    help="wire carrier for the EF sync (core/carriers.py): "
-                         "dense all-reduce, sparse (values,indices) "
-                         "all-gather, the fused Pallas client update, or "
-                         "block-quantized wires (int8 / packed-uint4 "
-                         "mantissas + per-block scales)")
-    ap.add_argument("--b-init", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--resume", action="store_true")
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser("repro.launch.train")
+    spec_lib.add_flags(ap)
+    ap.add_argument("--steps", type=int, default=200,
+                    help="train until this ABSOLUTE step count")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore full state from the latest ckpt in "
+                         "--ckpt-dir (spec embedded there wins unless other "
+                         "spec flags are passed)")
+    ap.add_argument("--allow-spec-mismatch", action="store_true",
+                    help="resume even when the flag-built spec differs from "
+                         "the checkpoint's")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default=None)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+    spec = spec_lib.RunSpec.from_args(args)
 
-    cfg = cb.get_smoke(args.arch) if args.smoke else cb.get(args.arch)
-    n = args.clients
-    assert args.global_batch % n == 0
+    from repro.launch.session import Session  # defer the jax-heavy import
 
-    rng = jax.random.PRNGKey(args.seed)
-    params = model_lib.init_params(cfg, rng)
+    if args.resume:
+        if not spec.ckpt_dir:
+            ap.error("--resume needs --ckpt-dir")
+        # bare `--ckpt-dir D --resume` reconstructs the run purely from the
+        # checkpoint's embedded RunSpec; any EXPLICITLY passed spec flag
+        # (even one equal to a default — flags parse as None when unset)
+        # enforces the flag-built spec against the checkpoint's hash
+        explicit = spec_lib.explicit_fields(
+            args, ignore=("ckpt_dir", "ckpt_every"))
+        try:
+            if args.spec_file:
+                # an explicit spec FILE is the full experiment definition
+                sess = Session.resume(
+                    spec.ckpt_dir, spec=spec,
+                    allow_spec_mismatch=args.allow_spec_mismatch)
+            else:
+                # explicit flags layer ONTO the checkpoint's embedded spec
+                # ('--resume --eta 0.2' = same run, new eta — never
+                # 'defaults plus eta')
+                overrides = {f: getattr(args, f) for f in explicit}
+                sess = Session.resume(
+                    spec.ckpt_dir, overrides=overrides or None,
+                    allow_spec_mismatch=args.allow_spec_mismatch)
+            print(f"resumed {sess.spec.arch} from {spec.ckpt_dir} "
+                  f"@ step {sess.step}")
+        except FileNotFoundError:
+            # idempotent-restart idiom: wrappers always pass --resume; an
+            # empty/absent ckpt dir means first launch → start from scratch
+            print(f"no checkpoint under {spec.ckpt_dir}; starting fresh")
+            sess = Session(spec)
+        # checkpoint POLICY is runtime-owned (excluded from spec_hash): an
+        # explicit --ckpt-every on the resume command line applies even when
+        # the embedded spec wins everything else
+        if args.ckpt_every is not None:
+            sess.spec = dataclasses.replace(sess.spec,
+                                            ckpt_every=args.ckpt_every)
+    else:
+        sess = Session(spec)
 
-    pipe = SyntheticTokens(DataConfig(
-        vocab_size=cfg.vocab_size, seq_len=args.seq,
-        global_batch=args.global_batch, seed=args.seed, dp_groups=n))
-
-    def loss_fn(p, b):
-        return model_lib.train_loss(cfg, p, b)
-
-    def add_frontend(b):
-        if cfg.frontend is not None:
-            nt = max(cfg.frontend_tokens, 8)
-            b = dict(b)
-            b["prefix_embeds"] = jnp.zeros(
-                (b["tokens"].shape[0], nt, cfg.d_model), jnp.bfloat16)
-        return b
-
-    plan = sh.ShardPlan()
-    mesh = mesh_lib.make_smoke_mesh()
-    efc = build_lib.default_ef_config(
-        mesh, plan, method_name=args.method, compressor_name=args.compressor,
-        ratio=args.ratio, eta=args.eta, carrier=args.carrier)
-    from repro.core import carriers as carrier_lib
-    ex_plan, reason = carrier_lib.make(args.carrier).plan_with_reason(
-        efc.method, args.eta)
-    print(f"carrier={args.carrier} plan={ex_plan}"
+    # printed from the spec the session ACTUALLY runs (a bare --resume
+    # adopts the checkpoint's embedded spec, not the flag defaults)
+    plan, reason = sess.spec.plan()
+    print(f"carrier={sess.spec.carrier} plan={plan}"
           + (f" (degraded: {reason})" if reason else ""))
-    opt = opt_lib.make(args.optimizer, lr=args.lr)
-    step_fn = jax.jit(dist.make_train_step(loss_fn, efc, opt, n))
 
-    # Alg 1 line 2: v⁰ᵢ = g⁰ᵢ = (1/B_init)Σⱼ ∇fᵢ(x⁰, ξ⁰ᵢⱼ)
-    b0 = add_frontend(pipe.batch(0))
-    _, _, g0 = dist.per_client_value_and_grad(loss_fn, params, b0, n)
-    ef_state = dist.init_ef_state(efc, params, n, init_grads=g0)
-    opt_state = opt.init(params)
-    start = 0
-
-    if args.ckpt_dir and args.resume:
-        path = ckpt_lib.latest(args.ckpt_dir)
-        if path:
-            params, meta = ckpt_lib.restore(path, params)
-            start = meta["step"]
-            print(f"resumed from {path} @ step {start}")
-
-    history = []
-    t0 = time.time()
-    for step in range(start, args.steps):
-        batch = add_frontend(pipe.batch(step))
-        params, opt_state, ef_state, m = step_fn(
-            params, opt_state, ef_state, batch,
-            jax.random.fold_in(rng, step), step)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            loss = float(m["loss"])
-            history.append({"step": step, "loss": loss,
-                            "g_norm": float(m["g_norm"])})
-            print(f"step {step:5d} loss {loss:8.4f} "
-                  f"g_norm {float(m['g_norm']):.3e} "
-                  f"({(time.time()-t0)/max(step-start+1,1):.2f}s/step)",
-                  flush=True)
-    if args.ckpt_dir:
-        ckpt_lib.save(os.path.join(args.ckpt_dir,
-                                   f"step_{args.steps:08d}.npz"),
-                      params, step=args.steps)
-        print(f"saved checkpoint @ {args.steps}")
+    sess.train(args.steps, log_every=args.log_every, verbose=True)
+    if sess.spec.ckpt_dir:
+        print(f"saved checkpoint @ {sess.step}")
     if args.metrics_out:
         os.makedirs(os.path.dirname(args.metrics_out) or ".", exist_ok=True)
         with open(args.metrics_out, "w") as f:
-            json.dump(history, f, indent=1)
+            json.dump(sess.history, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,273 @@
+"""Spec-layer tests (launch/spec.py): the jax-free mirrors stay in sync with
+the jax-importing registries, JSON round-trips are identity across the
+supported grid, validation fails at construction, and the golden fixtures
+under results/specs/ fail loudly on any schema drift."""
+import dataclasses
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import base as cb
+from repro.launch import spec as spec_lib
+from repro.launch.spec import RunSpec
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# mirror ↔ registry sync (the price of a jax-free spec layer)
+# ---------------------------------------------------------------------------
+
+def test_name_universes_match_registries():
+    from repro.core import carriers as carrier_lib
+    from repro.core import compressors as comp_lib
+    from repro.core import ef as ef_lib
+    from repro.optim import optimizer as opt_lib
+    assert spec_lib.METHODS == set(ef_lib.REGISTRY)
+    assert spec_lib.COMPRESSORS == set(comp_lib.REGISTRY)
+    assert spec_lib.CARRIERS == set(carrier_lib.REGISTRY)
+    assert spec_lib.OPTIMIZERS == set(opt_lib.REGISTRY)
+
+
+def test_mesh_geometry_matches_mesh_module():
+    from repro.launch import mesh as mesh_lib
+    assert spec_lib.MESH_GEOM["pod"] == {"data": mesh_lib.PROD_DATA,
+                                         "model": mesh_lib.PROD_MODEL}
+    assert spec_lib.MESH_GEOM["multi_pod"] == {
+        "pod": mesh_lib.PROD_PODS, "data": mesh_lib.PROD_DATA,
+        "model": mesh_lib.PROD_MODEL}
+
+
+def test_attribute_mirrors_match_method_and_compressor_classes():
+    import dataclasses as dc
+
+    from repro.core import compressors as comp_lib
+    from repro.core import ef as ef_lib
+    for name, cls in ef_lib.REGISTRY.items():
+        assert (name in spec_lib.WIRE_IS_NOT_MSG) == (not cls().wire_is_msg), name
+        has_eta = "eta" in {f.name for f in dc.fields(cls)}
+        assert (name in spec_lib.ETA_METHODS) == has_eta, name
+    for name, cls in comp_lib.REGISTRY.items():
+        assert (name in spec_lib.NEEDS_RNG) == cls().needs_rng, name
+
+
+def test_spec_eta_drives_every_eta_bearing_method():
+    """A spec that records η must never run a class default instead — incl.
+    the abs/ideal variants whose defaults differ from the spec default."""
+    from repro.launch import session as session_lib
+    for m in sorted(spec_lib.ETA_METHODS):
+        method = session_lib.make_method(
+            RunSpec(method=m, compressor="identity", eta=0.33))
+        assert method.eta == 0.33, m
+    # method_kw still overrides
+    method = session_lib.make_method(RunSpec(
+        method="ef21_sgdm", eta=0.33, method_kw={"eta": 0.5}))
+    assert method.eta == 0.5
+
+
+def test_plan_preview_matches_real_carriers_over_grid():
+    """The jax-free plan_preview must agree with Carrier.plan_with_reason for
+    every (method × compressor × carrier) cell: same plan, and degradation
+    reasons are non-empty in exactly the same cells."""
+    from repro.core import carriers as carrier_lib
+    from repro.launch import session as session_lib
+    for m in sorted(spec_lib.METHODS):
+        for c in sorted(spec_lib.COMPRESSORS):
+            spec = RunSpec(method=m, compressor=c, carrier="dense")
+            method = session_lib.make_method(spec)
+            for ca in sorted(spec_lib.CARRIERS):
+                real = carrier_lib.make(ca).plan_with_reason(method, spec.eta)
+                mirror = spec_lib.plan_preview(m, c, ca)
+                assert mirror[0] == real[0], (m, c, ca, mirror, real)
+                assert bool(mirror[1]) == bool(real[1]), (m, c, ca)
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+def _supported_grid():
+    for m in sorted(spec_lib.METHODS):
+        for c in sorted(spec_lib.COMPRESSORS):
+            for ca in sorted(spec_lib.CARRIERS):
+                if ca == "fused" and spec_lib.plan_preview(m, c, ca)[0] != "fused":
+                    continue        # fused misconfig is a construction error
+                yield m, c, ca
+
+
+def test_json_roundtrip_identity_across_grid():
+    n = 0
+    for m, c, ca in _supported_grid():
+        spec = RunSpec(method=m, compressor=c, carrier=ca)
+        assert RunSpec.from_json(spec.to_json()) == spec
+        n += 1
+    assert n > 100      # the grid is real, not vacuously skipped
+
+
+@pytest.mark.parametrize("arch", cb.ARCH_IDS)
+def test_json_roundtrip_every_config_zoo_arch(arch):
+    spec = RunSpec(arch=arch, smoke=True, carrier="sparse",
+                   compressor="topk", compressor_kw={"k": 7},
+                   method_kw={}, ef_state_dtype="bfloat16",
+                   mesh="multi_pod", client_granularity="pod",
+                   shape="train_4k")
+    back = RunSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.spec_hash() == spec.spec_hash()
+
+
+def test_flag_spec_flag_stability():
+    cases = [
+        RunSpec(),
+        RunSpec(arch="gemma2-9b", smoke=True, carrier="quant4",
+                compressor="block_topk", ratio=0.01, eta=0.3, lr=0.1,
+                clients=4, global_batch=8, seq_len=64, seed=3,
+                ckpt_dir="/tmp/x", ckpt_every=50),
+        RunSpec(method="ef21_sgdm_abs", compressor="hard_threshold",
+                compressor_kw={"lam": 0.05}, method_kw={"gamma": 0.01}),
+        RunSpec(shape="prefill_32k", mesh="pod", state_sharding="zero",
+                ef_state_dtype="bfloat16", tp_pad_heads=4,
+                moe_impl="dense", optimizer="adamw"),
+    ]
+    for spec in cases:
+        assert RunSpec.from_flags(spec.to_flags()) == spec, spec.to_flags()
+
+
+def test_spec_hash_ignores_checkpoint_policy_only():
+    a = RunSpec()
+    assert dataclasses.replace(a, ckpt_dir="/x", ckpt_every=9).spec_hash() \
+        == a.spec_hash()
+    assert dataclasses.replace(a, eta=0.4).spec_hash() != a.spec_hash()
+
+
+def test_spec_hash_survives_additive_schema_evolution():
+    """The hash is over the SPARSE form (fields ≠ default), so a spec dict
+    written BEFORE a new defaulted field existed hashes identically to one
+    written after — additive evolution never invalidates checkpoints."""
+    now = RunSpec(arch="gemma2-9b", eta=0.3, ckpt_dir="/x")
+    old_dict = {k: v for k, v in now.to_dict().items()
+                if k != "heterogeneity"}        # pretend the field is new
+    assert RunSpec.from_dict(old_dict).spec_hash() == now.spec_hash()
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_fused_misconfig_fails_at_construction():
+    with pytest.raises(ValueError, match="UNFUSED dense plan"):
+        RunSpec(carrier="fused", method="ef14_sgd")
+    with pytest.raises(ValueError, match="UNFUSED dense plan"):
+        RunSpec(carrier="fused", compressor="topk")
+    # and the valid fused cell constructs
+    assert RunSpec(carrier="fused", method="ef21_sgdm",
+                   compressor="block_topk").plan() == ("fused", "")
+
+
+def test_unknown_names_fail_at_construction():
+    for kw in [{"carrier": "laser"}, {"method": "adam"},
+               {"compressor": "gzip"}, {"optimizer": "lion"},
+               {"arch": "gpt5"}, {"mesh": "torus"}, {"shape": "train_8k"},
+               {"heterogeneity": 5.0}, {"eta": 0.0}, {"ratio": 1.5}]:
+        with pytest.raises(ValueError, match="invalid RunSpec"):
+            RunSpec(**kw)
+
+
+def test_non_divisible_batch_fails_at_construction():
+    with pytest.raises(ValueError, match="not divisible"):
+        RunSpec(global_batch=10, clients=8)
+    with pytest.raises(ValueError, match="not divisible"):
+        # train_4k ships batch 256; 7 does not divide it on the smoke mesh
+        RunSpec(shape="train_4k", clients=7)
+    with pytest.raises(ValueError, match="not divisible"):
+        # the INTERACTIVE train geometry is validated even when a named
+        # shape is also set (Session.train would crash mid-step otherwise)
+        RunSpec(shape="train_4k", clients=4, global_batch=6)
+    RunSpec(global_batch=16, clients=8)     # divisible constructs fine
+
+
+def test_from_json_rejects_unknown_keys_and_bad_version():
+    good = RunSpec().to_dict()
+    with pytest.raises(ValueError, match="unknown RunSpec keys"):
+        RunSpec.from_dict({**good, "carier": "dense"})
+    with pytest.raises(ValueError, match="version"):
+        RunSpec.from_dict({**good, "version": 99})
+    with pytest.raises(ValueError, match="version"):
+        RunSpec.from_dict({k: v for k, v in good.items() if k != "version"})
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures: schema drift must be loud
+# ---------------------------------------------------------------------------
+
+def test_golden_spec_fixtures_roundtrip_bytewise():
+    """Every results/specs/*.json must parse as a valid RunSpec AND
+    re-serialize to exactly the bytes on disk. Adding/renaming/removing a
+    RunSpec field changes the canonical JSON and fails here — regenerate the
+    fixtures deliberately (python -m repro.launch.spec --out ...) and bump
+    SCHEMA_VERSION when the change is not purely additive."""
+    fixtures = sorted(glob.glob(os.path.join(
+        os.path.dirname(__file__), "..", "results", "specs", "*.json")))
+    assert fixtures, "golden spec fixtures missing (results/specs/*.json)"
+    for path in fixtures:
+        with open(path) as f:
+            text = f.read()
+        spec = RunSpec.from_json(text)
+        assert spec.to_json(indent=1) + "\n" == text, \
+            f"schema drift against golden fixture {os.path.basename(path)}"
+
+
+# ---------------------------------------------------------------------------
+# the jax-free guarantee + CLI
+# ---------------------------------------------------------------------------
+
+def test_spec_module_importable_without_jax():
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    code = ("import sys; import repro.launch.spec as S; "
+            "s = S.RunSpec(arch='gemma2-9b'); s.to_json(); "
+            "assert 'jax' not in sys.modules, 'spec import dragged in jax'")
+    subprocess.run([sys.executable, "-c", code], check=True, env=env)
+
+
+def test_no_smoke_negation_overrides_spec_file(tmp_path):
+    """Truthy bools in a --spec file must be revocable from the CLI."""
+    import argparse
+    path = tmp_path / "cell.json"
+    path.write_text(RunSpec(smoke=True, arch="gemma2-9b").to_json())
+    ap = argparse.ArgumentParser()
+    spec_lib.add_flags(ap)
+    spec = RunSpec.from_args(ap.parse_args(["--spec", str(path),
+                                            "--no-smoke"]))
+    assert spec.smoke is False and spec.arch == "gemma2-9b"
+    # without the negation, the file's value wins
+    spec = RunSpec.from_args(ap.parse_args(["--spec", str(path)]))
+    assert spec.smoke is True
+
+
+def test_explicit_fields_detects_flags_equal_to_defaults():
+    import argparse
+    ap = argparse.ArgumentParser()
+    spec_lib.add_flags(ap)
+    # --lr 0.5 equals the default VALUE but was explicitly passed: it must
+    # count, so a --resume enforces it against the checkpoint spec
+    args = ap.parse_args(["--lr", "0.5", "--ckpt-dir", "/tmp/x"])
+    assert spec_lib.explicit_fields(args, ignore=("ckpt_dir",)) == ["lr"]
+    assert spec_lib.explicit_fields(ap.parse_args(["--ckpt-dir", "/tmp/x"]),
+                                    ignore=("ckpt_dir",)) == []
+
+
+def test_spec_cli_print_emits_valid_json():
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.spec", "--print",
+         "--arch", "olmoe-1b-7b", "--carrier", "quant8", "--eta", "0.25"],
+        check=True, env=env, capture_output=True, text=True).stdout
+    spec = RunSpec.from_json(out)
+    assert spec.arch == "olmoe-1b-7b" and spec.carrier == "quant8"
+    assert spec.eta == 0.25
