@@ -82,6 +82,16 @@ def _wire_savings(out: dict) -> None:
         out["wire_words_sparse"] / out["wire_words_quant8"])
     out["wire_savings_quant4_vs_sparse"] = (
         out["wire_words_sparse"] / out["wire_words_quant4"])
+    # downlink split (DESIGN.md §8): the server broadcast per round, per
+    # carrier — 'dense' is the implicit f32 broadcast every unidirectional
+    # runtime ships, the lever --downlink-carrier attacks (acceptance: the
+    # quant4 broadcast undercuts dense by well over 7×)
+    for name in ("dense", "sparse", "quant8", "quant4"):
+        out[f"downlink_words_{name}"] = carrier_lib.downlink_words(
+            carrier_lib.make(name), btk, d)
+    for name in ("sparse", "quant8", "quant4"):
+        out[f"downlink_savings_{name}_vs_dense"] = (
+            out["downlink_words_dense"] / out[f"downlink_words_{name}"])
 
 
 def run() -> dict:
@@ -123,7 +133,8 @@ def run() -> dict:
             f"step_dense_us={out['train_step_dense_us']:.0f};"
             f"step_fused_us={out['train_step_fused_us']:.0f};"
             f"wire_q8_x={out['wire_savings_quant8_vs_sparse']:.1f};"
-            f"wire_q4_x={out['wire_savings_quant4_vs_sparse']:.1f}")
+            f"wire_q4_x={out['wire_savings_quant4_vs_sparse']:.1f};"
+            f"down_q4_x={out['downlink_savings_quant4_vs_dense']:.1f}")
     return out
 
 

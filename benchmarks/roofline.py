@@ -67,12 +67,16 @@ def ef_update_memory_terms(rec: Dict) -> Optional[Dict]:
 
 
 def ef_wire_terms(rec: Dict) -> Optional[Dict]:
-    """Analytic per-carrier EF-sync wire term for a train record: seconds to
-    put one client's message on the links, for the default production
-    compressor (BlockTopK block=1024, ratio=1%). ``Carrier.wire_words`` is
-    the honest fractional count (values + indices + scales; a 4-bit mantissa
-    is 1/8 word of 4 bytes) — this is the term the sparse/quant carriers
-    attack, exactly as the fused carrier attacks the memory term."""
+    """Analytic per-carrier EF-sync wire terms for a train record, split by
+    DIRECTION: seconds to put one client's uplink message on the links
+    (``ef_wire_*_s``) and seconds for the server's downlink broadcast
+    (``ef_wire_down_*_s``), for the default production compressor (BlockTopK
+    block=1024, ratio=1%). ``Carrier.wire_words`` / ``downlink_words`` are
+    the honest fractional counts (values + indices + scales; a 4-bit
+    mantissa is 1/8 word of 4 bytes) — the uplink term is what the
+    sparse/quant carriers attack, the downlink term is what
+    --downlink-carrier attacks (an unidirectional round always pays the
+    dense d-word broadcast down)."""
     from repro.core import carriers as carrier_lib
     from repro.core import compressors as comp_lib
     from repro.launch import mesh as mesh_lib
@@ -83,12 +87,19 @@ def ef_wire_terms(rec: Dict) -> Optional[Dict]:
     d_per_dev = cfg.active_param_count() / mesh_lib.PROD_MODEL
     btk = comp_lib.BlockTopK(block=1024, ratio=0.01)
     word = 4.0
-    return {
+    out = {
         f"ef_wire_{name}_s":
             carrier_lib.make(name).wire_words(btk, int(d_per_dev))
             * word / LINK_BW
         for name in ("dense", "sparse", "quant8", "quant4")
     }
+    out.update({
+        f"ef_wire_down_{name}_s":
+            carrier_lib.downlink_words(carrier_lib.make(name), btk,
+                                       int(d_per_dev)) * word / LINK_BW
+        for name in ("dense", "sparse", "quant8", "quant4")
+    })
+    return out
 
 
 def model_flops_per_device(rec: Dict) -> float:
@@ -126,9 +137,11 @@ def analyze_record(rec: Dict) -> Optional[Dict]:
         "collective": ("switch the EF sync to the sparse (values,indices) "
                        "carrier (--carrier sparse) or the block-quantized "
                        "wire (--carrier quant8/quant4 — int8/uint4 mantissas "
-                       "cut the value words another 4–8×); pod-granularity "
-                       "clients put the compressed bytes on the slow "
-                       "inter-pod links"),
+                       "cut the value words another 4–8×); compress the "
+                       "server broadcast too (--downlink-carrier quant4 — "
+                       "the downlink otherwise ships dense f32); "
+                       "pod-granularity clients put the compressed bytes on "
+                       "the slow inter-pod links"),
     }[dominant]
     row = {
         "arch": rec["arch"], "shape": rec["shape"], "tag": rec.get("tag", ""),
@@ -154,8 +167,8 @@ def analyze_record(rec: Dict) -> Optional[Dict]:
 def to_markdown(rows: List[Dict]) -> str:
     hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
            "MODEL/HLO | temp GiB | fits 16G | EF upd s unfused→fused | "
-           "EF wire s sparse→q8→q4 |\n|"
-           + "---|" * 11 + "\n")
+           "EF wire s sparse→q8→q4 | EF downlink s dense→q4 |\n|"
+           + "---|" * 12 + "\n")
     lines = []
     for r in rows:
         if "ef_mem_unfused_s" in r:
@@ -170,12 +183,18 @@ def to_markdown(rows: List[Dict]) -> str:
                     f"({r['ef_wire_sparse_s'] / r['ef_wire_quant4_s']:.1f}×)")
         else:
             wire = "—"
+        if "ef_wire_down_dense_s" in r:
+            down = (f"{r['ef_wire_down_dense_s']:.2e} → "
+                    f"{r['ef_wire_down_quant4_s']:.2e} "
+                    f"({r['ef_wire_down_dense_s'] / r['ef_wire_down_quant4_s']:.1f}×)")
+        else:
+            down = "—"
         lines.append(
             f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
             f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
             f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
             f"{r['temp_gib']:.1f} | {'✓' if r['fits_hbm16'] else '✗'} | "
-            f"{ef} | {wire} |")
+            f"{ef} | {wire} | {down} |")
     return hdr + "\n".join(lines) + "\n"
 
 

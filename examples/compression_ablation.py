@@ -40,17 +40,28 @@ grid = [RunSpec(method=mname, compressor=cname, compressor_kw=ckw, eta=0.1)
 grid.append(RunSpec(method="ef21_sgdm_abs", compressor="hard_threshold",
                     compressor_kw={"lam": 0.05}, method_kw={"gamma": 0.05},
                     eta=0.1))
+# bidirectional cell (DESIGN.md §8): same uplink as the block_topk row, but
+# the server broadcast rides a quant4 wire instead of dense f32 — compare
+# its total (up + down) wire words against the unidirectional rows
+grid.append(RunSpec(method="ef21_sgdm", compressor="block_topk",
+                    compressor_kw={"block": 64, "k_per_block": 4}, eta=0.1,
+                    downlink_carrier="quant4", downlink_ratio=0.05))
 
 rows = []
 for spec in grid:
     m = session_lib.make_method(spec)
     cfg = simulate.SimConfig(n=8, batch_size=4, gamma=0.05, steps=STEPS,
-                             b_init=4)
+                             b_init=4, down_carrier=spec.downlink_carrier,
+                             down_compressor=session_lib.make_down_compressor(
+                                 spec))
     out = simulate.run_numpy(prob, m, cfg, seed=0)
     gn = float(np.asarray(out["grad_norm_sq"][-100:]).mean())
-    rows.append((spec.method, spec.compressor, gn,
-                 m.coords_per_message(d)))
+    label = spec.compressor + (f"+{spec.downlink_carrier}↓"
+                               if spec.downlink_carrier != "dense" else "")
+    rows.append((spec.method, label, gn, m.coords_per_message(d),
+                 out["wire_words_total_per_round"]))
 
-print(f"{'method':15s} {'compressor':12s} {'end ‖∇f‖²':>12s} {'coords/round':>13s}")
-for mname, cname, gn, coords in sorted(rows, key=lambda r: r[2]):
-    print(f"{mname:15s} {cname:12s} {gn:12.3e} {coords:13.0f}")
+print(f"{'method':15s} {'compressor':12s} {'end ‖∇f‖²':>12s} "
+      f"{'coords/round':>13s} {'wire up+down':>13s}")
+for mname, cname, gn, coords, wire in sorted(rows, key=lambda r: r[2]):
+    print(f"{mname:15s} {cname:12s} {gn:12.3e} {coords:13.0f} {wire:13.0f}")

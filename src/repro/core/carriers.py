@@ -53,6 +53,15 @@ always-correct dense plan (empty reason = the native plan runs). Launch
 surfaces print it, so a misconfigured run no longer looks identical to a
 working one in logs.
 
+Carriers are direction-aware (DESIGN.md §8): the same wire formats also ship
+the DOWNLINK leg — the server's broadcast of its compressed innovation
+C(g_server − h) against an EF21 server memory h. ``plan_down_with_reason``
+is the downlink twin of ``plan_with_reason`` (no method enters: the broadcast
+payload is always the compressed innovation, so only the compressor gates the
+wire), ``downlink_round`` runs the encode → decode leg shared by every
+runtime (aggregation is a no-op — one server, one message), and
+``downlink_words`` is the honest broadcast word count.
+
 Aggregation runs in one of two contexts, selected by keyword:
 
   aggregate(..., dp=n)       wire leaves carry a leading client axis (vmap
@@ -76,6 +85,11 @@ from repro.core import compressors as comp_lib
 
 PyTree = Any
 Wire = Any
+
+# rng fold constant of the downlink leg — ONE value shared by every runtime
+# (the broadcast must be one identical message on server and all clients, so
+# its key is derived from the round rng BEFORE any per-client folding)
+DOWNLINK_FOLD = 1 << 20
 
 
 def axis_size(axis_name) -> jax.Array:
@@ -149,6 +163,21 @@ class Carrier:
         they cannot ship this method's messages."""
         return self.plan_with_reason(method, eta)[0]
 
+    # -- downlink (server → client broadcast) --------------------------------
+    def plan_down_with_reason(self, comp: comp_lib.Compressor
+                              ) -> Tuple[str, str]:
+        """(plan, reason) for the DOWNLINK leg: the server broadcasts ONE
+        message C(g_server − h) and every client decodes it — there is no
+        aggregation, so the plan depends only on the compressor (no method:
+        the broadcast payload is always the compressed innovation itself).
+        'wire' ships the carrier's native format; 'dense' ships the dense
+        C(δ) tensor (always correct). A non-empty reason explains a
+        degradation, exactly like ``plan_with_reason``."""
+        return "dense", "abstract base carrier has no wire format"
+
+    def plan_down(self, comp: comp_lib.Compressor) -> str:
+        return self.plan_down_with_reason(comp)[0]
+
     # -- per-client wire API (flat (d,) leaves) ------------------------------
     def encode(self, comp: comp_lib.Compressor, delta: jax.Array,
                rng: Optional[jax.Array] = None) -> Wire:
@@ -211,6 +240,9 @@ class DenseCarrier(Carrier):
     def plan_with_reason(self, method, eta=None):
         return "dense", ""          # dense IS this carrier's native wire
 
+    def plan_down_with_reason(self, comp):
+        return "dense", ""          # ...in both directions
+
     def encode(self, comp, delta, rng=None):
         return comp(delta, rng)
 
@@ -251,6 +283,15 @@ class SparseBlockCarrier(Carrier):
             return "dense", (
                 f"compressor {type(method.compressor).__name__} has no "
                 "deterministic fixed-size (values, indices) wire")
+        return "wire", ""
+
+    def plan_down_with_reason(self, comp):
+        # no wire_is_msg question on the downlink: the broadcast IS the
+        # compressed innovation, so only the compressor gates the wire
+        if not self.supports(comp):
+            return "dense", (
+                f"compressor {type(comp).__name__} has no deterministic "
+                "fixed-size (values, indices) wire")
         return "wire", ""
 
     def supports(self, comp) -> bool:
@@ -341,6 +382,11 @@ class FusedPallasCarrier(DenseCarrier):
             return "dense", ("momentum η is traced (time-varying schedule); "
                              "the kernel needs a static η to bake in")
         return "fused", ""
+
+    def plan_down_with_reason(self, comp):
+        return "dense", (
+            "the fused kernel fuses the UPLINK client update; the downlink "
+            "broadcast has no fused path — use dense, sparse or quant")
 
     def fused_update(self, method, grads, state, *, eta=None,
                      batched: bool = False):
@@ -454,6 +500,14 @@ class QuantCarrier(Carrier):
                 f"compressor {type(method.compressor).__name__} draws "
                 "randomness inside encode; the quantized wire ships "
                 "deterministic compressors only")
+        return "wire", ""
+
+    def plan_down_with_reason(self, comp):
+        if comp.needs_rng:
+            return "dense", (
+                f"compressor {type(comp).__name__} draws randomness inside "
+                "encode; the quantized wire ships deterministic compressors "
+                "only")
         return "wire", ""
 
     def _sparse_ok(self, comp) -> bool:
@@ -618,6 +672,48 @@ def wire_round_local(carrier: Carrier, comp, deltas: PyTree,
             .reshape(leaf.shape))
     return (jax.tree_util.tree_unflatten(dtree, c_leaves),
             jax.tree_util.tree_unflatten(dtree, agg_leaves))
+
+
+# ---------------------------------------------------------------------------
+# downlink (server → client broadcast) — shared by every runtime
+# ---------------------------------------------------------------------------
+
+def downlink_round(carrier: Carrier, comp, delta: PyTree,
+                   rng: Optional[jax.Array] = None) -> PyTree:
+    """One downlink broadcast leg, per leaf: the server encodes C(delta) into
+    the carrier's wire and every client returns the decode — which is also
+    exactly what the server adds to its own broadcast memory h, so server and
+    clients provably hold identical reconstructions (the decode IS the wire;
+    there is nothing client-specific to diverge on). Aggregation is a no-op:
+    one server, one message, nothing to mean over. On the degraded 'dense'
+    plan the broadcast ships the dense C(delta) tensor itself.
+
+    The pure-jnp ``encode`` runs on every runtime (never ``encode_local``):
+    the broadcast is one unbatched message, and keeping all three runtimes on
+    one code path is what makes the round-trip state-sync tests bit-exact
+    across them."""
+    plan = carrier.plan_down(comp)
+    leaves, treedef = jax.tree_util.tree_flatten(delta)
+    out = []
+    for i, leaf in enumerate(leaves):
+        flat = leaf.reshape(-1)
+        r = None if rng is None else jax.random.fold_in(rng, i)
+        if plan == "wire":
+            wire = carrier.encode(comp, flat, r)
+            dec = carrier.decode(comp, wire, d=flat.size, dtype=flat.dtype)
+        else:
+            dec = comp(flat, r).astype(flat.dtype)
+        out.append(dec.reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def downlink_words(carrier: Carrier, comp, d: int) -> float:
+    """Words the server puts on the wire per broadcast message of dimension
+    d — the downlink twin of ``Carrier.wire_words`` (the degraded dense plan
+    ships the dense d-word tensor)."""
+    if carrier.plan_down(comp) == "wire":
+        return carrier.wire_words(comp, d)
+    return float(d)
 
 
 # ---------------------------------------------------------------------------

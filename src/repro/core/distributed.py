@@ -26,6 +26,15 @@ dispatch the wire format of meanᵢ(cᵢ) through :mod:`repro.core.carriers` —
              arrays; dense payloads dequantize locally before the psum (an
              int8 all-reduce across differing scales is not associative).
              EF re-sends the quantization error — local_c is the wire decode.
+
+Bidirectional compression (DESIGN.md §8): ``EFConfig.down_carrier`` /
+``down_compressor`` add a DOWNLINK leg to the round — the server keeps an
+EF21 broadcast memory h (``ef_state['h']``), broadcasts the carrier wire of
+C_down(g_server − h), and the model steps with the decode-integrated
+hᵗ⁺¹ = hᵗ + decode(wire) on server and clients alike, so both provably hold
+identical models without ever shipping dense f32 down. The default
+(down_carrier='dense', no compressor) runs NO downlink machinery and is
+bit-identical to the unidirectional runtime.
 """
 from __future__ import annotations
 
@@ -37,9 +46,13 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import carriers as carrier_lib
+from repro.core import compressors as comp_lib
 from repro.core import ef as ef_lib
 
 PyTree = Any
+
+# re-exported for callers that only import the runtime module
+DOWNLINK_FOLD = carrier_lib.DOWNLINK_FOLD
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +61,19 @@ class EFConfig:
     carrier: str = "dense"     # 'dense'|'sparse'|'fused'|'quant8'|'quant4'
     data_axes: Tuple[str, ...] = ("data",)  # mesh axes forming the client dim
     b_init_scale: bool = True              # Alg 1 line 2: init v⁰=g⁰ to first grads
+    # downlink (server → client broadcast) leg, DESIGN.md §8: 'dense' with no
+    # compressor means NO downlink machinery at all — the broadcast is the
+    # implicit dense g_server, bit-identical to the unidirectional runtime
+    down_carrier: str = "dense"
+    down_compressor: Optional[comp_lib.Compressor] = None
+
+    @property
+    def has_downlink(self) -> bool:
+        return self.down_carrier != "dense" or self.down_compressor is not None
+
+    def down_comp(self) -> comp_lib.Compressor:
+        return self.down_compressor if self.down_compressor is not None \
+            else comp_lib.Identity()
 
 
 # ---------------------------------------------------------------------------
@@ -90,7 +116,12 @@ def init_ef_state(efc: EFConfig, params: PyTree, dp: int,
         server = ef_lib.server_init(
             method, params,
             jax.tree_util.tree_map(lambda g: g.mean(0), init_grads))
-    return {"clients": clients, "server": server}
+    state = {"clients": clients, "server": server}
+    if efc.has_downlink:
+        # the broadcast memory h⁰ = g⁰ rides along as a state sibling; the
+        # unidirectional state tree stays byte-for-byte what it always was
+        state["h"] = ef_lib.downlink_init(server)
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -122,14 +153,10 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
     c_axes = efc.data_axes
     carrier = carrier_lib.make(efc.carrier)
     plan = carrier.plan(method, eta)
+    down_carrier = carrier_lib.make(efc.down_carrier)
+    down_comp = efc.down_comp()
 
-    def body(grads_l, clients_l, server_l, rng_l):
-        # local client index for rng decorrelation
-        if rng_l is not None:
-            idx = 0
-            for a in c_axes:
-                idx = idx * carrier_lib.axis_size(a) + jax.lax.axis_index(a)
-            rng_l = jax.random.fold_in(rng_l, idx)
+    def client_leg(grads_l, clients_l, rng_l):
         sq = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
         ex = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
         g, cl = sq(grads_l), sq(clients_l)        # strip the client dim (local=1)
@@ -151,11 +178,54 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
             msg, new_cl = method.update(g, cl, rng_l, eta=eta)
             msg_mean = jax.tree_util.tree_map(
                 lambda m: jax.lax.pmean(m, c_axes), msg)
+        return ex(new_cl), msg_mean
 
-        new_server = ef_lib.server_step(method, server_l, msg_mean)
-        return ex(new_cl), new_server, msg_mean
+    def fold_client(rng_l):
+        # local client index for rng decorrelation
+        if rng_l is None:
+            return None
+        idx = 0
+        for a in c_axes:
+            idx = idx * carrier_lib.axis_size(a) + jax.lax.axis_index(a)
+        return jax.random.fold_in(rng_l, idx)
 
     server_specs = state_specs["server"]
+
+    if efc.has_downlink:
+        def body(grads_l, clients_l, server_l, h_l, rng_l):
+            # the downlink key comes off the round rng BEFORE the per-client
+            # fold: the broadcast must be one identical message everywhere
+            r_down = None if rng_l is None \
+                else jax.random.fold_in(rng_l, DOWNLINK_FOLD)
+            new_cl, msg_mean = client_leg(grads_l, clients_l,
+                                          fold_client(rng_l))
+            new_server = ef_lib.server_step(method, server_l, msg_mean)
+            # every device runs the same encode of the replicated-in-value
+            # new_server (that IS the broadcast — the encoded wire is what
+            # travels) and the same decode its client would run
+            g_est, h_new = ef_lib.downlink_sync(
+                down_carrier, down_comp, new_server, h_l, rng=r_down)
+            return new_cl, new_server, h_new, g_est
+
+        h_specs = state_specs.get("h", server_specs)
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(grads_specs, state_specs["clients"], server_specs,
+                      h_specs, P()),
+            out_specs=(state_specs["clients"], server_specs, h_specs,
+                       server_specs),
+            check_rep=False)
+        new_clients, new_server, h_new, g_est = fn(
+            grads, ef_state["clients"], ef_state["server"], ef_state["h"],
+            rng)
+        return g_est, {"clients": new_clients, "server": new_server,
+                       "h": h_new}
+
+    def body(grads_l, clients_l, server_l, rng_l):
+        new_cl, msg_mean = client_leg(grads_l, clients_l, fold_client(rng_l))
+        new_server = ef_lib.server_step(method, server_l, msg_mean)
+        return new_cl, new_server, msg_mean
+
     out_specs = (state_specs["clients"], server_specs, server_specs)
     fn = shard_map(
         body, mesh=mesh,
@@ -198,7 +268,15 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
         msg_mean = jax.tree_util.tree_map(lambda m: m.mean(0), msgs)
 
     new_server = ef_lib.server_step(method, server, msg_mean)
-    return new_server, {"clients": new_clients, "server": new_server}
+    new_state = {"clients": new_clients, "server": new_server}
+    if not efc.has_downlink:
+        return new_server, new_state
+    r_down = None if rng is None else jax.random.fold_in(rng, DOWNLINK_FOLD)
+    g_est, h_new = ef_lib.downlink_sync(
+        carrier_lib.make(efc.down_carrier), efc.down_comp(), new_server,
+        ef_state["h"], rng=r_down)
+    new_state["h"] = h_new
+    return g_est, new_state
 
 
 # ---------------------------------------------------------------------------

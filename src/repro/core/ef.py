@@ -146,16 +146,25 @@ class Method:
         return self.post_compress(c, ctx)
 
     # -- accounting (paper plots use "# transmitted coordinates") -----------
-    def coords_per_message(self, d: int, carrier=None) -> float:
+    def coords_per_message(self, d: int, carrier=None, direction: str = "up",
+                           compressor=None) -> float:
         """Idealized transmitted-coordinate count (paper x-axes) when
         ``carrier`` is None; otherwise delegates to ``Carrier.wire_words`` —
         the honest word count of the actual wire format (dense all-reduce
         ships d words even for a sparse-valued c; the sparse carrier ships
-        values AND indices)."""
+        values AND indices). ``direction='down'`` counts the server
+        broadcast instead (``carriers.downlink_words``: one message, no
+        aggregation, dense d words on a degraded plan); pass ``compressor``
+        to account a downlink compressor different from the uplink one."""
+        comp = compressor if compressor is not None else self.compressor
+        if direction == "down":
+            from repro.core import carriers as carrier_lib
+            car = carrier_lib.make(carrier if carrier is not None else "dense")
+            return carrier_lib.downlink_words(car, comp, d)
         if carrier is not None:
             from repro.core import carriers as carrier_lib
-            return carrier_lib.make(carrier).wire_words(self.compressor, d)
-        c = self.compressor
+            return carrier_lib.make(carrier).wire_words(comp, d)
+        c = comp
         if isinstance(c, comp_lib.TopK):
             return c._k(d)
         if isinstance(c, comp_lib.RandK):
@@ -423,8 +432,12 @@ class Neolithic(Method):
             resid = tree_sub(resid, c)
         return acc, state
 
-    def coords_per_message(self, d: int, carrier=None) -> float:
-        return self.rounds * super().coords_per_message(d, carrier)
+    def coords_per_message(self, d: int, carrier=None, direction: str = "up",
+                           compressor=None) -> float:
+        base = super().coords_per_message(d, carrier, direction, compressor)
+        if direction == "down":
+            return base     # one broadcast regardless of the R uplink rounds
+        return self.rounds * base
 
 
 # ---------------------------------------------------------------------------
@@ -445,6 +458,43 @@ def server_step(method: Method, g_server: PyTree, msg_mean: PyTree) -> PyTree:
     if method.mode == "delta":
         return tree_add(g_server, msg_mean)
     return msg_mean
+
+
+# ---------------------------------------------------------------------------
+# downlink: the server → client broadcast leg (bidirectional compression)
+# ---------------------------------------------------------------------------
+
+def downlink_init(g_server: PyTree) -> PyTree:
+    """h⁰ — the server's EF21 broadcast memory, initialized to g⁰ (the init
+    handshake already ships dense state once: params, and under Alg 1 line 2
+    the g⁰ mean — so server and clients agree on h⁰ exactly). Works the same
+    for both server modes: h tracks whatever estimate ``server_step``
+    produces ('delta' methods integrate messages into g; 'absolute' methods
+    replace it), because the downlink contraction argument only needs the
+    broadcast target, never the method semantics."""
+    return g_server
+
+
+def downlink_sync(carrier, comp, g_server: PyTree, h: Optional[PyTree],
+                  rng: Optional[jax.Array] = None, memory: bool = True
+                  ) -> Tuple[PyTree, Optional[PyTree]]:
+    """One downlink broadcast: returns ``(g_est, h_new)`` where ``g_est`` is
+    the estimate every client (and the server) steps the model with.
+
+    With ``memory`` (EF21-BC, Fatkhullin et al. 2021): the server broadcasts
+    the wire of C(g − h) and everyone integrates the decode,
+    hᵗ⁺¹ = hᵗ + decode(wire) — so g_est = hᵗ⁺¹ is bit-identical on server and
+    clients, and the compression error is re-sent in later rounds (the same
+    contraction that makes uplink EF21 work). Without ``memory`` (the naive
+    baseline the paper-claims tests stall): the broadcast is C(g) itself each
+    round, nothing absorbs the compression error, and ``h_new`` is None."""
+    from repro.core import carriers as carrier_lib
+    if not memory:
+        return carrier_lib.downlink_round(carrier, comp, g_server, rng), None
+    dec = carrier_lib.downlink_round(carrier, comp, tree_sub(g_server, h),
+                                     rng)
+    h_new = tree_add(h, dec)
+    return h_new, h_new
 
 
 REGISTRY = {

@@ -7,7 +7,11 @@ distributed method that the paper's own experiments use. The production multi-ch
 path lives in core/distributed.py; both share the Method implementations AND the
 wire carrier (core/carriers.py), so what is validated here is what runs on the
 mesh: ``SimConfig.carrier`` selects dense / sparse / fused / quant8 / quant4
-exactly like ``EFConfig.carrier`` does on the production path.
+exactly like ``EFConfig.carrier`` does on the production path, and
+``SimConfig.down_carrier`` / ``down_compressor`` add the same downlink
+broadcast leg (EF21 server memory h, DESIGN.md §8) the production runtimes
+run — plus the simulator-only ``down_memory=False`` naive-broadcast ablation
+the paper-claims tests use.
 """
 from __future__ import annotations
 
@@ -19,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import carriers as carrier_lib
+from repro.core import compressors as comp_lib
 from repro.core import ef as ef_lib
 
 PyTree = Any
@@ -35,6 +40,19 @@ class SimConfig:
     time_varying: bool = False      # γₜ = γ/√(t+1), ηₜ = η/√(t+1) (App. J / Fig 4)
     record_every: int = 1
     carrier: str = "dense"     # 'dense'|'sparse'|'fused'|'quant8'|'quant4'
+    # downlink (server → client broadcast) leg, DESIGN.md §8. The default
+    # ('dense', no compressor) is the unidirectional simulator, bit-identical
+    # to pre-downlink behavior. ``down_memory=False`` is the NAIVE ablation
+    # (broadcast C(g) with no server memory — nothing re-sends the
+    # compression error; the paper-claims tests show it stalling).
+    down_carrier: str = "dense"
+    down_compressor: Optional[Any] = None   # a Compressor (frozen → hashable)
+    down_memory: bool = True
+
+    @property
+    def has_downlink(self) -> bool:
+        return (self.down_carrier != "dense"
+                or self.down_compressor is not None)
 
 
 def _client_rngs(rng, n):
@@ -67,9 +85,19 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
         method, x0, jax.tree_util.tree_map(lambda g: g.mean(0), g0))
 
     carrier = carrier_lib.make(cfg.carrier)
+    has_down = cfg.has_downlink
+    down_car = carrier_lib.make(cfg.down_carrier)
+    down_comp = cfg.down_compressor if cfg.down_compressor is not None \
+        else comp_lib.Identity()
 
     def step(carry, t):
-        x, states, g_server, rng = carry
+        if has_down:
+            # g_est is what the clients reconstructed last round — the
+            # broadcast memory h under EF21-BC, or the latest naive decode
+            x, states, g_server, g_est, rng = carry
+        else:
+            x, states, g_server, rng = carry
+            g_est = g_server        # implicit dense broadcast
         rng, r_grad, r_comp = jax.random.split(rng, 3)
         eta0 = cfg.eta if cfg.eta is not None else getattr(method, "eta", 1.0)
         if cfg.time_varying:
@@ -82,7 +110,7 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
             # float so the fused carrier can bake it into the Pallas kernel
             gamma_t, eta_t = cfg.gamma, eta0
 
-        x_next = jax.tree_util.tree_map(lambda p, g: p - gamma_t * g, x, g_server)
+        x_next = jax.tree_util.tree_map(lambda p, g: p - gamma_t * g, x, g_est)
 
         def client_grads(c, rg):
             if method.needs_paired_grads:
@@ -120,10 +148,19 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
 
         gn = ef_lib.tree_norm_sq(problem.full_grad(x_next))
         fl = problem.loss(x_next)
+        if has_down:
+            r_down = jax.random.fold_in(r_comp, carrier_lib.DOWNLINK_FOLD)
+            g_est_new, _ = ef_lib.downlink_sync(
+                down_car, down_comp, g_server_new, g_est, rng=r_down,
+                memory=cfg.down_memory)
+            return (x_next, states_new, g_server_new, g_est_new, rng), (gn, fl)
         return (x_next, states_new, g_server_new, rng), (gn, fl)
 
-    (x_fin, _, _, _), (gns, fls) = jax.lax.scan(
-        step, (x0, states, g_server, rng), jnp.arange(cfg.steps))
+    # h⁰ = g⁰ (downlink_init): the init handshake ships dense state once
+    carry0 = (x0, states, g_server, ef_lib.downlink_init(g_server), rng) \
+        if has_down else (x0, states, g_server, rng)
+    (x_fin, *_), (gns, fls) = jax.lax.scan(
+        step, carry0, jnp.arange(cfg.steps))
     d_total = ef_lib.tree_dim(x0)
     # honest wire accounting follows the plan that actually EXECUTED: when the
     # carrier degrades to the dense plan (unsupported compressor/method,
@@ -132,6 +169,12 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
         cfg.eta if cfg.eta is not None else getattr(method, "eta", 1.0))
     executed = cfg.carrier \
         if carrier.plan(method, eta_static) != "dense" else "dense"
+    up_words = method.coords_per_message(d_total, carrier=executed) * cfg.n
+    # downlink: one broadcast message per client link; without a downlink
+    # carrier the server ships the dense f32 estimate — d words per client
+    down_each = carrier_lib.downlink_words(down_car, down_comp, d_total) \
+        if has_down else float(d_total)
+    down_words = down_each * cfg.n
     return {
         "grad_norm_sq": gns,
         "loss": fls,
@@ -139,9 +182,13 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
         # paper x-axis: idealized transmitted-coordinate count
         "coords_per_round": method.coords_per_message(d_total) * cfg.n,
         # honest word count of the executed wire (values + indices; dense
-        # all-reduce ships d) — see Carrier.wire_words
-        "wire_words_per_round":
-            method.coords_per_message(d_total, carrier=executed) * cfg.n,
+        # all-reduce ships d) — see Carrier.wire_words. The legacy key is
+        # the UPLINK leg; the split keys make the total wire budget per
+        # round (the paper's communication-complexity story) explicit.
+        "wire_words_per_round": up_words,
+        "wire_words_up_per_round": up_words,
+        "wire_words_down_per_round": down_words,
+        "wire_words_total_per_round": up_words + down_words,
     }
 
 

@@ -29,7 +29,9 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
                       compressor_name: str = "block_topk",
                       ratio: float = 0.01, eta: float = 0.1,
                       carrier: str = "dense",
-                      method: Optional[ef_lib.Method] = None
+                      method: Optional[ef_lib.Method] = None,
+                      down_carrier: str = "dense",
+                      down_compressor: Optional[comp_lib.Compressor] = None
                       ) -> dist.EFConfig:
     """EFConfig assembly + the authoritative carrier-plan checks. Pass a
     prebuilt ``method`` (launch/session.py builds one from the RunSpec,
@@ -63,6 +65,22 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
         warnings.warn(
             f"--carrier {carrier} degrades to the dense plan: {reason}",
             stacklevel=2)
+    # downlink (DESIGN.md §8): a fused downlink is a hard misconfiguration
+    # (the fused kernel is the uplink client update); any other degradation
+    # to the dense broadcast must at least say so in logs
+    if down_carrier != "dense" or down_compressor is not None:
+        down_obj = carrier_lib.make(down_carrier)
+        down_plan, down_reason = down_obj.plan_down_with_reason(
+            down_compressor if down_compressor is not None
+            else comp_lib.Identity())
+        if down_carrier == "fused":
+            raise ValueError(
+                f"--downlink-carrier fused is not a thing: {down_reason}")
+        if down_carrier != "dense" and down_plan == "dense":
+            import warnings
+            warnings.warn(
+                f"--downlink-carrier {down_carrier} degrades to the dense "
+                f"broadcast: {down_reason}", stacklevel=2)
     # the EF client axes follow the plan's client granularity (pod clients
     # aggregate over 'pod' only; the within-pod mean happens in the vmapped
     # per-client loss)
@@ -71,7 +89,9 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
         c_ax = ()
     elif isinstance(c_ax, str):
         c_ax = (c_ax,)
-    return dist.EFConfig(method=method, carrier=carrier, data_axes=tuple(c_ax))
+    return dist.EFConfig(method=method, carrier=carrier,
+                         data_axes=tuple(c_ax), down_carrier=down_carrier,
+                         down_compressor=down_compressor)
 
 
 def _replicated(mesh, x):
@@ -104,7 +124,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh,
     ef_shapes = jax.eval_shape(
         lambda: dist.init_ef_state(
             efc, model_lib.init_params(cfg, jax.random.PRNGKey(0)), n))
-    ef_specs_p = sh.ef_state_pspecs(cfg, mesh, plan, efc.method)
+    ef_specs_p = sh.ef_state_pspecs(cfg, mesh, plan, efc.method,
+                                    downlink=efc.has_downlink)
     ef_state = sh._sds(ef_shapes, ef_specs_p, mesh)
 
     # per-client grads share the client-state layout (leading client axis)

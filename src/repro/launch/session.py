@@ -73,6 +73,29 @@ def make_compressor(spec: spec_lib.RunSpec) -> comp_lib.Compressor:
     return cls(**kw)
 
 
+def make_down_compressor(spec: spec_lib.RunSpec
+                         ) -> Optional[comp_lib.Compressor]:
+    """The DOWNLINK compressor named by the spec: None when
+    downlink_carrier='dense' (no downlink machinery — the implicit dense
+    broadcast), otherwise the uplink compressor class re-budgeted to
+    ``downlink_ratio``. ``compressor_kw`` geometry (block sizes, lam, …)
+    carries over, but the absolute-budget keys (k / k_per_block / ratio) are
+    dropped so downlink_ratio actually drives the broadcast budget instead of
+    being silently shadowed by an uplink override. Like the uplink
+    ``ratio``, downlink_ratio only applies to ratio-bearing compressor
+    classes — hard_threshold / rank1 / block_quant budgets are set by their
+    own compressor_kw knobs, which the downlink reuses unchanged."""
+    if spec.downlink_carrier == "dense":
+        return None
+    cls = comp_lib.REGISTRY[spec.compressor]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    kw = {k: v for k, v in spec.compressor_kw.items()
+          if k in fields and k not in ("k", "k_per_block", "ratio")}
+    if "ratio" in fields:
+        kw["ratio"] = spec.downlink_ratio
+    return cls(**kw)
+
+
 def make_method(spec: spec_lib.RunSpec) -> ef_lib.Method:
     """EF method named by the spec, usable standalone (simulator examples)
     or via ``ef_config`` on the production path."""
@@ -103,7 +126,8 @@ def ef_config(spec: spec_lib.RunSpec, mesh, plan: sh.ShardPlan
     return build_lib.default_ef_config(
         mesh, plan, method_name=spec.method, compressor_name=spec.compressor,
         ratio=spec.ratio, eta=spec.eta, carrier=spec.carrier,
-        method=make_method(spec))
+        method=make_method(spec), down_carrier=spec.downlink_carrier,
+        down_compressor=make_down_compressor(spec))
 
 
 # ---------------------------------------------------------------------------
@@ -193,7 +217,8 @@ class Session:
             grads_specs = sh._spec_map(
                 lambda s: sh.P(sh.client_axis(mesh, plan), *s),
                 sh.params_pspecs(cfg, mesh))
-            state_specs = sh.ef_state_pspecs(cfg, mesh, plan, efc.method)
+            state_specs = sh.ef_state_pspecs(cfg, mesh, plan, efc.method,
+                                             downlink=efc.has_downlink)
             step_fn = jax.jit(dist.make_train_step(
                 loss_fn, efc, opt, n, mesh=mesh, grads_specs=grads_specs,
                 state_specs=state_specs))

@@ -79,8 +79,11 @@ def _spec_map(fn, tree):
                                   is_leaf=lambda x: isinstance(x, P))
 
 
-def ef_state_pspecs(cfg: ArchConfig, mesh, plan: ShardPlan, method) -> Dict:
-    """Mirror of distributed.init_ef_state structure."""
+def ef_state_pspecs(cfg: ArchConfig, mesh, plan: ShardPlan, method,
+                    downlink: bool = False) -> Dict:
+    """Mirror of distributed.init_ef_state structure. ``downlink`` adds the
+    server broadcast memory h (DESIGN.md §8) — replicated-in-value like the
+    server estimate, so it shares the server's param pspecs."""
     pspecs = params_pspecs(cfg, mesh)
     c_ax = client_axis(mesh, plan)
     d_ax = mesh_lib.data_axes(mesh)
@@ -110,7 +113,10 @@ def ef_state_pspecs(cfg: ArchConfig, mesh, plan: ShardPlan, method) -> Dict:
     dummy = _spec_map(lambda s: jnp.zeros((1,)), pspecs)
     sample = jax.eval_shape(lambda: method.init(dummy))
     client_specs = {k: client_tree for k in sample.keys()}
-    return {"clients": client_specs, "server": pspecs}
+    out = {"clients": client_specs, "server": pspecs}
+    if downlink:
+        out["h"] = pspecs
+    return out
 
 
 def batch_pspecs(cfg: ArchConfig, mesh, kind: str, global_batch: int) -> Dict:

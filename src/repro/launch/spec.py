@@ -51,7 +51,11 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.configs import base as cb
 
-SCHEMA_VERSION = 1
+# v2: bidirectional compression — the downlink_carrier / downlink_ratio
+# fields change what a spec EXECUTES (a second compressed leg per round), so
+# the bump makes pre-downlink readers reject v2 specs loudly instead of
+# silently running unidirectional rounds against a bidirectional definition.
+SCHEMA_VERSION = 2
 
 # ---------------------------------------------------------------------------
 # jax-free mirrors of the jax-importing registries (sync-tested in
@@ -67,6 +71,10 @@ COMPRESSORS = frozenset({
     "rank1", "block_quant",
 })
 CARRIERS = frozenset({"dense", "sparse", "fused", "quant8", "quant4"})
+# the downlink broadcast has no fused path (the fused kernel IS the uplink
+# client update) — naming it is a construction error, mirroring the carrier's
+# own plan_down_with_reason degradation
+DOWN_CARRIERS = frozenset(CARRIERS - {"fused"})
 OPTIMIZERS = frozenset({"sgd", "adamw"})
 
 MESHES = ("smoke", "pod", "multi_pod")
@@ -134,6 +142,32 @@ def plan_preview(method: str, compressor: str, carrier: str
     return "wire", ""
 
 
+def downlink_plan_preview(compressor: str, carrier: str) -> Tuple[str, str]:
+    """Pure-python mirror of ``Carrier.plan_down_with_reason``
+    (core/carriers.py) by name: the DOWNLINK broadcast plan. No method enters
+    — the broadcast payload is always the compressed innovation C(g − h), so
+    only the compressor gates the wire. Asserted equal to the real carriers
+    over the (compressor × carrier) grid in tests/test_spec.py."""
+    if carrier == "dense":
+        return "dense", ""
+    if carrier == "fused":
+        return "dense", (
+            "the fused kernel fuses the UPLINK client update; the downlink "
+            "broadcast has no fused path — use dense, sparse or quant")
+    if carrier == "sparse":
+        if compressor not in SPARSE_WIRE_OK:
+            return "dense", (
+                f"compressor {compressor!r} has no deterministic fixed-size "
+                "(values, indices) wire")
+        return "wire", ""
+    # quant8 / quant4
+    if compressor in NEEDS_RNG:
+        return "dense", (
+            f"compressor {compressor!r} draws randomness inside encode; the "
+            "quantized wire ships deterministic compressors only")
+    return "wire", ""
+
+
 def _known_arch(arch: str) -> bool:
     return arch in cb.ARCH_ALIASES or arch in cb.ARCH_IDS
 
@@ -175,6 +209,14 @@ class RunSpec:
     ratio: float = 0.05
     eta: float = 0.1
     carrier: str = "dense"
+    # downlink (server → client broadcast) leg, DESIGN.md §8: 'dense' = no
+    # downlink machinery (the implicit dense broadcast — pre-v2 behavior,
+    # bit-identical). Any other carrier adds the EF21 server memory h and
+    # broadcasts C(g − h) as that carrier's wire; the downlink compressor is
+    # the uplink compressor class re-budgeted to downlink_ratio
+    # (launch/session.py::make_down_compressor).
+    downlink_carrier: str = "dense"
+    downlink_ratio: float = 0.05
     method_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
     compressor_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -219,6 +261,7 @@ class RunSpec:
                 ("method", self.method, METHODS),
                 ("compressor", self.compressor, COMPRESSORS),
                 ("carrier", self.carrier, CARRIERS),
+                ("downlink_carrier", self.downlink_carrier, DOWN_CARRIERS),
                 ("optimizer", self.optimizer, OPTIMIZERS)]:
             if val not in universe:
                 errs.append(f"unknown {field} {val!r}; have {sorted(universe)}")
@@ -233,6 +276,9 @@ class RunSpec:
             errs.append(f"eta must be in (0, 1], got {self.eta}")
         if not 0.0 < self.ratio <= 1.0:
             errs.append(f"ratio must be in (0, 1], got {self.ratio}")
+        if not 0.0 < self.downlink_ratio <= 1.0:
+            errs.append(f"downlink_ratio must be in (0, 1], got "
+                        f"{self.downlink_ratio}")
         if not 0.0 <= self.heterogeneity <= 1.0:
             errs.append(f"heterogeneity must be in [0, 1], got "
                         f"{self.heterogeneity}")
@@ -280,6 +326,11 @@ class RunSpec:
         """(execution plan, degradation reason) for this spec's carrier —
         see plan_preview."""
         return plan_preview(self.method, self.compressor, self.carrier)
+
+    def downlink_plan(self) -> Tuple[str, str]:
+        """(execution plan, degradation reason) for the downlink broadcast —
+        see downlink_plan_preview."""
+        return downlink_plan_preview(self.compressor, self.downlink_carrier)
 
     def train_kind(self) -> str:
         """'train' | 'prefill' | 'decode' of the named shape (custom
@@ -424,6 +475,8 @@ _FLAGS: List[Tuple[str, str, str]] = [
     ("--ratio", "ratio", "float"),
     ("--eta", "eta", "float"),
     ("--carrier", "carrier", "str"),
+    ("--downlink-carrier", "downlink_carrier", "str"),
+    ("--downlink-ratio", "downlink_ratio", "float"),
     ("--method-kw", "method_kw", "json"),
     ("--compressor-kw", "compressor_kw", "json"),
     ("--tp-pad-heads", "tp_pad_heads", "int"),
@@ -442,6 +495,15 @@ _FLAG_HELP = {
     "--carrier": "wire carrier for the EF sync (core/carriers.py): dense "
                  "all-reduce, sparse (values,indices) all-gather, the fused "
                  "Pallas client update, or block-quantized wires",
+    "--downlink-carrier": "wire carrier for the server → client broadcast "
+                          "(DESIGN.md §8): 'dense' keeps the implicit dense "
+                          "f32 broadcast; sparse/quant8/quant4 add the EF21 "
+                          "server memory h and ship C(g − h) as that "
+                          "carrier's wire",
+    "--downlink-ratio": "compression budget of the downlink compressor (the "
+                        "uplink compressor class, re-budgeted; like --ratio "
+                        "it only applies to ratio-bearing compressors — "
+                        "others reuse their compressor-kw budget unchanged)",
     "--clients": "emulated EF clients on the single-device mesh",
     "--method-kw": "JSON dict of extra Method kwargs (e.g. "
                    "'{\"gamma\": 0.01}')",
@@ -458,6 +520,7 @@ _FLAG_CHOICES = {
     "--method": sorted(METHODS),
     "--compressor": sorted(COMPRESSORS),
     "--carrier": sorted(CARRIERS),
+    "--downlink-carrier": sorted(DOWN_CARRIERS),
     "--moe-impl": list(MOE_IMPLS),
     "--optimizer": sorted(OPTIMIZERS),
 }

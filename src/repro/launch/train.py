@@ -87,6 +87,10 @@ def main(argv=None) -> None:
     plan, reason = sess.spec.plan()
     print(f"carrier={sess.spec.carrier} plan={plan}"
           + (f" (degraded: {reason})" if reason else ""))
+    if sess.spec.downlink_carrier != "dense":
+        dplan, dreason = sess.spec.downlink_plan()
+        print(f"downlink={sess.spec.downlink_carrier} plan={dplan}"
+              + (f" (degraded: {dreason})" if dreason else ""))
 
     sess.train(args.steps, log_every=args.log_every, verbose=True)
     if sess.spec.ckpt_dir:

@@ -74,6 +74,49 @@ SCRIPT = textwrap.dedent("""
     np.testing.assert_allclose(np.asarray(g_sm["w"]), np.asarray(g_ref["w"]),
                                rtol=1e-5)
     print("abs-method message aggregation OK")
+
+    # downlink broadcast on the shard_map path: every device encodes the
+    # replicated server innovation (that IS the broadcast — the encoded wire
+    # is what travels) and decodes per-client. Proven against the vmap
+    # oracle over a sampled (method x uplink x downlink) grid, including
+    # both server modes and the fused uplink.
+    down_btk = C.BlockTopK(block=4, k_per_block=2)
+    grid = [
+        ("ef21_sgdm", "dense",  "quant4", down_btk),
+        ("ef21_sgdm", "sparse", "quant8", down_btk),
+        ("ef21_sgdm", "quant4", "sparse", down_btk),
+        ("ef21_sgd",  "fused",  "quant4", down_btk),
+        ("ef14_sgd",  "dense",  "sparse", down_btk),
+        ("ef21_sgdm", "dense",  "dense",  C.HardThreshold(lam=0.05)),
+    ]
+    for m_name, up, down, dcomp in grid:
+        kwargs = {"compressor": C.BlockTopK(block=4, k_per_block=2)}
+        if m_name == "ef21_sgdm":
+            kwargs["eta"] = 0.3
+        m = ef.make(m_name, **kwargs)
+        efc = D.EFConfig(method=m, carrier=up, data_axes=("data",),
+                         down_carrier=down, down_compressor=dcomp)
+        st = D.init_ef_state(efc, params, dp, init_grads=grads_t)
+        assert "h" in st
+        g_ref, st_ref = D.ef_round(efc, grads_t, st, None)
+        sspecs_d = {"clients": {k: {"w": P("data", None, None)}
+                                for k in st["clients"]},
+                    "server": {"w": P(None, None)},
+                    "h": {"w": P(None, None)}}
+        with mesh_lib.mesh_context(mesh):
+            g_sm, st_sm = jax.jit(lambda g, s: D.ef_round_sharded(
+                efc, g, s, None, mesh, gspecs, sspecs_d))(grads_t, st)
+        np.testing.assert_allclose(np.asarray(g_sm["w"]),
+                                   np.asarray(g_ref["w"]), rtol=1e-5,
+                                   atol=1e-7)
+        np.testing.assert_allclose(np.asarray(st_sm["h"]["w"]),
+                                   np.asarray(st_ref["h"]["w"]), rtol=1e-5,
+                                   atol=1e-7)
+        # the estimate every device steps with IS its broadcast memory
+        np.testing.assert_allclose(np.asarray(g_sm["w"]),
+                                   np.asarray(st_sm["h"]["w"]), rtol=0,
+                                   atol=0)
+        print(f"downlink {m_name}/{up}->{down} OK")
     print("MULTIDEVICE_OK")
 """)
 

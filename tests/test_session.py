@@ -50,6 +50,29 @@ def test_kill_and_resume_is_bit_identical(tmp_path):
     assert tail == got
 
 
+def test_kill_and_resume_bidirectional_covers_server_memory(tmp_path):
+    """The downlink server memory h (DESIGN.md §8) is part of ef_state and
+    must survive a kill-and-resume bit-exactly — restoring everything BUT h
+    would re-initialize the broadcast memory to g while the restored params
+    are mid-trajectory, silently desynchronizing server and clients."""
+    base = RunSpec(**TINY, downlink_carrier="quant4", downlink_ratio=0.1)
+    unint = Session(base)
+    unint.train(4, log_every=1)
+    assert "h" in unint.ef_state
+
+    interrupted = Session(dataclasses.replace(base, ckpt_dir=str(tmp_path)))
+    interrupted.train(2, log_every=1)
+    del interrupted
+
+    resumed = Session.resume(str(tmp_path))
+    assert resumed.step == 2
+    assert resumed.spec.downlink_carrier == "quant4"
+    resumed.train(4, log_every=1)
+    assert _leaves_equal(unint.params, resumed.params)
+    assert _leaves_equal(unint.ef_state["h"], resumed.ef_state["h"])
+    assert _leaves_equal(unint.ef_state, resumed.ef_state)
+
+
 def test_resume_refuses_foreign_spec_unless_overridden(tmp_path):
     spec = RunSpec(**TINY, ckpt_dir=str(tmp_path))
     sess = Session(spec)

@@ -69,6 +69,43 @@ def test_spec_eta_drives_every_eta_bearing_method():
     assert method.eta == 0.5
 
 
+def test_downlink_plan_preview_matches_real_carriers_over_grid():
+    """The jax-free downlink_plan_preview must agree with
+    Carrier.plan_down_with_reason for every (compressor × carrier) cell —
+    same plan, degradation reasons non-empty in the same cells (the fused
+    cell is reason-ful in BOTH: the spec turns it into a construction
+    error)."""
+    from repro.core import carriers as carrier_lib
+    from repro.launch import session as session_lib
+    for c in sorted(spec_lib.COMPRESSORS):
+        comp = session_lib.make_compressor(RunSpec(compressor=c))
+        for ca in sorted(spec_lib.CARRIERS):
+            real = carrier_lib.make(ca).plan_down_with_reason(comp)
+            mirror = spec_lib.downlink_plan_preview(c, ca)
+            assert mirror[0] == real[0], (c, ca, mirror, real)
+            assert bool(mirror[1]) == bool(real[1]), (c, ca)
+    assert spec_lib.DOWN_CARRIERS == spec_lib.CARRIERS - {"fused"}
+
+
+def test_downlink_spec_construction_and_factory():
+    from repro.core import compressors as comp_lib
+    from repro.launch import session as session_lib
+    with pytest.raises(ValueError, match="invalid RunSpec"):
+        RunSpec(downlink_carrier="fused")
+    with pytest.raises(ValueError, match="downlink_ratio"):
+        RunSpec(downlink_carrier="quant4", downlink_ratio=0.0)
+    # 'dense' downlink = NO downlink machinery: factory returns None
+    assert session_lib.make_down_compressor(RunSpec()) is None
+    # otherwise the uplink class re-budgeted to downlink_ratio — geometry
+    # kw carries over, absolute-budget kw must not shadow the ratio
+    spec = RunSpec(downlink_carrier="quant4", downlink_ratio=0.02,
+                   compressor_kw={"block": 64, "k_per_block": 9})
+    down = session_lib.make_down_compressor(spec)
+    assert isinstance(down, comp_lib.BlockTopK)
+    assert down.block == 64 and down.ratio == 0.02
+    assert down.k_per_block is None
+
+
 def test_plan_preview_matches_real_carriers_over_grid():
     """The jax-free plan_preview must agree with Carrier.plan_with_reason for
     every (method × compressor × carrier) cell: same plan, and degradation
@@ -132,6 +169,8 @@ def test_flag_spec_flag_stability():
         RunSpec(shape="prefill_32k", mesh="pod", state_sharding="zero",
                 ef_state_dtype="bfloat16", tp_pad_heads=4,
                 moe_impl="dense", optimizer="adamw"),
+        RunSpec(carrier="sparse", downlink_carrier="quant4",
+                downlink_ratio=0.02),
     ]
     for spec in cases:
         assert RunSpec.from_flags(spec.to_flags()) == spec, spec.to_flags()
@@ -198,6 +237,13 @@ def test_from_json_rejects_unknown_keys_and_bad_version():
         RunSpec.from_dict({**good, "version": 99})
     with pytest.raises(ValueError, match="version"):
         RunSpec.from_dict({k: v for k, v in good.items() if k != "version"})
+    # the v2 schema bump (downlink fields change what a spec EXECUTES):
+    # pre-downlink v1 specs are rejected loudly, never silently upgraded
+    assert spec_lib.SCHEMA_VERSION == 2
+    v1 = {k: v for k, v in good.items()
+          if k not in ("downlink_carrier", "downlink_ratio")}
+    with pytest.raises(ValueError, match="version"):
+        RunSpec.from_dict({**v1, "version": 1})
 
 
 # ---------------------------------------------------------------------------
