@@ -8,7 +8,6 @@ offline container; see EXPERIMENTS.md E1 for the validity argument.)
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Timer, csv_row, median_curves, save_json
 from repro.core import compressors as C

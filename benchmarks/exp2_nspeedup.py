@@ -6,7 +6,6 @@ Paper claims: EF21-SGDM/2M are fastest at every n AND improve as n grows
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Timer, csv_row, median_curves, save_json
 from repro.core import compressors as C

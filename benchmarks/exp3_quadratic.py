@@ -6,7 +6,6 @@ Generator parameters follow the paper (n=100, λ=0.01, s=1) with d scaled for CP
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Timer, csv_row, median_curves, save_json
 from repro.core import compressors as C

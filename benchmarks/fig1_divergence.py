@@ -9,7 +9,6 @@ Paper claims validated here:
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Timer, csv_row, median_curves, save_json
 from repro.core import compressors as C

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Timer, csv_row, save_json
+from benchmarks.common import csv_row, save_json
 from repro.kernels import ops, ref
 
 
@@ -94,6 +94,42 @@ def _wire_savings(out: dict) -> None:
             out["downlink_words_dense"] / out[f"downlink_words_{name}"])
 
 
+def _schedule_wire(out: dict) -> None:
+    """Mixed-schedule wire accounting (DESIGN.md §9): dense norms/biases +
+    quant4 embeds + sparse attention/MLP over the real (smoke) smollm param
+    tree, per group and in total, against the uniform BlockTopK baseline —
+    the scenario lever per-group schedules buy over any single-knob config."""
+    import jax
+
+    from repro.configs import base as cb
+    from repro.core import compressors as C
+    from repro.core import ef as ef_lib
+    from repro.core import schedule as sched_lib
+    from repro.models import model as model_lib
+
+    cfg = cb.get_smoke("smollm-360m")
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    btk = C.BlockTopK(ratio=0.05)
+    method = ef_lib.EF21SGDM(compressor=btk, eta=0.1)
+    mixed = sched_lib.CompressionSchedule((
+        sched_lib.Group(pattern="norm|bias", compressor=C.Identity(),
+                        carrier="dense"),
+        sched_lib.Group(pattern="embed", compressor=btk, carrier="quant4"),
+        sched_lib.Group(pattern="*", compressor=C.BlockTopK(ratio=0.02),
+                        carrier="sparse"),
+    ))
+    uniform = sched_lib.CompressionSchedule.uniform(btk, carrier="sparse")
+    per, total = sched_lib.wire_words_tree(mixed, method, shapes, "up")
+    for grp, words in zip(mixed.groups, per):
+        out[f"sched_wire_up_{grp.pattern.replace('|', '_')}"] = words
+    out["sched_wire_up_mixed_total"] = total
+    _, out["sched_wire_up_uniform_total"] = sched_lib.wire_words_tree(
+        uniform, method, shapes, "up")
+    out["sched_mixed_vs_uniform"] = (
+        out["sched_wire_up_uniform_total"] / max(total, 1e-9))
+
+
 def run() -> dict:
     rng = np.random.RandomState(0)
     out = {}
@@ -124,6 +160,7 @@ def run() -> dict:
 
     _quantize_bench(out, x)
     _wire_savings(out)
+    _schedule_wire(out)
     _train_step_compare(out)
 
     save_json("kernel_bench", out)

@@ -24,8 +24,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
-import os
 from typing import Dict, List, Optional
 
 from repro.configs import base as cb

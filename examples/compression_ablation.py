@@ -65,3 +65,37 @@ print(f"{'method':15s} {'compressor':12s} {'end ‖∇f‖²':>12s} "
       f"{'coords/round':>13s} {'wire up+down':>13s}")
 for mname, cname, gn, coords, wire in sorted(rows, key=lambda r: r[2]):
     print(f"{mname:15s} {cname:12s} {gn:12.3e} {coords:13.0f} {wire:13.0f}")
+
+# ---------------------------------------------------------------------------
+# mixed per-parameter-group schedule (DESIGN.md §9) on a multi-leaf problem:
+# dense biases (+ the model's "norm"-like tiny tensors), quant4 on the input
+# layer (the embedding analogue), sparse on the remaining matrices —
+# per-group and total wire words against the uniform sparse baseline
+# ---------------------------------------------------------------------------
+from repro.core import compressors as C  # noqa: E402
+from repro.core import ef as ef_lib  # noqa: E402
+from repro.core import schedule as sched_lib  # noqa: E402
+
+mlp = problems.MLPClassification(n=8, m_per_client=128, seed=0)
+btk = C.BlockTopK(block=64, k_per_block=4)
+method = ef_lib.EF21SGDM(compressor=btk, eta=0.1)
+mixed = sched_lib.CompressionSchedule((
+    sched_lib.Group(pattern="b", compressor=C.Identity(), carrier="dense"),
+    sched_lib.Group(pattern="w1", compressor=btk, carrier="quant4"),
+    sched_lib.Group(pattern="*", compressor=C.BlockTopK(block=64,
+                                                        k_per_block=2),
+                    carrier="sparse"),
+))
+uniform = sched_lib.CompressionSchedule.uniform(btk, carrier="sparse")
+print("\nmixed schedule (dense b* | quant4 w1 | sparse *) vs uniform sparse:")
+for label, sched in (("uniform", uniform), ("mixed", mixed)):
+    cfg = simulate.SimConfig(n=8, batch_size=4, gamma=0.05, steps=400,
+                             b_init=4, schedule=sched)
+    out = simulate.run_numpy(mlp, method, cfg, seed=0)
+    gn = float(np.asarray(out["grad_norm_sq"][-50:]).mean())
+    per = ", ".join(f"{g.pattern}={w:.0f}" for g, w in zip(
+        sched.groups, np.asarray(out["wire_words_up_per_group"])))
+    print(f"  {label:8s} end ‖∇f‖² {gn:9.3e}  wire/round up "
+          f"{out['wire_words_up_per_round']:6.0f} [{per}] "
+          f"total {out['wire_words_total_per_round']:.0f}")
+print(sched_lib.plan_table(mixed, method, mlp.init_x()))

@@ -104,16 +104,15 @@ def axis_size(axis_name) -> jax.Array:
 def sparse_geom(comp, d: int) -> Tuple[int, int, int]:
     """(nb, block, kb) geometry of the fixed-size TopK-family wire for a flat
     (d,) leaf. Plain TopK = one block spanning the leaf (exact global TopK);
-    shared by the sparse and quantized carriers."""
+    BlockTopK geometry is d-aware (``BlockTopK.geom``: sub-block leaves get a
+    proportional budget, not the degenerate full-block K); shared by the
+    sparse and quantized carriers."""
     if isinstance(comp, comp_lib.BlockTopK):
-        block, kb = comp.block, comp._kb()
-    elif isinstance(comp, comp_lib.TopK):
-        block, kb = d, comp._k(d)
-    else:
-        raise ValueError(
-            f"no fixed-size sparse wire for {type(comp).__name__}")
-    nb = -(-d // block)
-    return nb, block, kb
+        return comp.geom(d)
+    if isinstance(comp, comp_lib.TopK):
+        return 1, d, comp._k(d)
+    raise ValueError(
+        f"no fixed-size sparse wire for {type(comp).__name__}")
 
 
 def sparse_select(comp, delta: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -364,10 +363,27 @@ class FusedPallasCarrier(DenseCarrier):
     name: str = "fused"
     interpret: Optional[bool] = None
 
+    _LANES = 128                     # TPU vector lane width (f32)
+
     def _interpret(self) -> bool:
         if self.interpret is not None:
             return self.interpret
         return jax.default_backend() != "tpu"
+
+    @classmethod
+    def _kernel_geom(cls, comp, d: int) -> Tuple[int, int, int]:
+        """(nb, launch_block, kb): the d-aware selection geometry
+        (``BlockTopK.geom``) with a SINGLE-block leaf's launch block rounded
+        up to whole TPU lanes, so the sub-block leaves this geometry
+        introduced never hand Mosaic an unaligned tile — padding zeros in
+        the row cannot change the top-kb selection. Multi-block leaves keep
+        the geometry block untouched (rounding it would shift the row
+        boundaries off the block boundaries); their alignment is whatever
+        the compressor's own block is, as it always was."""
+        nb, block, kb = comp.geom(d)
+        if nb == 1:
+            block = -(-block // cls._LANES) * cls._LANES
+        return nb, block, kb
 
     def plan_with_reason(self, method, eta=None):
         if method.name not in ("ef21_sgdm", "ef21_sgd"):
@@ -398,7 +414,6 @@ class FusedPallasCarrier(DenseCarrier):
         from repro.kernels import ef_update as ef_kernel
 
         comp = method.compressor
-        block, kb = comp.block, comp._kb()
         if method.name == "ef21_sgd":
             eta_f = 1.0                                  # v' = grad exactly
             v_tree = state["g"]
@@ -413,12 +428,20 @@ class FusedPallasCarrier(DenseCarrier):
 
         v_out, g_out, c_out = [], [], []
         for grad, v, g in zip(grad_leaves, v_leaves, g_leaves):
+            # d-aware geometry per leaf (BlockTopK.geom): the kernel selects
+            # the same kb the dense reference selection uses, so sub-block
+            # leaves stay consistent across carriers. The LAUNCH block is
+            # rounded up to whole TPU lanes (zeros pad the row — exactly the
+            # trailing-partial-block case the kernel always handled: padding
+            # never outranks a real value, and a 0 threshold keeps
+            # everything, so the selection over the padded row equals the
+            # selection over the geometry block).
             if batched:
                 # pad each client's leaf to whole blocks FIRST so client
                 # boundaries and block boundaries coincide in the flat view
                 dp = grad.shape[0]
                 d = grad[0].size
-                nb = -(-d // block)
+                nb, block, kb = self._kernel_geom(comp, d)
                 pad = nb * block - d
 
                 def prep(x):
@@ -430,6 +453,7 @@ class FusedPallasCarrier(DenseCarrier):
                 unprep = lambda x: x[:, :d].reshape(grad.shape)  # noqa: E731
                 v2, g2, c = unprep(v2), unprep(g2), unprep(c)
             else:
+                _, block, kb = self._kernel_geom(comp, grad.size)
                 v2, g2, c = ef_kernel.ef21_sgdm_update(
                     grad, v, g, eta=eta_f, block=block, k=kb,
                     interpret=interp)

@@ -155,38 +155,49 @@ class BlockTopK(Compressor):
     block: int = 1024
     k_per_block: Optional[int] = None
 
-    def _kb(self) -> int:
+    def geom(self, d: int) -> Tuple[int, int, int]:
+        """(nb, block_eff, kb) — the d-AWARE wire geometry. A leaf smaller
+        than one block becomes a single block of its own size, so the
+        per-block budget scales with the actual leaf: a (64,) norm under
+        ratio=0.05/block=1024 keeps round(0.05·64)=3 coordinates, not the
+        degenerate round(0.05·1024)=51 a fixed block would grant it (tiny
+        tensors used to get K larger than themselves). Leaves of at least
+        one block keep the exact legacy geometry."""
+        block = min(self.block, max(1, int(d)))
         if self.k_per_block is not None:
-            return max(1, min(self.k_per_block, self.block))
-        return max(1, int(round(self.ratio * self.block)))
+            kb = max(1, min(self.k_per_block, block))
+        else:
+            kb = max(1, min(block, int(round(self.ratio * block))))
+        nb = -(-d // block) if d > 0 else 1
+        return nb, block, kb
 
     def alpha(self, d: int) -> float:
-        return self._kb() / self.block
+        _, block, kb = self.geom(d)
+        return kb / block
 
     @property
     def has_sparse_carrier(self) -> bool:
         return True
 
     def _blocks(self, x: Array) -> Tuple[Array, int]:
-        d = x.size
-        nb = -(-d // self.block)
-        pad = nb * self.block - d
-        xb = jnp.pad(x, (0, pad)).reshape(nb, self.block)
+        nb, block, _ = self.geom(x.size)
+        pad = nb * block - x.size
+        xb = jnp.pad(x, (0, pad)).reshape(nb, block)
         return xb, pad
 
     def sparse(self, x: Array, rng=None) -> Tuple[Array, Array]:
         xb, _ = self._blocks(x)
-        kb = self._kb()
+        _, block, kb = self.geom(x.size)
         _, idx = jax.lax.top_k(jnp.abs(xb), kb)              # (nb, kb) local indices
         vals = jnp.take_along_axis(xb, idx, axis=1)
-        gidx = idx + jnp.arange(xb.shape[0])[:, None] * self.block
+        gidx = idx + jnp.arange(xb.shape[0])[:, None] * block
         return vals.reshape(-1), gidx.reshape(-1).astype(jnp.int32)
 
     def __call__(self, x: Array, rng=None) -> Array:
         # per-block threshold mask (scatter-free; the Pallas kernel's semantics)
         xb, _ = self._blocks(x)
         ab = jnp.abs(xb)
-        vals = jax.lax.top_k(ab, self._kb())[0]
+        vals = jax.lax.top_k(ab, self.geom(x.size)[2])[0]
         thresh = vals[:, -1:]
         out = jnp.where(ab >= thresh, xb, jnp.zeros_like(xb))
         return out.reshape(-1)[: x.size].reshape(x.shape)

@@ -48,6 +48,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import carriers as carrier_lib
 from repro.core import compressors as comp_lib
 from repro.core import ef as ef_lib
+from repro.core import schedule as sched_lib
 
 PyTree = Any
 
@@ -66,9 +67,18 @@ class EFConfig:
     # implicit dense g_server, bit-identical to the unidirectional runtime
     down_carrier: str = "dense"
     down_compressor: Optional[comp_lib.Compressor] = None
+    # per-parameter-group compression (DESIGN.md §9): when set, BOTH runtimes
+    # dispatch every leg (uplink wire, aggregation, downlink, state init)
+    # through the grouped engine in core/schedule.py and the single-knob
+    # fields above (carrier / down_*) are ignored — each group carries its
+    # own. None runs the legacy single-compressor path unchanged; a uniform
+    # one-group schedule is bit-identical to it (tests/test_schedule.py).
+    schedule: Optional[sched_lib.CompressionSchedule] = None
 
     @property
     def has_downlink(self) -> bool:
+        if self.schedule is not None:
+            return self.schedule.has_downlink
         return self.down_carrier != "dense" or self.down_compressor is not None
 
     def down_comp(self) -> comp_lib.Compressor:
@@ -108,11 +118,18 @@ def init_ef_state(efc: EFConfig, params: PyTree, dp: int,
                   init_grads: Optional[PyTree] = None) -> Dict:
     """init_grads: optional per-client grads (dp leading) for Alg 1 line 2."""
     method = efc.method
+    if efc.schedule is not None:
+        # per-group init (per-group EF-state dtypes), merged onto the full
+        # treedef — bit-identical to method.init for a uniform schedule
+        init_one = lambda p, g=None: sched_lib.init_state_grouped(  # noqa: E731
+            efc.schedule, method, p, init_grads=g)
+    else:
+        init_one = method.init
     if init_grads is None:
-        clients = jax.vmap(lambda _: method.init(params))(jnp.arange(dp))
+        clients = jax.vmap(lambda _: init_one(params))(jnp.arange(dp))
         server = ef_lib.server_init(method, params)
     else:
-        clients = jax.vmap(lambda g: method.init(params, init_grads=g))(init_grads)
+        clients = jax.vmap(lambda g: init_one(params, g))(init_grads)
         server = ef_lib.server_init(
             method, params,
             jax.tree_util.tree_map(lambda g: g.mean(0), init_grads))
@@ -151,6 +168,7 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
 
     method = efc.method
     c_axes = efc.data_axes
+    sched = efc.schedule
     carrier = carrier_lib.make(efc.carrier)
     plan = carrier.plan(method, eta)
     down_carrier = carrier_lib.make(efc.down_carrier)
@@ -161,6 +179,12 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
         ex = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
         g, cl = sq(grads_l), sq(clients_l)        # strip the client dim (local=1)
 
+        if sched is not None:
+            # grouped engine: one wire (and one aggregation collective) per
+            # group, each on its group's carrier/compressor
+            msg_mean, new_cl = sched_lib.round_local(
+                sched, method, g, cl, c_axes, rng_l, eta)
+            return ex(new_cl), msg_mean
         if plan == "fused":
             c_tree, new_cl = carrier.fused_update(method, g, cl, eta=eta)
             msg_mean = jax.tree_util.tree_map(
@@ -203,8 +227,12 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
             # every device runs the same encode of the replicated-in-value
             # new_server (that IS the broadcast — the encoded wire is what
             # travels) and the same decode its client would run
-            g_est, h_new = ef_lib.downlink_sync(
-                down_carrier, down_comp, new_server, h_l, rng=r_down)
+            if sched is not None:
+                g_est, h_new = sched_lib.downlink_round_grouped(
+                    sched, new_server, h_l, r_down)
+            else:
+                g_est, h_new = ef_lib.downlink_sync(
+                    down_carrier, down_comp, new_server, h_l, rng=r_down)
             return new_cl, new_server, h_new, g_est
 
         h_specs = state_specs.get("h", server_specs)
@@ -247,7 +275,10 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
     plan = carrier.plan(method, eta)
     rngs = jax.random.split(rng, dp) if rng is not None else None
 
-    if plan == "fused":
+    if efc.schedule is not None:
+        msg_mean, new_clients = sched_lib.round_batched(
+            efc.schedule, method, grads, clients, dp, rng, eta)
+    elif plan == "fused":
         c_tree, new_clients = carrier.fused_update(
             method, grads, clients, eta=eta, batched=True)
         msg_mean = jax.tree_util.tree_map(lambda c: c.mean(0), c_tree)
@@ -272,9 +303,13 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
     if not efc.has_downlink:
         return new_server, new_state
     r_down = None if rng is None else jax.random.fold_in(rng, DOWNLINK_FOLD)
-    g_est, h_new = ef_lib.downlink_sync(
-        carrier_lib.make(efc.down_carrier), efc.down_comp(), new_server,
-        ef_state["h"], rng=r_down)
+    if efc.schedule is not None:
+        g_est, h_new = sched_lib.downlink_round_grouped(
+            efc.schedule, new_server, ef_state["h"], r_down)
+    else:
+        g_est, h_new = ef_lib.downlink_sync(
+            carrier_lib.make(efc.down_carrier), efc.down_comp(), new_server,
+            ef_state["h"], rng=r_down)
     new_state["h"] = h_new
     return g_est, new_state
 

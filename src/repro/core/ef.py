@@ -170,13 +170,40 @@ class Method:
         if isinstance(c, comp_lib.RandK):
             return c._k(d)
         if isinstance(c, comp_lib.BlockTopK):
-            nb = -(-d // c.block)
-            return nb * c._kb()
+            nb, _, kb = c.geom(d)       # d-aware: sub-block leaves keep K ≤ d
+            return nb * kb
         if isinstance(c, comp_lib.NaturalCompression):
             return d * 9.0 / 32.0
         if isinstance(c, comp_lib.HardThreshold):
             return d  # data-dependent; upper bound
         return d
+
+    def coords_per_message_tree(self, tree, schedule=None, carrier=None,
+                                direction: str = "up", compressor=None,
+                                eta=None) -> float:
+        """The pytree/schedule form of ``coords_per_message``, summed over
+        groups with per-leaf geometry. The units follow the flat-d form
+        exactly: no ``carrier`` → the idealized transmitted-coordinate count
+        (the paper's x-axis; ``direction='down'`` counts the broadcast
+        words, as flat-d does); with a schedule each group already names its
+        own carrier, so passing ``carrier``/``compressor`` alongside one is
+        an error rather than silently ignored — for the honest executed
+        wire-word sums use ``schedule.wire_words_tree`` directly. Without a
+        schedule this collapses to the flat-d form over the whole tree."""
+        if schedule is None:
+            return self.coords_per_message(tree_dim(tree), carrier, direction,
+                                           compressor)
+        if carrier is not None or compressor is not None:
+            raise ValueError(
+                "coords_per_message_tree: with a schedule every group names "
+                "its own carrier/compressor — pass only the schedule (use "
+                "schedule.wire_words_tree for executed wire-word sums)")
+        from repro.core import schedule as sched_lib
+        if direction == "down":
+            _, total = sched_lib.wire_words_tree(schedule, self, tree,
+                                                 direction="down", eta=eta)
+            return total
+        return sched_lib.coords_tree(schedule, self, tree)
 
     def _cast(self, tree):
         return tree_cast(tree, self.state_dtype)

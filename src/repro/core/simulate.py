@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.core import carriers as carrier_lib
 from repro.core import compressors as comp_lib
 from repro.core import ef as ef_lib
+from repro.core import schedule as sched_lib
 
 PyTree = Any
 
@@ -48,9 +49,16 @@ class SimConfig:
     down_carrier: str = "dense"
     down_compressor: Optional[Any] = None   # a Compressor (frozen → hashable)
     down_memory: bool = True
+    # per-parameter-group compression (DESIGN.md §9): when set, the round and
+    # the wire accounting dispatch through the grouped engine in
+    # core/schedule.py, exactly like EFConfig.schedule on the production
+    # runtimes; the single-knob carrier/down_* fields above are ignored.
+    schedule: Optional[sched_lib.CompressionSchedule] = None
 
     @property
     def has_downlink(self) -> bool:
+        if self.schedule is not None:
+            return self.schedule.has_downlink
         return (self.down_carrier != "dense"
                 or self.down_compressor is not None)
 
@@ -80,7 +88,11 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
         return jax.tree_util.tree_map(lambda g: g.mean(0), gs)
 
     g0 = jax.vmap(init_grad_one)(clients, _client_rngs(r_init, cfg.n))
-    states = jax.vmap(lambda g: method.init(x0, init_grads=g))(g0)
+    if cfg.schedule is not None:
+        states = jax.vmap(lambda g: sched_lib.init_state_grouped(
+            cfg.schedule, method, x0, init_grads=g))(g0)
+    else:
+        states = jax.vmap(lambda g: method.init(x0, init_grads=g))(g0)
     g_server = ef_lib.server_init(
         method, x0, jax.tree_util.tree_map(lambda g: g.mean(0), g0))
 
@@ -125,7 +137,11 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
 
         r_grads = _client_rngs(r_grad, cfg.n)
         plan = carrier.plan(method, eta_t)   # static: traced ηₜ forces 'dense'
-        if plan == "fused":
+        if cfg.schedule is not None:
+            grads = jax.vmap(client_grads)(clients, r_grads)
+            msg_mean, states_new = sched_lib.round_batched(
+                cfg.schedule, method, grads, states, cfg.n, r_comp, eta_t)
+        elif plan == "fused":
             grads = jax.vmap(client_grads)(clients, r_grads)
             c_tree, states_new = carrier.fused_update(
                 method, grads, states, eta=eta_t, batched=True)
@@ -150,9 +166,14 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
         fl = problem.loss(x_next)
         if has_down:
             r_down = jax.random.fold_in(r_comp, carrier_lib.DOWNLINK_FOLD)
-            g_est_new, _ = ef_lib.downlink_sync(
-                down_car, down_comp, g_server_new, g_est, rng=r_down,
-                memory=cfg.down_memory)
+            if cfg.schedule is not None:
+                g_est_new, _ = sched_lib.downlink_round_grouped(
+                    cfg.schedule, g_server_new, g_est, r_down,
+                    memory=cfg.down_memory)
+            else:
+                g_est_new, _ = ef_lib.downlink_sync(
+                    down_car, down_comp, g_server_new, g_est, rng=r_down,
+                    memory=cfg.down_memory)
             return (x_next, states_new, g_server_new, g_est_new, rng), (gn, fl)
         return (x_next, states_new, g_server_new, rng), (gn, fl)
 
@@ -167,20 +188,36 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
     # traced ηₜ), what went on the wire was the dense tensor — d words
     eta_static = None if cfg.time_varying else (
         cfg.eta if cfg.eta is not None else getattr(method, "eta", 1.0))
-    executed = cfg.carrier \
-        if carrier.plan(method, eta_static) != "dense" else "dense"
-    up_words = method.coords_per_message(d_total, carrier=executed) * cfg.n
-    # downlink: one broadcast message per client link; without a downlink
-    # carrier the server ships the dense f32 estimate — d words per client
-    down_each = carrier_lib.downlink_words(down_car, down_comp, d_total) \
-        if has_down else float(d_total)
-    down_words = down_each * cfg.n
+    if cfg.schedule is not None:
+        # per-group accounting (DESIGN.md §9): each group's executed wire,
+        # summed over its leaves — exposed per group AND in total
+        up_per, up_each = sched_lib.wire_words_tree(
+            cfg.schedule, method, x0, "up", eta_static)
+        dn_per, dn_each = sched_lib.wire_words_tree(
+            cfg.schedule, method, x0, "down", eta_static)
+        up_words, down_words = up_each * cfg.n, dn_each * cfg.n
+        coords = sched_lib.coords_tree(cfg.schedule, method, x0) * cfg.n
+        group_words = {
+            "wire_words_up_per_group": tuple(w * cfg.n for w in up_per),
+            "wire_words_down_per_group": tuple(w * cfg.n for w in dn_per),
+        }
+    else:
+        executed = cfg.carrier \
+            if carrier.plan(method, eta_static) != "dense" else "dense"
+        up_words = method.coords_per_message(d_total, carrier=executed) * cfg.n
+        # downlink: one broadcast message per client link; without a downlink
+        # carrier the server ships the dense f32 estimate — d words per client
+        down_each = carrier_lib.downlink_words(down_car, down_comp, d_total) \
+            if has_down else float(d_total)
+        down_words = down_each * cfg.n
+        coords = method.coords_per_message(d_total) * cfg.n
+        group_words = {}
     return {
         "grad_norm_sq": gns,
         "loss": fls,
         "x_final": x_fin,
         # paper x-axis: idealized transmitted-coordinate count
-        "coords_per_round": method.coords_per_message(d_total) * cfg.n,
+        "coords_per_round": coords,
         # honest word count of the executed wire (values + indices; dense
         # all-reduce ships d) — see Carrier.wire_words. The legacy key is
         # the UPLINK leg; the split keys make the total wire budget per
@@ -189,6 +226,7 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
         "wire_words_up_per_round": up_words,
         "wire_words_down_per_round": down_words,
         "wire_words_total_per_round": up_words + down_words,
+        **group_words,
     }
 
 

@@ -11,7 +11,6 @@ import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ef_update as _ef
 from repro.kernels import flash_attention as _fa

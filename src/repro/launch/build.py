@@ -7,8 +7,7 @@
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +23,64 @@ from repro.models import model as model_lib
 from repro.optim import optimizer as opt_lib
 
 
+class PlanDegradationWarning(UserWarning):
+    """A requested non-dense carrier degraded to the always-correct dense
+    plan. Stable category so callers/tests can filter it, and so the
+    once-per-(group, reason) dedup below has a well-defined identity."""
+
+
+# (config, scope, reason) triples already warned. A Session builds its
+# EFConfig more than once (lower() + train state) and sweeps construct
+# hundreds — re-warning the identical degradation every time buried real
+# signal — but the key includes the full transport-defining config, so a
+# LATER session with a different spec that happens to degrade for the same
+# textual reason still gets its own warning. ``reset_plan_warnings`` exists
+# for tests.
+_WARNED: set = set()
+
+
+def reset_plan_warnings() -> None:
+    _WARNED.clear()
+
+
+def _warn_degraded(config, scope: str, reason: str) -> None:
+    import warnings
+    key = (config, scope, reason)
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(f"{scope} degrades to the dense plan: {reason}",
+                  PlanDegradationWarning, stacklevel=3)
+
+
+def _check_group_plans(config, schedule, method, eta) -> None:
+    """The authoritative per-group carrier checks: a fused group that would
+    silently run unfused is a hard error; any other degradation warns once
+    per (group, reason)."""
+    from repro.core import carriers as carrier_lib
+    from repro.core import schedule as sched_lib
+    for grp in schedule.groups:
+        m_g = sched_lib.group_method(method, grp)
+        plan, reason = carrier_lib.make(grp.carrier).plan_with_reason(
+            m_g, eta)
+        if grp.carrier == "fused" and plan != "fused":
+            raise ValueError(
+                f"group {grp.pattern!r}: carrier='fused' would silently run "
+                f"the UNFUSED dense plan: {reason}")
+        if grp.carrier != "dense" and plan == "dense":
+            _warn_degraded(config,
+                           f"group {grp.pattern!r} carrier {grp.carrier}",
+                           reason)
+        if grp.has_downlink:
+            dplan, dreason = carrier_lib.make(
+                grp.down_carrier).plan_down_with_reason(grp.down_comp())
+            if grp.down_carrier != "dense" and dplan == "dense":
+                _warn_degraded(
+                    config,
+                    f"group {grp.pattern!r} downlink {grp.down_carrier}",
+                    dreason)
+
+
 def default_ef_config(mesh, plan: sh.ShardPlan,
                       method_name: str = "ef21_sgdm",
                       compressor_name: str = "block_topk",
@@ -31,12 +88,15 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
                       carrier: str = "dense",
                       method: Optional[ef_lib.Method] = None,
                       down_carrier: str = "dense",
-                      down_compressor: Optional[comp_lib.Compressor] = None
-                      ) -> dist.EFConfig:
+                      down_compressor: Optional[comp_lib.Compressor] = None,
+                      schedule=None) -> dist.EFConfig:
     """EFConfig assembly + the authoritative carrier-plan checks. Pass a
     prebuilt ``method`` (launch/session.py builds one from the RunSpec,
     including method_kw/compressor_kw) to skip the name-based construction
-    here — the carrier validation below runs either way."""
+    here — the carrier validation below runs either way. With a
+    ``schedule`` (core/schedule.py) the checks run PER GROUP and the
+    single-knob carrier/downlink fields are recorded but ignored by the
+    runtimes."""
     from repro.core import carriers as carrier_lib
     carrier_obj = carrier_lib.make(carrier)  # fail fast on unknown names
     if method is None:
@@ -49,26 +109,33 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
         if method_name in ("ef21_sgdm", "ef21_sgd2m", "sgdm", "ef21_storm"):
             kwargs["eta"] = eta
         method = ef_lib.make(method_name, **kwargs)
+    # the dedup key: everything that defines this config's transport — two
+    # constructions of the same experiment share one warning, a different
+    # experiment degrading for the same reason warns on its own
+    config_key = (method, carrier, down_carrier, down_compressor, schedule)
+    if schedule is not None:
+        _check_group_plans(config_key, schedule, method, eta)
     # the carrier itself is the source of truth for what it can execute; an
     # explicitly requested fused carrier that would silently degrade to the
     # unfused dense plan is a misconfiguration worth failing fast on, and any
-    # other degraded carrier must at least say so in logs
+    # other degraded carrier must at least say so in logs. With a schedule
+    # the single-knob fields are recorded but never consulted by a runtime,
+    # so NONE of their plan checks apply — the per-group checks above are
+    # the authoritative ones.
     exec_plan, reason = carrier_obj.plan_with_reason(method, eta)
-    if carrier == "fused" and exec_plan != "fused":
+    if carrier == "fused" and exec_plan != "fused" and schedule is None:
         raise ValueError(
             "--carrier fused would silently run the UNFUSED dense plan: "
             f"{reason}. Pick --carrier dense or sparse for "
             f"method={method.name!r} "
             f"compressor={type(method.compressor).__name__!r}.")
-    if carrier != "dense" and exec_plan == "dense":
-        import warnings
-        warnings.warn(
-            f"--carrier {carrier} degrades to the dense plan: {reason}",
-            stacklevel=2)
+    if carrier != "dense" and exec_plan == "dense" and schedule is None:
+        _warn_degraded(config_key, f"--carrier {carrier}", reason)
     # downlink (DESIGN.md §8): a fused downlink is a hard misconfiguration
     # (the fused kernel is the uplink client update); any other degradation
     # to the dense broadcast must at least say so in logs
-    if down_carrier != "dense" or down_compressor is not None:
+    if schedule is None and (down_carrier != "dense"
+                             or down_compressor is not None):
         down_obj = carrier_lib.make(down_carrier)
         down_plan, down_reason = down_obj.plan_down_with_reason(
             down_compressor if down_compressor is not None
@@ -76,11 +143,10 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
         if down_carrier == "fused":
             raise ValueError(
                 f"--downlink-carrier fused is not a thing: {down_reason}")
-        if down_carrier != "dense" and down_plan == "dense":
-            import warnings
-            warnings.warn(
-                f"--downlink-carrier {down_carrier} degrades to the dense "
-                f"broadcast: {down_reason}", stacklevel=2)
+        if down_carrier != "dense" and down_plan == "dense" \
+                and schedule is None:
+            _warn_degraded(config_key, f"--downlink-carrier {down_carrier}",
+                           down_reason)
     # the EF client axes follow the plan's client granularity (pod clients
     # aggregate over 'pod' only; the within-pod mean happens in the vmapped
     # per-client loss)
@@ -91,7 +157,7 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
         c_ax = (c_ax,)
     return dist.EFConfig(method=method, carrier=carrier,
                          data_axes=tuple(c_ax), down_carrier=down_carrier,
-                         down_compressor=down_compressor)
+                         down_compressor=down_compressor, schedule=schedule)
 
 
 def _replicated(mesh, x):
@@ -125,7 +191,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh,
         lambda: dist.init_ef_state(
             efc, model_lib.init_params(cfg, jax.random.PRNGKey(0)), n))
     ef_specs_p = sh.ef_state_pspecs(cfg, mesh, plan, efc.method,
-                                    downlink=efc.has_downlink)
+                                    downlink=efc.has_downlink,
+                                    schedule=efc.schedule)
     ef_state = sh._sds(ef_shapes, ef_specs_p, mesh)
 
     # per-client grads share the client-state layout (leading client axis)

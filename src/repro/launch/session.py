@@ -96,6 +96,60 @@ def make_down_compressor(spec: spec_lib.RunSpec
     return cls(**kw)
 
 
+def _group_compressor(entry: Dict[str, Any]) -> comp_lib.Compressor:
+    """Compressor for one RESOLVED group entry (spec_lib.resolved_groups):
+    same rules as make_compressor — ratio flows in only when the class has a
+    ratio field, compressor_kw overrides explicitly, unknown keys fail."""
+    cls = comp_lib.REGISTRY[entry["compressor"]]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    kw = dict(entry["compressor_kw"])
+    if "ratio" in fields and "ratio" not in kw:
+        kw["ratio"] = entry["ratio"]
+    unknown = sorted(set(kw) - fields)
+    if unknown:
+        raise ValueError(f"group {entry['pattern']!r}: compressor_kw keys "
+                         f"{unknown} are not fields of {cls.__name__}; have "
+                         f"{sorted(fields)}")
+    return cls(**kw)
+
+
+def _group_down_compressor(entry: Dict[str, Any]
+                           ) -> Optional[comp_lib.Compressor]:
+    """The group's downlink compressor: None without a downlink carrier,
+    otherwise the group's compressor class re-budgeted to the group's
+    downlink_ratio (absolute-budget kwargs dropped — the make_down_compressor
+    rule, per group)."""
+    if entry["downlink_carrier"] == "dense":
+        return None
+    cls = comp_lib.REGISTRY[entry["compressor"]]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    kw = {k: v for k, v in entry["compressor_kw"].items()
+          if k in fields and k not in ("k", "k_per_block", "ratio")}
+    if "ratio" in fields:
+        kw["ratio"] = entry["downlink_ratio"]
+    return cls(**kw)
+
+
+def make_schedule(spec: spec_lib.RunSpec):
+    """The CompressionSchedule named by the spec's ``groups``, or None when
+    the spec has no explicit groups (the legacy single-compressor path — a
+    uniform one-group schedule would be bit-identical, but None keeps the
+    regression anchor trivially exact and the state trees byte-stable)."""
+    if not spec.groups:
+        return None
+    from repro.core import schedule as sched_lib
+    groups = []
+    for entry in spec_lib.resolved_groups(spec):
+        groups.append(sched_lib.Group(
+            pattern=entry["pattern"],
+            compressor=_group_compressor(entry),
+            carrier=entry["carrier"],
+            down_carrier=entry["downlink_carrier"],
+            down_compressor=_group_down_compressor(entry),
+            state_dtype=entry["ef_state_dtype"]))
+    return sched_lib.CompressionSchedule(tuple(groups))
+
+
 def make_method(spec: spec_lib.RunSpec) -> ef_lib.Method:
     """EF method named by the spec, usable standalone (simulator examples)
     or via ``ef_config`` on the production path."""
@@ -127,7 +181,8 @@ def ef_config(spec: spec_lib.RunSpec, mesh, plan: sh.ShardPlan
         mesh, plan, method_name=spec.method, compressor_name=spec.compressor,
         ratio=spec.ratio, eta=spec.eta, carrier=spec.carrier,
         method=make_method(spec), down_carrier=spec.downlink_carrier,
-        down_compressor=make_down_compressor(spec))
+        down_compressor=make_down_compressor(spec),
+        schedule=make_schedule(spec))
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +247,21 @@ class Session:
     def method(self) -> ef_lib.Method:
         return make_method(self.spec)
 
+    def schedule_table(self) -> Optional[str]:
+        """The RESOLVED per-group table for this session's arch — leaf and
+        param counts per group, each group's transport plan (with its
+        degradation reason, if any) and per-message wire words. None when
+        the spec runs the uniform single-compressor path. Costs an
+        ``eval_shape`` of init_params, never real allocation."""
+        sched = make_schedule(self.spec)
+        if sched is None:
+            return None
+        from repro.core import schedule as sched_lib
+        shapes = jax.eval_shape(
+            lambda: model_lib.init_params(self.cfg, jax.random.PRNGKey(0)))
+        return sched_lib.plan_table(sched, make_method(self.spec), shapes,
+                                    eta=self.spec.eta)
+
     # ------------------------------------------------------- training state
     def _ensure_train(self, template: bool = False) -> Dict[str, Any]:
         """Build the training bundle. With ``template=True`` the state trees
@@ -218,7 +288,8 @@ class Session:
                 lambda s: sh.P(sh.client_axis(mesh, plan), *s),
                 sh.params_pspecs(cfg, mesh))
             state_specs = sh.ef_state_pspecs(cfg, mesh, plan, efc.method,
-                                             downlink=efc.has_downlink)
+                                             downlink=efc.has_downlink,
+                                             schedule=efc.schedule)
             step_fn = jax.jit(dist.make_train_step(
                 loss_fn, efc, opt, n, mesh=mesh, grads_specs=grads_specs,
                 state_specs=state_specs))

@@ -14,7 +14,7 @@ EF state layout knobs (DESIGN.md §4, grok-scale memory):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -80,10 +80,14 @@ def _spec_map(fn, tree):
 
 
 def ef_state_pspecs(cfg: ArchConfig, mesh, plan: ShardPlan, method,
-                    downlink: bool = False) -> Dict:
+                    downlink: bool = False, schedule=None) -> Dict:
     """Mirror of distributed.init_ef_state structure. ``downlink`` adds the
     server broadcast memory h (DESIGN.md §8) — replicated-in-value like the
-    server estimate, so it shares the server's param pspecs."""
+    server estimate, so it shares the server's param pspecs. With a
+    ``schedule`` (core/schedule.py) the state-key sample comes from the
+    grouped init, so per-group EF-state dtypes (and any future per-group
+    state shape) flow through exactly the trees the runtime will build —
+    pspecs themselves are per-leaf and identical across groups."""
     pspecs = params_pspecs(cfg, mesh)
     c_ax = client_axis(mesh, plan)
     d_ax = mesh_lib.data_axes(mesh)
@@ -111,7 +115,12 @@ def ef_state_pspecs(cfg: ArchConfig, mesh, plan: ShardPlan, method,
         treedef, [leaf_spec(s, sh_.shape)
                   for s, sh_ in zip(spec_leaves, shape_leaves)])
     dummy = _spec_map(lambda s: jnp.zeros((1,)), pspecs)
-    sample = jax.eval_shape(lambda: method.init(dummy))
+    if schedule is not None:
+        from repro.core import schedule as sched_lib
+        sample = jax.eval_shape(
+            lambda: sched_lib.init_state_grouped(schedule, method, dummy))
+    else:
+        sample = jax.eval_shape(lambda: method.init(dummy))
     client_specs = {k: client_tree for k in sample.keys()}
     out = {"clients": client_specs, "server": pspecs}
     if downlink:

@@ -53,9 +53,21 @@ from repro.configs import base as cb
 
 # v2: bidirectional compression — the downlink_carrier / downlink_ratio
 # fields change what a spec EXECUTES (a second compressed leg per round), so
-# the bump makes pre-downlink readers reject v2 specs loudly instead of
+# the bump made pre-downlink readers reject v2 specs loudly instead of
 # silently running unidirectional rounds against a bidirectional definition.
-SCHEMA_VERSION = 2
+# v3: per-parameter-group compression schedules — the ``groups`` field
+# partitions the param pytree into named groups, each with its own
+# (compressor × carrier × ratio × downlink × EF-state dtype). v2 specs are
+# AUTO-UPGRADED on read: an absent ``groups`` IS the uniform one-group
+# schedule derived from the single-knob fields, so every v2 spec names the
+# same experiment it always named (and hashes identically — groups=[] is
+# the default, excluded from the sparse spec_hash). One deliberate
+# execution change rides the same release, independent of the schema: the
+# BlockTopK sub-block geometry fix (compressors.py::BlockTopK.geom) gives
+# leaves smaller than one block a proportional K instead of the degenerate
+# full-block K, so a resumed v2 checkpoint whose model has sub-block
+# leaves continues under the corrected compression, not the old bug.
+SCHEMA_VERSION = 3
 
 # ---------------------------------------------------------------------------
 # jax-free mirrors of the jax-importing registries (sync-tested in
@@ -89,6 +101,30 @@ GRANULARITIES = ("group", "pod")
 STATE_SHARDINGS = ("client", "zero")
 EF_STATE_DTYPES = (None, "bfloat16")
 MOE_IMPLS = ("dispatch", "dense")
+
+# per-group schedule surface (mirror of core/schedule.py, sync-tested):
+# the keys one ``groups`` entry may carry, the per-group EF-state dtype
+# universe ('float32' exists so one group can force full precision under a
+# bfloat16 spec-level default), and the characters the --schedule grammar
+# reserves (a pattern containing one could never round-trip)
+GROUP_KEYS = frozenset({"pattern", "carrier", "compressor", "ratio",
+                        "compressor_kw", "downlink_carrier", "downlink_ratio",
+                        "ef_state_dtype"})
+GROUP_STATE_DTYPES = (None, "bfloat16", "float32")
+PATTERN_RESERVED = set("=,:@")
+
+
+def pattern_token_errors(pattern: str) -> List[str]:
+    """Jax-free mirror of ``core.schedule.pattern_token_errors`` (sync-tested
+    in tests/test_schedule.py): an empty ``|`` token matches every leaf, and
+    an embedded ``'*'`` token would shadow every later group."""
+    toks = pattern.split("|")
+    errs = []
+    if any(not t for t in toks):
+        errs.append("empty '|' token (matches every leaf)")
+    if "*" in toks and pattern != "*":
+        errs.append("'*' may only be the standalone catch-all pattern")
+    return errs
 
 # methods with an ``eta`` field — the spec's eta drives ALL of them (a spec
 # that records η=0.3 must never run a class default instead; method_kw can
@@ -168,6 +204,119 @@ def downlink_plan_preview(compressor: str, carrier: str) -> Tuple[str, str]:
     return "wire", ""
 
 
+# ---------------------------------------------------------------------------
+# per-group schedule: jax-free grammar + previews (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def parse_schedule_flag(s: str) -> List[Dict[str, Any]]:
+    """Parse the ``--schedule`` value into a ``groups`` list. Two forms:
+
+      grammar   ``"embed=dense,norm|bias=dense,*=quant4:0.05"`` — comma-
+                separated ``pattern=carrier[:ratio][@compressor]`` entries
+                (``dense`` with no ``@compressor`` means ship-uncompressed,
+                i.e. the identity compressor; other carriers default to the
+                spec's compressor at the given ratio)
+      JSON      a ``[...]`` list of group dicts, for per-group knobs the
+                grammar cannot express (downlink, state dtype, compressor_kw)
+
+    ``format_schedule_flag`` is the inverse; grammar-expressible schedules
+    round-trip exactly (tier-1 tested)."""
+    if s.lstrip().startswith("["):
+        return json.loads(s)
+    out: List[Dict[str, Any]] = []
+    for part in s.split(","):
+        part = part.strip()
+        pattern, sep, rhs = part.partition("=")
+        if not sep or not pattern or not rhs:
+            raise ValueError(
+                f"bad --schedule entry {part!r}: want "
+                "'pattern=carrier[:ratio][@compressor]'")
+        comp = None
+        if "@" in rhs:
+            rhs, comp = rhs.split("@", 1)
+        carrier, sep, ratio = rhs.partition(":")
+        entry: Dict[str, Any] = {"pattern": pattern, "carrier": carrier}
+        if sep:
+            entry["ratio"] = float(ratio)
+        if comp is not None:
+            entry["compressor"] = comp
+        out.append(entry)
+    return out
+
+
+def format_schedule_flag(groups: List[Dict[str, Any]]) -> str:
+    """The canonical ``--schedule`` value for a ``groups`` list: the compact
+    grammar when every entry is grammar-expressible, JSON otherwise."""
+    parts = []
+    for e in groups:
+        if not ({"pattern", "carrier"} <= set(e)
+                and set(e) <= {"pattern", "carrier", "ratio", "compressor"}):
+            return json.dumps(groups, sort_keys=True)
+        s = f"{e['pattern']}={e['carrier']}"
+        if "ratio" in e:
+            s += f":{e['ratio']}"
+        if "compressor" in e:
+            s += f"@{e['compressor']}"
+        parts.append(s)
+    return ",".join(parts)
+
+
+def resolved_groups(spec: "RunSpec") -> List[Dict[str, Any]]:
+    """The spec's schedule with every per-group default filled in. An empty
+    ``groups`` IS the uniform one-group schedule of the single-knob fields
+    (the v2 auto-upgrade); explicit entries default each absent key from the
+    spec — except ``compressor``, which defaults to ``identity`` for a
+    ``dense``-carrier group (ship-uncompressed, the grammar's reading of
+    ``norm=dense``) and to the spec's compressor otherwise, and
+    ``compressor_kw``, which only carries over when the group runs the
+    spec's own compressor class."""
+    if not spec.groups:
+        return [{"pattern": "*", "carrier": spec.carrier,
+                 "compressor": spec.compressor, "ratio": spec.ratio,
+                 "compressor_kw": dict(spec.compressor_kw),
+                 "downlink_carrier": spec.downlink_carrier,
+                 "downlink_ratio": spec.downlink_ratio,
+                 "ef_state_dtype": spec.ef_state_dtype}]
+    out = []
+    for e in spec.groups:
+        carrier = e.get("carrier", "dense")
+        comp = e.get("compressor",
+                     "identity" if carrier == "dense" else spec.compressor)
+        kw = e.get("compressor_kw",
+                   dict(spec.compressor_kw) if comp == spec.compressor
+                   else {})
+        out.append({
+            "pattern": e.get("pattern"),
+            "carrier": carrier,
+            "compressor": comp,
+            "ratio": e.get("ratio", spec.ratio),
+            "compressor_kw": kw,
+            "downlink_carrier": e.get("downlink_carrier",
+                                      spec.downlink_carrier),
+            "downlink_ratio": e.get("downlink_ratio", spec.downlink_ratio),
+            "ef_state_dtype": e.get("ef_state_dtype", spec.ef_state_dtype),
+        })
+    return out
+
+
+def schedule_preview(spec: "RunSpec") -> List[Dict[str, Any]]:
+    """Jax-free mirror of the resolved group table: one row per group with
+    the uplink plan (``plan_preview``) and downlink plan
+    (``downlink_plan_preview``) that would execute — sync-tested against the
+    real carriers/schedule objects in tests/test_schedule.py. Leaf/param
+    counts need the real param tree and live in
+    ``Session.schedule_table()``."""
+    rows = []
+    for g in resolved_groups(spec):
+        plan, reason = plan_preview(spec.method, g["compressor"],
+                                    g["carrier"])
+        dplan, dreason = downlink_plan_preview(g["compressor"],
+                                               g["downlink_carrier"])
+        rows.append({**g, "plan": plan, "plan_reason": reason,
+                     "downlink_plan": dplan, "downlink_reason": dreason})
+    return rows
+
+
 def _known_arch(arch: str) -> bool:
     return arch in cb.ARCH_ALIASES or arch in cb.ARCH_IDS
 
@@ -217,6 +366,14 @@ class RunSpec:
     # (launch/session.py::make_down_compressor).
     downlink_carrier: str = "dense"
     downlink_ratio: float = 0.05
+    # per-parameter-group compression schedule (DESIGN.md §9): an ordered
+    # list of group dicts (keys ⊆ GROUP_KEYS; 'pattern' mandatory, the last
+    # entry must be the catch-all '*'), first-match-wins over the param
+    # pytree's leaf paths. Empty = the uniform one-group schedule of the
+    # single-knob fields above (the v2 meaning, bit-identical). Absent keys
+    # default from the spec (resolved_groups); the --schedule flag grammar
+    # is 'pattern=carrier[:ratio][@compressor],…' (parse_schedule_flag).
+    groups: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     method_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
     compressor_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -293,6 +450,7 @@ class RunSpec:
                     for k, v in kw.items()):
                 errs.append(f"{kw_name} must map str keys to JSON scalars, "
                             f"got {kw!r}")
+        errs.extend(self._validate_groups())
         # the (batch % clients) divisibility the runtime would assert
         # mid-step — checked for BOTH batch geometries a spec can run: the
         # interactive train geometry (global_batch, Session.train) and,
@@ -320,6 +478,85 @@ class RunSpec:
                     f"method={self.method!r} compressor={self.compressor!r}")
         if errs:
             raise ValueError("invalid RunSpec:\n  - " + "\n  - ".join(errs))
+
+    def _validate_groups(self) -> List[str]:
+        """Construction-time schedule validation, jax-free (the real
+        CompressionSchedule re-validates authoritatively in
+        session.make_schedule)."""
+        errs: List[str] = []
+        if not isinstance(self.groups, list):
+            return [f"groups must be a list of dicts, got {self.groups!r}"]
+        if not self.groups:
+            return errs
+        seen = set()
+        for i, e in enumerate(self.groups):
+            if not isinstance(e, dict):
+                errs.append(f"groups[{i}] must be a dict, got {e!r}")
+                continue
+            unknown = sorted(set(e) - GROUP_KEYS)
+            if unknown:
+                errs.append(f"groups[{i}]: unknown keys {unknown}; have "
+                            f"{sorted(GROUP_KEYS)}")
+            pat = e.get("pattern")
+            if not pat or not isinstance(pat, str):
+                errs.append(f"groups[{i}] needs a non-empty 'pattern'")
+                continue
+            bad = PATTERN_RESERVED & set(pat)
+            if bad:
+                errs.append(f"groups[{i}] pattern {pat!r} uses reserved "
+                            f"characters {sorted(bad)}")
+            errs.extend(f"groups[{i}] pattern {pat!r}: {e}"
+                        for e in pattern_token_errors(pat))
+            if pat in seen:
+                errs.append(f"duplicate group pattern {pat!r}")
+            seen.add(pat)
+            if pat == "*" and i != len(self.groups) - 1:
+                errs.append("the catch-all '*' must be the LAST group "
+                            "(first-match-wins shadows everything after it)")
+            carrier = e.get("carrier", "dense")
+            if carrier not in CARRIERS:
+                errs.append(f"groups[{i}]: unknown carrier {carrier!r}")
+                continue
+            comp = e.get("compressor",
+                         "identity" if carrier == "dense"
+                         else self.compressor)
+            if comp not in COMPRESSORS:
+                errs.append(f"groups[{i}]: unknown compressor {comp!r}")
+                continue
+            if e.get("downlink_carrier", "dense") not in DOWN_CARRIERS:
+                errs.append(f"groups[{i}]: downlink carrier "
+                            f"{e['downlink_carrier']!r} not in "
+                            f"{sorted(DOWN_CARRIERS)}")
+            if e.get("ef_state_dtype") not in GROUP_STATE_DTYPES:
+                errs.append(f"groups[{i}]: ef_state_dtype "
+                            f"{e['ef_state_dtype']!r} not in "
+                            f"{list(GROUP_STATE_DTYPES)}")
+            for key in ("ratio", "downlink_ratio"):
+                if key in e and not (isinstance(e[key], (int, float))
+                                     and 0.0 < e[key] <= 1.0):
+                    errs.append(f"groups[{i}]: {key} must be in (0, 1], "
+                                f"got {e[key]!r}")
+            kw = e.get("compressor_kw", {})
+            if not isinstance(kw, dict) or not all(
+                    isinstance(k, str) and isinstance(v, _JSON_SCALARS)
+                    for k, v in kw.items()):
+                errs.append(f"groups[{i}]: compressor_kw must map str keys "
+                            f"to JSON scalars, got {kw!r}")
+            # the fused-misconfig hard error, per group (mirrors the
+            # authoritative per-group check in launch/build.py)
+            if self.method in METHODS:
+                plan, reason = plan_preview(self.method, comp, carrier)
+                if carrier == "fused" and plan != "fused":
+                    errs.append(
+                        f"groups[{i}] ({pat!r}): carrier='fused' would "
+                        f"silently run the UNFUSED dense plan: {reason}")
+        # reported alongside any per-entry errors (one fix-and-rerun pass,
+        # like the authoritative CompressionSchedule.__post_init__)
+        if isinstance(self.groups[-1], dict) \
+                and self.groups[-1].get("pattern") != "*":
+            errs.append("the last group must be the mandatory catch-all "
+                        "'*' so every leaf lands in exactly one group")
+        return errs
 
     # -------------------------------------------------------------- previews
     def plan(self) -> Tuple[str, str]:
@@ -370,6 +607,13 @@ class RunSpec:
         if "version" not in d:
             raise ValueError("spec dict has no 'version' key — refusing to "
                              "guess the schema")
+        # v2 → v3 auto-upgrade: v3 is purely additive over v2 (the new
+        # ``groups`` field defaults to the uniform one-group schedule of the
+        # single-knob fields — exactly what a v2 spec always meant), so a v2
+        # dict upgrades mechanically and round-trips as v3. v1 (pre-downlink)
+        # stays rejected: its absence of downlink fields changed execution.
+        if d.get("version") == 2 and "groups" not in d:
+            d = dict(d, version=SCHEMA_VERSION)
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = sorted(set(d) - known)
         if unknown:
@@ -426,6 +670,8 @@ class RunSpec:
                     out.append(flag)
             elif kind == "json":
                 out.extend([flag, json.dumps(val, sort_keys=True)])
+            elif kind == "schedule":
+                out.extend([flag, format_schedule_flag(val)])
             else:
                 out.extend([flag, str(val)])
         return out
@@ -477,6 +723,7 @@ _FLAGS: List[Tuple[str, str, str]] = [
     ("--carrier", "carrier", "str"),
     ("--downlink-carrier", "downlink_carrier", "str"),
     ("--downlink-ratio", "downlink_ratio", "float"),
+    ("--schedule", "groups", "schedule"),
     ("--method-kw", "method_kw", "json"),
     ("--compressor-kw", "compressor_kw", "json"),
     ("--tp-pad-heads", "tp_pad_heads", "int"),
@@ -504,6 +751,12 @@ _FLAG_HELP = {
                         "uplink compressor class, re-budgeted; like --ratio "
                         "it only applies to ratio-bearing compressors — "
                         "others reuse their compressor-kw budget unchanged)",
+    "--schedule": "per-parameter-group compression schedule (DESIGN.md §9): "
+                  "'pattern=carrier[:ratio][@compressor],…' entries matched "
+                  "first-match-wins against param leaf paths, last must be "
+                  "the catch-all '*' — e.g. "
+                  "'norm|bias=dense,embed=quant4:0.05,*=sparse:0.02'; a JSON "
+                  "[...] list unlocks per-group downlink / state-dtype knobs",
     "--clients": "emulated EF clients on the single-device mesh",
     "--method-kw": "JSON dict of extra Method kwargs (e.g. "
                    "'{\"gamma\": 0.01}')",
@@ -547,6 +800,8 @@ def add_flags(ap: argparse.ArgumentParser) -> None:
                             help=f"negate {flag}")
         elif kind == "json":
             kw["type"] = json.loads
+        elif kind == "schedule":
+            kw["type"] = parse_schedule_flag
         else:
             kw["type"] = _TYPES[kind]
             if flag in _FLAG_CHOICES:
@@ -555,6 +810,57 @@ def add_flags(ap: argparse.ArgumentParser) -> None:
 
 
 _DEFAULT = RunSpec()
+
+# ---------------------------------------------------------------------------
+# golden fixtures (results/specs/*.json): the DEFINITIONS live here so the
+# files are regenerated mechanically (`python -m repro.launch.spec
+# --regen-goldens`) instead of hand-edited — tests/test_spec.py byte-compares
+# the files against these and fails on any drift either way
+# ---------------------------------------------------------------------------
+
+GOLDEN_SPECS: Dict[str, Dict[str, Any]] = {
+    "train_smoke_ef21_sgdm": {"smoke": True},
+    "fused_quickstart": {"carrier": "fused", "eta": 0.2,
+                         "compressor_kw": {"block": 1024, "k_per_block": 16}},
+    "dryrun_sparse_pod": {"arch": "gemma2-9b", "carrier": "sparse",
+                          "compressor": "topk", "ratio": 0.01, "mesh": "pod",
+                          "shape": "train_4k"},
+    "quant4_multipod_zero": {"arch": "grok-1-314b", "carrier": "quant4",
+                             "mesh": "multi_pod", "shape": "train_4k",
+                             "client_granularity": "pod",
+                             "state_sharding": "zero",
+                             "ef_state_dtype": "bfloat16"},
+    "bidir_quant4_down": {"smoke": True, "carrier": "quant4", "clients": 4,
+                          "global_batch": 8, "seq_len": 64,
+                          "downlink_carrier": "quant4",
+                          "downlink_ratio": 0.02},
+    # v3: a mixed 3-group schedule — dense norms/biases, quant4 embeds,
+    # sparse everything else, with a quant4 downlink on the catch-all
+    "mixed_schedule": {"smoke": True, "clients": 4, "global_batch": 8,
+                       "seq_len": 64,
+                       "groups": [
+                           {"pattern": "norm|bias", "carrier": "dense"},
+                           {"pattern": "embed", "carrier": "quant4",
+                            "ratio": 0.05},
+                           {"pattern": "*", "carrier": "sparse",
+                            "ratio": 0.02, "downlink_carrier": "quant4",
+                            "downlink_ratio": 0.05},
+                       ]},
+}
+
+
+def regen_goldens(out_dir: str) -> List[str]:
+    """Rewrite every golden fixture from GOLDEN_SPECS at the current schema.
+    Returns the written paths."""
+    import os
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for name in sorted(GOLDEN_SPECS):
+        path = os.path.join(out_dir, f"{name}.json")
+        with open(path, "w") as f:
+            f.write(RunSpec(**GOLDEN_SPECS[name]).to_json(indent=1) + "\n")
+        paths.append(path)
+    return paths
 
 
 def explicit_fields(args: argparse.Namespace,
@@ -584,7 +890,18 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--print", dest="do_print", action="store_true",
                     help="print the canonical JSON to stdout")
     ap.add_argument("--out", default=None, help="write the JSON to a file")
+    ap.add_argument("--regen-goldens", dest="regen_goldens",
+                    action="store_true",
+                    help="mechanically rewrite the golden fixtures under "
+                         "--goldens-dir from spec.GOLDEN_SPECS at the "
+                         "current schema, then exit")
+    ap.add_argument("--goldens-dir", default="results/specs",
+                    help="target directory for --regen-goldens")
     args = ap.parse_args(argv)
+    if args.regen_goldens:
+        for path in regen_goldens(args.goldens_dir):
+            print(path)
+        return
     spec = RunSpec.from_args(args)
     text = spec.to_json(indent=1)
     if args.out:

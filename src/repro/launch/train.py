@@ -84,13 +84,20 @@ def main(argv=None) -> None:
 
     # printed from the spec the session ACTUALLY runs (a bare --resume
     # adopts the checkpoint's embedded spec, not the flag defaults)
-    plan, reason = sess.spec.plan()
-    print(f"carrier={sess.spec.carrier} plan={plan}"
-          + (f" (degraded: {reason})" if reason else ""))
-    if sess.spec.downlink_carrier != "dense":
-        dplan, dreason = sess.spec.downlink_plan()
-        print(f"downlink={sess.spec.downlink_carrier} plan={dplan}"
-              + (f" (degraded: {dreason})" if dreason else ""))
+    table = sess.schedule_table()
+    if table is not None:
+        # per-group schedule: the RESOLVED group table (leaf/param counts,
+        # per-group plan + degradation reasons, wire words) IS the plan line
+        print("compression schedule (first-match-wins):")
+        print(table)
+    else:
+        plan, reason = sess.spec.plan()
+        print(f"carrier={sess.spec.carrier} plan={plan}"
+              + (f" (degraded: {reason})" if reason else ""))
+        if sess.spec.downlink_carrier != "dense":
+            dplan, dreason = sess.spec.downlink_plan()
+            print(f"downlink={sess.spec.downlink_carrier} plan={dplan}"
+                  + (f" (degraded: {dreason})" if dreason else ""))
 
     sess.train(args.steps, log_every=args.log_every, verbose=True)
     if sess.spec.ckpt_dir:

@@ -10,7 +10,6 @@ O(S·W) FLOPs instead of O(S²).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

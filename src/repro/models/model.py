@@ -20,7 +20,6 @@ prepended; loss is computed on token positions only.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

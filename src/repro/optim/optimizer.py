@@ -15,7 +15,6 @@ composing it with these optimizers gives:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -24,7 +24,6 @@ import numpy as np
 import pytest
 
 try:
-    import hypothesis
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
     settings.register_profile("bidir", max_examples=10, deadline=None)

@@ -268,3 +268,80 @@ def test_sparse_local_c_is_exact_wire_decode():
 def test_unknown_carrier_rejected():
     with pytest.raises(ValueError):
         carrier_lib.make("carrier-pigeon")
+
+
+# ---------------------------------------------------------------------------
+# BlockTopK geometry: sub-block and non-divisible leaves (per-group schedules
+# route tiny norm/bias tensors through their own compressors, so the fixed
+# full-block K must not degenerate on leaves smaller than one block)
+# ---------------------------------------------------------------------------
+
+def test_block_topk_sub_block_leaf_gets_proportional_k():
+    """A (64,) leaf under ratio=0.05/block=1024 used to get the full-block
+    K = round(0.05·1024) = 51 — keeping 80% of the tensor while reporting
+    α = 0.05. The d-aware geometry gives one block of the leaf's own size
+    and K = round(0.05·64) = 3."""
+    comp = C.BlockTopK(ratio=0.05, block=1024)
+    nb, block, kb = comp.geom(64)
+    assert (nb, block, kb) == (1, 64, 3)
+    x = jnp.asarray(np.random.RandomState(0).randn(64), jnp.float32)
+    assert int((np.asarray(comp(x)) != 0).sum()) == 3
+    assert comp.alpha(64) == pytest.approx(3 / 64)
+    # leaves of at least one block keep the exact legacy geometry
+    assert comp.geom(4096) == (4, 1024, 51)
+    # explicit k_per_block is capped at the leaf size instead of selecting
+    # padding zeros
+    small = C.BlockTopK(block=1024, k_per_block=16)
+    assert small.geom(8) == (1, 8, 8)
+    # k of a 1-element leaf never hits zero
+    assert C.BlockTopK(ratio=0.01, block=1024).geom(3) == (1, 3, 1)
+
+
+@pytest.mark.parametrize("d", [5, 64, 100, 2500])
+def test_block_topk_wire_roundtrips_on_odd_sizes(d):
+    """Sub-block (d < block) and non-divisible (d % block ≠ 0) leaves:
+    encode→local_c must equal the dense C(x), indices must stay in range,
+    and wire_words must reflect the d-aware geometry for the sparse AND
+    quantized carriers."""
+    rng = np.random.RandomState(d)
+    x = jnp.asarray(rng.randn(d).astype(np.float32))
+    comp = C.BlockTopK(ratio=0.1, block=64)
+    nb, block, kb = comp.geom(d)
+    assert kb <= block <= max(d, 1)
+    sparse = carrier_lib.make("sparse")
+    wire = sparse.encode(comp, x)
+    c_loc = np.asarray(sparse.local_c(comp, x, wire))
+    np.testing.assert_allclose(c_loc, np.asarray(comp(x)), rtol=1e-6)
+    assert sparse.wire_words(comp, d) == 2.0 * nb * kb
+    vals, idx = wire
+    assert int(np.asarray(idx).max()) < block
+    # one-client aggregate equals the dense compressor output too
+    wire1 = jax.tree_util.tree_map(lambda a: a[None], wire)
+    agg = sparse.aggregate(comp, wire1, d=d, dtype=x.dtype, dp=1)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(comp(x)),
+                               rtol=1e-6)
+    # quantized sparse payload: decode == local_c (the EF invariant), and
+    # the word count uses the same d-aware geometry
+    quant = carrier_lib.make("quant8")
+    qwire = quant.encode(comp, x)
+    q_loc = np.asarray(quant.local_c(comp, x, qwire))
+    np.testing.assert_allclose(
+        q_loc, np.asarray(quant.decode(comp, qwire, d=d, dtype=x.dtype)))
+    idx_words = 0.5 if block <= 2 ** 15 - 1 else 1.0
+    assert quant.wire_words(comp, d) == nb * (1.0 + kb * (0.25 + idx_words))
+
+
+def test_fused_carrier_consistent_on_sub_block_leaves(step_cache):
+    """The fused kernel now runs each leaf at its d-aware (block, kb) — a
+    model with sub-block bias/norm leaves must still match the dense
+    trajectory (the b leaf here is smaller than the compressor block)."""
+    rng = jax.random.PRNGKey(0)
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    x = jax.random.normal(rng, (16, 8))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (8, 4))
+    setup = (params, {"x": x, "y": x @ w})
+    method = ef.EF21SGDM(compressor=C.BlockTopK(block=16, k_per_block=3),
+                         eta=0.3)
+    ref = _trajectory(setup, method, "dense", steps=20, cache=step_cache)
+    got = _trajectory(setup, method, "fused", steps=20, cache=step_cache)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)

@@ -1,5 +1,4 @@
 """Unit tests: every EF method's update rule against hand-computed algebra."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -2,7 +2,6 @@
 
 The parametrized differential tests always run; the hypothesis fuzzers engage
 wherever hypothesis is installed (CI via requirements-dev.txt)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

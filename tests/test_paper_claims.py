@@ -4,8 +4,6 @@
 Everything here is a multi-thousand-step convergence simulation → the whole
 module is `slow` tier: excluded from the PR gate (`pytest -m tier1`), run in
 full on main (tests/conftest.py)."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

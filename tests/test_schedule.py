@@ -1,0 +1,464 @@
+"""Per-parameter-group compression schedules (core/schedule.py, DESIGN.md §9).
+
+The load-bearing guarantees:
+  * a UNIFORM one-group schedule is bit-identical (params, full ef_state
+    incl. the downlink memory h, trajectory) to the legacy single-compressor
+    path — the regression anchor, pinned over a (method × carrier × downlink)
+    grid on the production train step and on the vmap simulator;
+  * a MIXED schedule trains end-to-end through Session (uplink + quant4
+    downlink) with per-group wire accounting that matches hand-computed
+    group totals;
+  * spec v2 → v3 auto-upgrade round-trips (tests/test_spec.py) and
+    kill-and-resume covers per-group EF state bit-exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import carriers as carrier_lib
+from repro.core import compressors as C
+from repro.core import distributed as D
+from repro.core import ef, problems, simulate
+from repro.core import schedule as S
+from repro.launch import build as build_lib
+from repro.launch import session as session_lib
+from repro.launch import spec as spec_lib
+from repro.launch.session import Session
+from repro.launch.spec import RunSpec
+
+BTK = C.BlockTopK(block=8, k_per_block=3)
+DOWN_BTK = C.BlockTopK(block=8, k_per_block=2)
+TINY = dict(arch="smollm-360m", smoke=True, clients=2, global_batch=4,
+            seq_len=32)
+MIXED_GROUPS = [
+    {"pattern": "norm|bias", "carrier": "dense"},
+    {"pattern": "embed", "carrier": "quant4", "ratio": 0.05},
+    {"pattern": "*", "carrier": "sparse", "ratio": 0.02,
+     "downlink_carrier": "quant4", "downlink_ratio": 0.05},
+]
+
+
+def _leaves_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# schedule construction / resolution semantics
+# ---------------------------------------------------------------------------
+
+def test_schedule_validates_at_construction():
+    ok = S.CompressionSchedule((S.Group(pattern="norm"),
+                                S.Group(pattern="*")))
+    assert not ok.has_downlink
+    cases = [
+        ((), "at least one group"),
+        ((S.Group(pattern="norm"),), "catch-all"),
+        ((S.Group(pattern="*"), S.Group(pattern="norm")), "LAST"),
+        ((S.Group(pattern="a"), S.Group(pattern="a"),
+          S.Group(pattern="*")), "duplicate"),
+        ((S.Group(pattern="a=b"), S.Group(pattern="*")), "reserved"),
+        # an empty '|' token is a substring of EVERY path — 'norm|' would
+        # silently swallow the whole model into one group
+        ((S.Group(pattern="norm|"), S.Group(pattern="*")), "empty"),
+        # a '*' token inside a composite pattern shadows every later group
+        ((S.Group(pattern="embed|*"), S.Group(pattern="*")), "standalone"),
+        ((S.Group(pattern="*", carrier="laser"),), "unknown carrier"),
+        ((S.Group(pattern="*", down_carrier="fused"),), "downlink"),
+        ((S.Group(pattern="*", state_dtype="fp8"),), "state_dtype"),
+    ]
+    for groups, match in cases:
+        with pytest.raises(ValueError, match=match):
+            S.CompressionSchedule(groups)
+
+
+def test_spec_mirrors_match_schedule_module():
+    """The jax-free spec-layer mirrors of the schedule surface must equal
+    the real module's constants (same contract as every other mirror in
+    launch/spec.py), and the group-entry key set must cover exactly what
+    session.make_schedule consumes."""
+    assert spec_lib.GROUP_STATE_DTYPES == S.GROUP_STATE_DTYPES
+    assert spec_lib.PATTERN_RESERVED == S.PATTERN_RESERVED
+    for pat in ("norm", "norm|bias", "*", "norm|", "|", "embed|*", "a||b"):
+        assert spec_lib.pattern_token_errors(pat) \
+            == S.pattern_token_errors(pat), pat
+    resolved = spec_lib.resolved_groups(RunSpec())[0]
+    assert set(resolved) == set(spec_lib.GROUP_KEYS)
+
+
+def test_pattern_matching_is_case_insensitive():
+    """Leaf paths are lower-cased; patterns must match regardless of the
+    case they were written in (a pattern in the tree's literal mixed case
+    must not silently resolve to zero leaves)."""
+    tree = {"Embed": jnp.zeros((4,)), "w": jnp.zeros((4,))}
+    sched = S.CompressionSchedule((S.Group(pattern="Embed"),
+                                   S.Group(pattern="*")))
+    assert sched.resolve(tree) == (0, 1)
+
+
+def test_first_match_wins_every_leaf_lands_in_exactly_one_group():
+    tree = {"embed": jnp.zeros((4, 8)),
+            "layers": {"attn": {"wq": jnp.zeros((8, 8)),
+                                "norm": jnp.zeros((8,))},
+                       "mlp": {"w_up": jnp.zeros((8, 16)),
+                               "norm": jnp.zeros((8,))}},
+            "final_norm": jnp.zeros((8,))}
+    sched = S.CompressionSchedule((
+        S.Group(pattern="norm|bias"),          # wins over 'attn' for
+        S.Group(pattern="attn"),               # layers/attn/norm
+        S.Group(pattern="*"),
+    ))
+    paths = S.leaf_paths(tree)
+    gids = sched.resolve(tree)
+    by_path = dict(zip(paths, gids))
+    assert by_path["embed"] == 2
+    assert by_path["layers/attn/wq"] == 1
+    assert by_path["layers/attn/norm"] == 0     # first match wins
+    assert by_path["layers/mlp/norm"] == 0
+    assert by_path["final_norm"] == 0
+    assert by_path["layers/mlp/w_up"] == 2
+    # totality: every leaf got exactly one group index
+    assert len(gids) == len(paths)
+
+
+def test_uniform_schedule_and_alpha_min():
+    sched = S.CompressionSchedule((
+        S.Group(pattern="b", compressor=C.Identity()),
+        S.Group(pattern="*", compressor=C.TopK(ratio=0.25)),
+    ))
+    tree = {"w": jnp.zeros((16,)), "b": jnp.zeros((4,))}
+    # α of the composed compressor = min over groups (identity α=1)
+    assert S.alpha_min(sched, tree) == pytest.approx(0.25)
+    uni = S.CompressionSchedule.uniform(BTK, carrier="sparse",
+                                        down_carrier="quant4",
+                                        down_compressor=DOWN_BTK)
+    assert len(uni.groups) == 1 and uni.has_downlink
+
+
+# ---------------------------------------------------------------------------
+# THE regression anchor: uniform one-group schedule ≡ legacy path, bit-exact
+# ---------------------------------------------------------------------------
+
+def _loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+
+@pytest.fixture
+def lin_setup():
+    rng = jax.random.PRNGKey(0)
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    x = jax.random.normal(rng, (16, 8))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (8, 4))
+    return params, {"x": x, "y": x @ w}
+
+
+def _run_train(setup, efc, steps=6, dp=4):
+    from repro.optim import optimizer as opt_lib
+    params, batch = setup
+    opt = opt_lib.sgd(0.2)
+    step = jax.jit(D.make_train_step(_loss_fn, efc, opt, dp))
+    _, _, g0 = D.per_client_value_and_grad(_loss_fn, params, batch, dp)
+    p, os_, es = params, opt.init(params), D.init_ef_state(
+        efc, params, dp, init_grads=g0)
+    rng = jax.random.PRNGKey(1)
+    for t in range(steps):
+        p, os_, es, _ = step(p, os_, es, batch, jax.random.fold_in(rng, t), t)
+    return p, es
+
+
+def _grid_cells():
+    for m_name in ("ef21_sgdm", "ef21_sgd", "ef14_sgd"):
+        for carrier in ("dense", "sparse", "quant4", "fused"):
+            if carrier == "fused" and m_name == "ef14_sgd":
+                continue                      # fused covers EF21-SGD(M) only
+            for down in ("dense", "quant4"):
+                yield m_name, carrier, down
+
+
+@pytest.mark.parametrize("m_name,carrier,down", list(_grid_cells()))
+def test_uniform_schedule_bit_matches_legacy_path(lin_setup, m_name, carrier,
+                                                  down):
+    """The schedule grid equivalence harness: for every
+    (method × carrier × downlink) cell, the grouped engine under a uniform
+    one-group schedule reproduces the pre-refactor single-compressor path
+    BIT-exactly — params and the full ef_state (clients, server, and the
+    downlink memory h) after a multi-step production train run."""
+    kwargs = {"compressor": BTK}
+    if m_name == "ef21_sgdm":
+        kwargs["eta"] = 0.3
+    method = ef.make(m_name, **kwargs)
+    down_comp = DOWN_BTK if down != "dense" else None
+    legacy = D.EFConfig(method=method, carrier=carrier, down_carrier=down,
+                        down_compressor=down_comp)
+    uniform = D.EFConfig(method=method, schedule=S.CompressionSchedule.uniform(
+        BTK, carrier=carrier, down_carrier=down, down_compressor=down_comp))
+    p0, es0 = _run_train(lin_setup, legacy)
+    p1, es1 = _run_train(lin_setup, uniform)
+    assert sorted(es0) == sorted(es1)          # same state tree (incl. h)
+    assert _leaves_equal(p0, p1)
+    assert _leaves_equal(es0, es1)
+
+
+def test_uniform_schedule_bit_matches_legacy_simulator():
+    """Same anchor on the third runtime (the vmap simulator), whole
+    trajectory, including the per-round wire accounting keys."""
+    prob = problems.MLPClassification(n=4, m_per_client=64)
+    btk = C.BlockTopK(block=64, k_per_block=8)
+    method = ef.EF21SGDM(compressor=btk, eta=0.2)
+    down = C.BlockTopK(block=64, k_per_block=4)
+    for carrier in ("dense", "sparse", "quant4"):
+        legacy = simulate.SimConfig(n=4, batch_size=4, gamma=0.05, steps=12,
+                                    carrier=carrier, down_carrier="quant4",
+                                    down_compressor=down)
+        uniform = dataclasses.replace(
+            legacy, carrier="dense", down_carrier="dense",
+            down_compressor=None,
+            schedule=S.CompressionSchedule.uniform(
+                btk, carrier=carrier, down_carrier="quant4",
+                down_compressor=down))
+        o0 = simulate.run_numpy(prob, method, legacy, seed=0)
+        o1 = simulate.run_numpy(prob, method, uniform, seed=0)
+        assert np.array_equal(o0["grad_norm_sq"], o1["grad_norm_sq"]), carrier
+        assert np.array_equal(o0["loss"], o1["loss"]), carrier
+        assert _leaves_equal(o0["x_final"], o1["x_final"])
+
+
+# ---------------------------------------------------------------------------
+# mixed schedules: execution + hand-computed per-group accounting
+# ---------------------------------------------------------------------------
+
+def test_mixed_wire_accounting_matches_hand_computed_totals():
+    """wire_words_tree sums each group's wire over that group's leaves; the
+    expected numbers are computed BY HAND from the carrier formulas."""
+    tree = {"embed": jnp.zeros((8, 16)),          # 128 → quant4 group
+            "w": jnp.zeros((64,)),                # 64  → sparse catch-all
+            "norm": jnp.zeros((4,))}              # 4   → dense group
+    emb_comp = C.BlockTopK(block=32, k_per_block=4)
+    w_comp = C.BlockTopK(block=16, k_per_block=2)
+    down4 = C.BlockTopK(block=16, k_per_block=1)
+    sched = S.CompressionSchedule((
+        S.Group(pattern="norm", compressor=C.Identity(), carrier="dense"),
+        S.Group(pattern="embed", compressor=emb_comp, carrier="quant4"),
+        S.Group(pattern="*", compressor=w_comp, carrier="sparse",
+                down_carrier="quant4", down_compressor=down4),
+    ))
+    method = ef.EF21SGDM(compressor=BTK, eta=0.2)
+    per, total = S.wire_words_tree(sched, method, tree, "up")
+    # dense norm: d = 4 words
+    assert per[0] == 4.0
+    # quant4 sparse payload, embed: nb=4 blocks × (1 scale + kb·(4/32 bits
+    # + 0.5 int16 idx)) = 4 · (1 + 4·0.625) = 14
+    assert per[1] == pytest.approx(4 * (1 + 4 * (4 / 32 + 0.5)))
+    # sparse (values + int32 idx): 2·nb·kb = 2·4·2 = 16
+    assert per[2] == pytest.approx(2 * 4 * 2)
+    assert total == pytest.approx(per[0] + per[1] + per[2])
+    dper, dtotal = S.wire_words_tree(sched, method, tree, "down")
+    # groups without a downlink honestly ship dense: 4 + 128 words
+    assert dper[0] == 4.0 and dper[1] == 128.0
+    # quant4 downlink on w: nb=4 × (1 + 1·(0.125 + 0.5)) = 6.5
+    assert dper[2] == pytest.approx(4 * (1 + 1 * (4 / 32 + 0.5)))
+    assert dtotal == pytest.approx(dper[0] + dper[1] + dper[2])
+    # the Method-level pytree form keeps the flat-d UNITS: no carrier →
+    # idealized coords (paper x-axis) on the uplink, broadcast words down
+    assert method.coords_per_message_tree(tree, schedule=sched) == \
+        S.coords_tree(sched, method, tree)
+    assert method.coords_per_message_tree(
+        tree, schedule=sched, direction="down") == dtotal
+    # schedule + carrier args would be silently contradictory — hard error
+    with pytest.raises(ValueError, match="names its own carrier"):
+        method.coords_per_message_tree(tree, schedule=sched, carrier="dense")
+
+
+def test_mixed_schedule_simulator_reports_per_group_words():
+    prob = problems.MLPClassification(n=4, m_per_client=64)
+    btk = C.BlockTopK(block=64, k_per_block=8)
+    method = ef.EF21SGDM(compressor=btk, eta=0.2)
+    sched = S.CompressionSchedule((
+        S.Group(pattern="b", compressor=C.Identity(), carrier="dense"),
+        S.Group(pattern="*", compressor=btk, carrier="quant4",
+                down_carrier="quant4",
+                down_compressor=C.BlockTopK(block=64, k_per_block=4)),
+    ))
+    cfg = simulate.SimConfig(n=4, batch_size=4, gamma=0.05, steps=8,
+                             schedule=sched)
+    out = simulate.run_numpy(prob, method, cfg, seed=0)
+    up = out["wire_words_up_per_group"]
+    dn = out["wire_words_down_per_group"]
+    x0 = prob.init_x()
+    eper, etot = S.wire_words_tree(sched, method, x0, "up")
+    assert np.allclose(np.asarray(up), np.asarray(eper) * cfg.n)
+    assert out["wire_words_up_per_round"] == pytest.approx(etot * cfg.n)
+    dper, dtot = S.wire_words_tree(sched, method, x0, "down")
+    assert np.allclose(np.asarray(dn), np.asarray(dper) * cfg.n)
+    assert out["wire_words_total_per_round"] == pytest.approx(
+        (etot + dtot) * cfg.n)
+    # convergence is not wrecked by the mixed wire (loose sanity bound)
+    assert np.isfinite(out["grad_norm_sq"]).all()
+
+
+@pytest.mark.slow
+def test_mixed_schedule_trains_end_to_end_through_session():
+    """Acceptance: a mixed 3-group schedule (dense norms/biases + quant4
+    embeds + sparse catch-all) trains through Session on both the uplink and
+    a quant4 downlink, with the resolved table and accounting consistent."""
+    spec = RunSpec(**TINY, groups=MIXED_GROUPS)
+    sess = Session(spec)
+    table = sess.schedule_table()
+    assert table is not None and "quant4" in table and "sparse" in table
+    hist = sess.train(3, log_every=1)
+    assert hist and all(np.isfinite(r["loss"]) for r in hist)
+    # the downlink memory h exists (the catch-all group has a downlink)
+    assert "h" in sess.ef_state
+    # per-group accounting over the REAL param tree matches the table's sums
+    sched = session_lib.make_schedule(spec)
+    shapes = jax.eval_shape(lambda: sess.params)
+    per, total = S.wire_words_tree(sched, sess.method, shapes, "up")
+    assert len(per) == 3 and total == pytest.approx(sum(per))
+    # dense group ships exactly its param count; mixed groups undercut dense
+    gids = sched.resolve(shapes)
+    leaves = jax.tree_util.tree_leaves(shapes)
+    d_dense = sum(int(x.size) for x, g in zip(leaves, gids) if g == 0)
+    d_rest = sum(int(x.size) for x, g in zip(leaves, gids) if g != 0)
+    assert per[0] == pytest.approx(d_dense)
+    assert per[1] + per[2] < d_rest
+
+
+def test_kill_and_resume_mixed_schedule_bit_identical(tmp_path):
+    """Acceptance: kill-and-resume covers per-group EF state bit-exactly —
+    a mixed schedule's ef_state (incl. h) survives a restart and the resumed
+    trajectory equals the uninterrupted one."""
+    base = RunSpec(**TINY, groups=MIXED_GROUPS)
+    unint = Session(base)
+    unint.train(4, log_every=1)
+
+    interrupted = Session(dataclasses.replace(base, ckpt_dir=str(tmp_path)))
+    interrupted.train(2, log_every=1)
+    del interrupted
+
+    resumed = Session.resume(str(tmp_path))
+    assert resumed.step == 2
+    assert resumed.spec.groups == base.groups
+    resumed.train(4, log_every=1)
+    assert _leaves_equal(unint.params, resumed.params)
+    assert _leaves_equal(unint.ef_state, resumed.ef_state)
+
+
+# ---------------------------------------------------------------------------
+# launch-surface wiring
+# ---------------------------------------------------------------------------
+
+def test_schedule_preview_matches_real_carriers_per_group():
+    """The jax-free spec.schedule_preview mirror must agree with the real
+    carrier objects for every group of a schedule-bearing spec."""
+    specs = [
+        RunSpec(**TINY, groups=MIXED_GROUPS),
+        RunSpec(groups=[{"pattern": "a", "carrier": "quant8"},
+                        {"pattern": "*", "carrier": "fused",
+                         "compressor": "block_topk"}]),
+        RunSpec(compressor="randk",
+                groups=[{"pattern": "*", "carrier": "sparse"}]),
+    ]
+    for spec in specs:
+        sched = session_lib.make_schedule(spec)
+        method = session_lib.make_method(spec)
+        rows = spec_lib.schedule_preview(spec)
+        assert len(rows) == len(sched.groups)
+        for row, grp in zip(rows, sched.groups):
+            m_g = S.group_method(method, grp)
+            real = carrier_lib.make(grp.carrier).plan_with_reason(
+                m_g, spec.eta)
+            assert row["plan"] == real[0], (spec.groups, row)
+            assert bool(row["plan_reason"]) == bool(real[1])
+            dreal = carrier_lib.make(grp.down_carrier).plan_down_with_reason(
+                grp.down_comp())
+            if grp.has_downlink:
+                assert row["downlink_plan"] == dreal[0]
+
+
+def test_ef_config_builds_schedule_and_state_pspecs():
+    spec = RunSpec(**TINY, groups=MIXED_GROUPS)
+    sess = Session(spec)
+    efc = session_lib.ef_config(spec, sess.mesh, sess.plan)
+    assert efc.schedule is not None and len(efc.schedule.groups) == 3
+    assert efc.has_downlink                  # via the catch-all group
+    from repro.launch import shardings as sh
+    specs = sh.ef_state_pspecs(sess.cfg, sess.mesh, sess.plan, efc.method,
+                               downlink=efc.has_downlink,
+                               schedule=efc.schedule)
+    assert set(specs) == {"clients", "server", "h"}
+    assert set(specs["clients"]) == {"v", "g"}
+
+
+def test_group_state_dtype_overrides_per_group():
+    """Per-group EF-state dtypes: one group bf16, one full precision, both
+    visible in the initialized client state."""
+    spec = RunSpec(**TINY, groups=[
+        {"pattern": "embed", "ef_state_dtype": "bfloat16",
+         "carrier": "sparse"},
+        {"pattern": "*", "carrier": "dense"}])
+    sess = Session(spec)
+    es = sess.ef_state
+    assert es["clients"]["g"]["embed"].dtype == jnp.bfloat16
+    assert es["clients"]["g"]["final_norm"].dtype == jnp.float32
+
+
+def test_build_warns_once_per_distinct_group_reason():
+    """Plan-degradation warnings are deduplicated: re-constructing the SAME
+    config (a Session builds its EFConfig more than once) warns a single
+    time under the stable PlanDegradationWarning category, while a different
+    config degrading — even for the same textual reason — still warns."""
+    import warnings as W
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import shardings as sh
+    mesh = mesh_lib.make_smoke_mesh()
+    plan = sh.ShardPlan()
+    build_lib.reset_plan_warnings()
+    sched = S.CompressionSchedule((
+        S.Group(pattern="*", compressor=C.RandK(), carrier="sparse"),))
+    method = ef.EF21SGDM(compressor=C.RandK(), eta=0.1)
+    with W.catch_warnings(record=True) as rec:
+        W.simplefilter("always")
+        build_lib.default_ef_config(mesh, plan, method=method,
+                                    schedule=sched)
+        build_lib.default_ef_config(mesh, plan, method=method,
+                                    schedule=sched)
+    hits = [w for w in rec
+            if issubclass(w.category, build_lib.PlanDegradationWarning)]
+    assert len(hits) == 1, [str(w.message) for w in rec]
+    # a DIFFERENT (group, reason) still warns
+    with W.catch_warnings(record=True) as rec2:
+        W.simplefilter("always")
+        build_lib.default_ef_config(
+            mesh, plan, method=ef.EF21SGDM(compressor=C.RandK(), eta=0.1),
+            carrier="quant8")
+    hits2 = [w for w in rec2
+             if issubclass(w.category, build_lib.PlanDegradationWarning)]
+    assert len(hits2) == 1
+    # a DIFFERENT config (here: another η ⇒ another method) degrading with
+    # the SAME (group, reason) text is a new experiment — it warns again
+    with W.catch_warnings(record=True) as rec3:
+        W.simplefilter("always")
+        build_lib.default_ef_config(
+            mesh, plan, method=ef.EF21SGDM(compressor=C.RandK(), eta=0.2),
+            schedule=sched)
+    hits3 = [w for w in rec3
+             if issubclass(w.category, build_lib.PlanDegradationWarning)]
+    assert len(hits3) == 1
+    build_lib.reset_plan_warnings()
+
+
+def test_fused_group_misconfig_is_hard_error_in_build():
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import shardings as sh
+    sched = S.CompressionSchedule((
+        S.Group(pattern="*", compressor=C.TopK(), carrier="fused"),))
+    with pytest.raises(ValueError, match="UNFUSED"):
+        build_lib.default_ef_config(
+            mesh_lib.make_smoke_mesh(), sh.ShardPlan(),
+            method=ef.EF21SGDM(compressor=C.TopK(), eta=0.1),
+            schedule=sched)

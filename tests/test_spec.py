@@ -4,7 +4,6 @@ supported grid, validation fails at construction, and the golden fixtures
 under results/specs/ fail loudly on any schema drift."""
 import dataclasses
 import glob
-import json
 import os
 import subprocess
 import sys
@@ -171,9 +170,85 @@ def test_flag_spec_flag_stability():
                 moe_impl="dense", optimizer="adamw"),
         RunSpec(carrier="sparse", downlink_carrier="quant4",
                 downlink_ratio=0.02),
+        # --schedule grammar round-trip (compact form)
+        RunSpec(groups=spec_lib.parse_schedule_flag(
+            "norm|bias=dense,embed=quant4:0.05,*=sparse:0.02")),
+        # --schedule JSON round-trip (per-group knobs the grammar can't say)
+        RunSpec(groups=[
+            {"pattern": "norm|bias", "carrier": "dense"},
+            {"pattern": "*", "carrier": "quant4", "ratio": 0.02,
+             "downlink_carrier": "quant4", "downlink_ratio": 0.05,
+             "ef_state_dtype": "bfloat16"}]),
     ]
     for spec in cases:
         assert RunSpec.from_flags(spec.to_flags()) == spec, spec.to_flags()
+
+
+def test_schedule_flag_grammar_roundtrip():
+    """grammar → groups → grammar is identity for grammar-expressible
+    schedules, and the parser rejects malformed entries."""
+    s = "embed=dense,norm|bias=dense,attn=quant4:0.05@topk,*=sparse:0.02"
+    groups = spec_lib.parse_schedule_flag(s)
+    assert groups[2] == {"pattern": "attn", "carrier": "quant4",
+                         "ratio": 0.05, "compressor": "topk"}
+    assert spec_lib.format_schedule_flag(groups) == s
+    # JSON fallback for non-grammar keys
+    rich = [{"pattern": "*", "carrier": "quant4",
+             "downlink_carrier": "quant4"}]
+    out = spec_lib.format_schedule_flag(rich)
+    assert spec_lib.parse_schedule_flag(out) == rich
+    for bad in ("embed", "=dense", "embed=", ""):
+        with pytest.raises(ValueError):
+            spec_lib.parse_schedule_flag(bad)
+
+
+def test_groups_validation_fails_at_construction():
+    ok = [{"pattern": "norm", "carrier": "dense"}, {"pattern": "*"}]
+    RunSpec(groups=ok)
+    cases = [
+        ([{"pattern": "norm"}], "catch-all"),          # no '*' last
+        ([{"pattern": "*"}, {"pattern": "norm"}], "LAST"),
+        ([{"pattern": "a"}, {"pattern": "a"}, {"pattern": "*"}],
+         "duplicate"),
+        ([{"pattern": "a=b"}, {"pattern": "*"}], "reserved"),
+        ([{"pattern": "norm|"}, {"pattern": "*"}], "empty"),
+        ([{"pattern": "embed|*"}, {"pattern": "*"}], "standalone"),
+        ([{"pattern": "*", "carrier": "laser"}], "unknown carrier"),
+        ([{"pattern": "*", "compressor": "gzip"}], "unknown compressor"),
+        ([{"pattern": "*", "ratio": 0.0}], "ratio"),
+        ([{"pattern": "*", "ef_state_dtype": "fp8"}], "ef_state_dtype"),
+        ([{"pattern": "*", "downlink_carrier": "fused"}], "downlink"),
+        ([{"pattern": "*", "bogus_key": 1}], "unknown keys"),
+        # per-group fused misconfig is a construction error
+        ([{"pattern": "*", "carrier": "fused", "compressor": "topk"}],
+         "UNFUSED"),
+    ]
+    for groups, match in cases:
+        with pytest.raises(ValueError, match=match):
+            RunSpec(groups=groups)
+    # a valid fused group constructs
+    RunSpec(groups=[{"pattern": "*", "carrier": "fused",
+                     "compressor": "block_topk"}])
+
+
+def test_regen_goldens_reproduces_checked_in_fixtures(tmp_path):
+    """`python -m repro.launch.spec --regen-goldens` must reproduce the
+    checked-in results/specs/*.json byte-for-byte — goldens are generated
+    mechanically from spec.GOLDEN_SPECS, never hand-edited."""
+    golden_dir = os.path.join(os.path.dirname(__file__), "..", "results",
+                              "specs")
+    spec_lib.regen_goldens(str(tmp_path))
+    disk = sorted(os.path.basename(p) for p in glob.glob(
+        os.path.join(golden_dir, "*.json")))
+    regen = sorted(os.path.basename(p) for p in glob.glob(
+        str(tmp_path / "*.json")))
+    assert disk == regen, "GOLDEN_SPECS and results/specs/ disagree on names"
+    for name in disk:
+        with open(os.path.join(golden_dir, name)) as f:
+            want = f.read()
+        with open(tmp_path / name) as f:
+            got = f.read()
+        assert got == want, f"{name} drifted from its GOLDEN_SPECS recipe"
 
 
 def test_spec_hash_ignores_checkpoint_policy_only():
@@ -239,11 +314,28 @@ def test_from_json_rejects_unknown_keys_and_bad_version():
         RunSpec.from_dict({k: v for k, v in good.items() if k != "version"})
     # the v2 schema bump (downlink fields change what a spec EXECUTES):
     # pre-downlink v1 specs are rejected loudly, never silently upgraded
-    assert spec_lib.SCHEMA_VERSION == 2
+    assert spec_lib.SCHEMA_VERSION == 3
     v1 = {k: v for k, v in good.items()
-          if k not in ("downlink_carrier", "downlink_ratio")}
+          if k not in ("downlink_carrier", "downlink_ratio", "groups")}
     with pytest.raises(ValueError, match="version"):
         RunSpec.from_dict({**v1, "version": 1})
+
+
+def test_v2_spec_auto_upgrades_to_v3_and_roundtrips():
+    """v3 is purely additive over v2 (``groups`` defaults to the uniform
+    one-group schedule, exactly what a v2 spec always meant), so a v2 dict
+    upgrades mechanically, round-trips as v3, and hashes identically —
+    every v2 checkpoint stays resumable."""
+    now = RunSpec(arch="gemma2-9b", carrier="quant4", eta=0.3)
+    v2 = {k: v for k, v in now.to_dict().items() if k != "groups"}
+    v2["version"] = 2
+    up = RunSpec.from_dict(v2)
+    assert up == now and up.version == 3 and up.groups == []
+    assert RunSpec.from_json(up.to_json()) == up
+    assert up.spec_hash() == now.spec_hash()
+    # a v2 dict that somehow carries 'groups' is NOT silently upgraded
+    with pytest.raises(ValueError, match="version"):
+        RunSpec.from_dict({**now.to_dict(), "version": 2})
 
 
 # ---------------------------------------------------------------------------
