@@ -12,6 +12,14 @@ from typing import Dict, List
 import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+# the checked-in perf ledger (DESIGN.md §10): BENCH_<topic>.json at the repo
+# root, one append-only ``runs`` list per topic so regressions are a diff,
+# not an archaeology dig. CI regenerates and validates it every run.
+BENCH_SCHEMA = "bench/v1"
+_RUN_KEYS = {"timestamp", "device", "backend", "geometry", "metrics"}
+_METRIC_KEYS = {"p10_ns", "median_ns", "p90_ns", "iters"}
 
 
 def bench_spec(**overrides):
@@ -44,6 +52,126 @@ def csv_row(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
+def measure_ns(fn, *args, iters: int = 5, warmup: int = 2) -> Dict:
+    """Honest per-call timing: explicit warmup calls (compile + caches),
+    then ``iters`` timed calls each fenced by ``jax.block_until_ready`` so
+    async dispatch never hides device time. Returns the schema'd metric dict
+    {p10_ns, median_ns, p90_ns, iters} (percentiles over the timed calls —
+    a noisy CI neighbor shows up as p90 spread, not a corrupted median)."""
+    import jax
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter_ns() - t0)
+    return {"p10_ns": float(np.percentile(ts, 10)),
+            "median_ns": float(np.percentile(ts, 50)),
+            "p90_ns": float(np.percentile(ts, 90)),
+            "iters": len(ts)}
+
+
+def bench_run(geometry: Dict, metrics: Dict,
+              speedup_vs_ref: Dict = None) -> Dict:
+    """One schema'd ledger entry: where (device/backend), on what
+    (geometry), the measurements (metrics — name → measure_ns dict), and
+    the derived speedups (speedup_vs_ref — name → ratio)."""
+    import jax
+    dev = jax.devices()[0]
+    run = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+           "device": getattr(dev, "device_kind", str(dev)),
+           "backend": jax.default_backend(),
+           "geometry": dict(geometry),
+           "metrics": dict(metrics)}
+    if speedup_vs_ref is not None:
+        run["speedup_vs_ref"] = {k: float(v)
+                                 for k, v in speedup_vs_ref.items()}
+    return run
+
+
+def bench_path(topic: str) -> str:
+    return os.path.join(REPO_ROOT, f"BENCH_{topic}.json")
+
+
+def validate_bench(payload) -> List[str]:
+    """Schema check of one BENCH_<topic>.json payload; returns the list of
+    violations (empty = valid). CI fails the build on any violation."""
+    errs: List[str] = []
+    if not isinstance(payload, dict):
+        return [f"payload must be a dict, got {type(payload).__name__}"]
+    if payload.get("schema") != BENCH_SCHEMA:
+        errs.append(f"schema must be {BENCH_SCHEMA!r}, "
+                    f"got {payload.get('schema')!r}")
+    if not isinstance(payload.get("topic"), str) or not payload.get("topic"):
+        errs.append("topic must be a non-empty string")
+    runs = payload.get("runs")
+    if not isinstance(runs, list) or not runs:
+        return errs + ["runs must be a non-empty list"]
+    for i, run in enumerate(runs):
+        if not isinstance(run, dict):
+            errs.append(f"runs[{i}] must be a dict")
+            continue
+        missing = sorted(_RUN_KEYS - set(run))
+        if missing:
+            errs.append(f"runs[{i}] missing keys {missing}")
+            continue
+        if not isinstance(run["geometry"], dict):
+            errs.append(f"runs[{i}].geometry must be a dict")
+        metrics = run["metrics"]
+        if not isinstance(metrics, dict) or not metrics:
+            errs.append(f"runs[{i}].metrics must be a non-empty dict")
+            continue
+        for name, m in metrics.items():
+            if not isinstance(m, dict) or not _METRIC_KEYS <= set(m):
+                errs.append(f"runs[{i}].metrics[{name!r}] missing "
+                            f"{sorted(_METRIC_KEYS - set(m or {}))}")
+                continue
+            if not all(isinstance(m[k], (int, float)) and m[k] >= 0
+                       for k in _METRIC_KEYS):
+                errs.append(f"runs[{i}].metrics[{name!r}] has non-numeric "
+                            "or negative fields")
+            elif not m["p10_ns"] <= m["median_ns"] <= m["p90_ns"]:
+                errs.append(f"runs[{i}].metrics[{name!r}] percentiles out "
+                            "of order")
+        sp = run.get("speedup_vs_ref")
+        if sp is not None and (not isinstance(sp, dict) or not all(
+                isinstance(v, (int, float)) for v in sp.values())):
+            errs.append(f"runs[{i}].speedup_vs_ref must map names to "
+                        "numbers")
+    return errs
+
+
+def save_bench(topic: str, run: Dict, path: str = None,
+               keep_runs: int = 50) -> str:
+    """Append one ``bench_run`` entry to the checked-in BENCH_<topic>.json
+    ledger (created if absent, validated before and after — a malformed
+    ledger fails loudly rather than accreting). The runs list is capped at
+    ``keep_runs`` newest entries so the file stays reviewable."""
+    path = path or bench_path(topic)
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+        errs = validate_bench(payload)
+        if errs:
+            raise ValueError(f"existing {path} is malformed:\n  - "
+                             + "\n  - ".join(errs))
+        if payload["topic"] != topic:
+            raise ValueError(f"{path} holds topic {payload['topic']!r}, "
+                             f"refusing to append topic {topic!r}")
+    else:
+        payload = {"schema": BENCH_SCHEMA, "topic": topic, "runs": []}
+    payload["runs"] = (payload["runs"] + [run])[-keep_runs:]
+    errs = validate_bench(payload)
+    if errs:
+        raise ValueError("refusing to write a malformed ledger:\n  - "
+                         + "\n  - ".join(errs))
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    return path
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.time()
@@ -58,3 +186,39 @@ class Timer:
 
 def median_curves(runs: List[Dict], key: str = "grad_norm_sq") -> np.ndarray:
     return np.median(np.stack([r[key] for r in runs]), axis=0)
+
+
+def _validate_cli(paths: List[str]) -> int:
+    """``python -m benchmarks.common --validate BENCH_x.json ...`` — the CI
+    ledger gate: exit non-zero if any file is missing or malformed."""
+    rc = 0
+    for path in paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: MISSING/UNREADABLE ({e})")
+            rc = 1
+            continue
+        errs = validate_bench(payload)
+        if errs:
+            print(f"{path}: MALFORMED\n  - " + "\n  - ".join(errs))
+            rc = 1
+        else:
+            print(f"{path}: OK ({payload['topic']}, "
+                  f"{len(payload['runs'])} runs)")
+    return rc
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser(description="perf-ledger utilities")
+    ap.add_argument("--validate", nargs="+", metavar="PATH",
+                    help="validate BENCH_<topic>.json files against "
+                         f"the {BENCH_SCHEMA} schema")
+    a = ap.parse_args()
+    if a.validate:
+        sys.exit(_validate_cli(a.validate))
+    ap.print_help()

@@ -1,0 +1,162 @@
+"""The acceptance bench for the one-launch fused EF round (ISSUE 6): the
+fused uplink round vs today's unfused multi-launch step at smollm-360m
+geometry, recorded in the checked-in ledger BENCH_fused_round.json.
+
+What is timed (both sides jit-COMPILED — never the Pallas interpreter):
+
+* ``unfused_step`` — the pre-fusion hot path as four separately dispatched
+  launches, each fenced by ``block_until_ready`` so every stage round-trips
+  memory exactly as the separate-kernel chain does on device:
+  (1) EF21-SGDM update v' = (1−η)v + η·grad and residual v'−g,
+  (2) BlockTopK select (``core/compressors.py::BlockTopK.__call__`` math:
+      per-block lax.top_k threshold mask),
+  (3) block-quantize the selection (``kernels/ref.py::block_quantize_ref``),
+  (4) dequantize + integrate g' = g + decode(wire)  (the EF invariant).
+
+* ``fused_round`` — the same four stages as ONE jit (one launch), running
+  the mega-kernel's own selection algorithm: per-block threshold bisection
+  on the float bit pattern (``kernels/topk_compress.py`` semantics —
+  compare-and-count passes instead of a serial sort/heap), exactly as
+  ``kernels/fused_round.py::ef21_sgdm_topk_quant`` selects on TPU.
+
+The two paths are asserted BIT-IDENTICAL on every output (v', g', q,
+scales) before a single timing run — the speedup is never bought with a
+different answer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_run, csv_row, measure_ns, save_bench
+from repro.kernels import ref
+
+ETA, BLOCK, K, BITS = 0.1, 1024, 16, 8
+
+
+def _kth_bisect(ab, k: int):
+    """Exact per-row kth largest of non-negative ``ab`` via bisection on the
+    float32 bit pattern (monotone for non-negative floats): 32 vectorized
+    compare-and-count passes, no sort — the fused kernel's selection rule."""
+    lo = jnp.zeros((ab.shape[0],), jnp.int32)
+    hi = jnp.full((ab.shape[0],), jnp.int32(0x7F800000))  # +inf bit pattern
+    abi = ab.astype(jnp.float32).view(jnp.int32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = lo + (hi - lo) // 2
+        ge = jnp.sum(abi >= mid[:, None], axis=1) >= k
+        return jnp.where(ge, mid, lo), jnp.where(ge, hi, mid)
+
+    lo, _ = jax.lax.fori_loop(0, 32, body, (lo, hi))
+    return lo.view(jnp.float32)
+
+
+def _build(nb: int, d: int):
+    """(unfused_step, fused_round) callables over flat (d,) leaves padded to
+    ``nb`` launch blocks; both return (v', g', q, scales)."""
+
+    def update(grad, v, g):
+        v2 = (1.0 - ETA) * v + ETA * grad
+        return v2, v2 - g
+
+    def select_topk(delta):
+        db = delta.reshape(nb, BLOCK)
+        ab = jnp.abs(db)
+        thr = jax.lax.top_k(ab, K)[0][:, -1:]
+        return jnp.where(ab >= thr, db, 0.0)
+
+    def integrate(g, q, scales):
+        c_hat = ref.block_dequantize_ref(q, scales, bits=BITS, cols=BLOCK)
+        return g + c_hat.reshape(-1)[:d]
+
+    f_update = jax.jit(update)
+    f_select = jax.jit(select_topk)
+    f_quant = jax.jit(lambda c: ref.block_quantize_ref(c, BITS))
+    f_integrate = jax.jit(integrate)
+
+    def unfused_step(grad, v, g):
+        v2, delta = f_update(grad, v, g)
+        jax.block_until_ready(delta)          # launch 1 lands in memory
+        c = f_select(delta)
+        jax.block_until_ready(c)              # launch 2
+        q, scales = f_quant(c)
+        jax.block_until_ready(scales)         # launch 3
+        g2 = f_integrate(g, q, scales)
+        jax.block_until_ready(g2)             # launch 4
+        return v2, g2, q, scales
+
+    @jax.jit
+    def fused_round(grad, v, g):
+        v2, delta = update(grad, v, g)
+        db = delta.reshape(nb, BLOCK)
+        ab = jnp.abs(db)
+        thr = _kth_bisect(ab, K)
+        c = jnp.where(ab >= thr[:, None], db, 0.0)
+        q, scales = ref.block_quantize_ref(c, BITS)
+        return v2, integrate(g, q, scales), q, scales
+
+    return unfused_step, fused_round
+
+
+def _param_count(arch: str) -> int:
+    from repro.configs import base as cb
+    from repro.models import model as model_lib
+
+    cfg = cb.get(arch)
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    return sum(int(np.prod(leaf.shape))
+               for leaf in jax.tree_util.tree_leaves(shapes))
+
+
+def run(tiny: bool = False) -> dict:
+    arch = "smollm-360m"
+    params = 1 << 16 if tiny else _param_count(arch)
+    nb = -(-params // BLOCK)
+    d = nb * BLOCK
+    rng = np.random.RandomState(0)
+    grad, v, g = [jnp.asarray(rng.randn(d).astype(np.float32))
+                  for _ in range(3)]
+    unfused_step, fused_round = _build(nb, d)
+
+    # correctness gate first: the fused launch must reproduce the unfused
+    # chain bit-for-bit before its time is worth recording
+    u = unfused_step(grad, v, g)
+    f = jax.block_until_ready(fused_round(grad, v, g))
+    for name, a, b in zip(("v_new", "g_new", "q", "scales"), u, f):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"fused {name} != unfused")
+
+    iters, warmup = (5, 2) if tiny else (3, 1)
+    metrics = {
+        "unfused_step": measure_ns(unfused_step, grad, v, g,
+                                   iters=iters, warmup=warmup),
+        "fused_round": measure_ns(fused_round, grad, v, g,
+                                  iters=iters, warmup=warmup),
+    }
+    speedup = (metrics["unfused_step"]["median_ns"]
+               / max(metrics["fused_round"]["median_ns"], 1))
+    ledger = save_bench("fused_round", bench_run(
+        geometry={"arch": arch, "params": params, "d": d, "nb": nb,
+                  "block": BLOCK, "k_per_block": K, "bits": BITS,
+                  "eta": ETA, "tiny": tiny},
+        metrics=metrics,
+        speedup_vs_ref={"fused_round_vs_unfused_step": speedup}))
+    csv_row("fused_round_bench",
+            metrics["fused_round"]["median_ns"] / 1e3,
+            f"unfused_us={metrics['unfused_step']['median_ns'] / 1e3:.0f};"
+            f"speedup_x={speedup:.2f};params={params};tiny={tiny}")
+    return {"speedup": speedup, "ledger": ledger, "metrics": metrics}
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tiny", action="store_true",
+                   help="CI smoke geometry (64K params) instead of the full "
+                        "smollm-360m parameter count")
+    out = run(tiny=p.parse_args().tiny)
+    print(f"fused_round speedup vs unfused step: {out['speedup']:.2f}x "
+          f"(ledger: {out['ledger']})")

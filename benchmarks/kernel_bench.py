@@ -1,25 +1,35 @@
 """Kernel micro-bench: wall time of the Pallas kernels (interpret mode on CPU —
 these numbers validate correctness-path overhead, NOT TPU performance; the
 roofline derivation for real TPU lives in benchmarks/roofline.py) and of the
-pure-JAX equivalents the models use on CPU."""
-from __future__ import annotations
+pure-JAX equivalents the models use on CPU.
 
-import time
+Every timed section records {p10, median, p90} ns into the checked-in perf
+ledger BENCH_kernels.json at the repo root (benchmarks/common.py::save_bench);
+the legacy results/kernel_bench.json keeps its flat median-us keys. ``--tiny``
+shrinks every geometry for the CI bench-smoke step."""
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, save_json
+from benchmarks.common import (bench_run, csv_row, measure_ns, save_bench,
+                               save_json)
 from repro.kernels import ops, ref
 
+# metric name -> measure_ns dict, accumulated by _bench for the ledger
+_NS: dict = {}
 
-def _bench(fn, *args, iters=3):
-    fn(*args)  # compile/interpret warmup
-    t0 = time.time()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return 1e6 * (time.time() - t0) / iters
+
+def _bench(fn, *args, iters=3, key=None, warmup=2):
+    """Time fn(*args): explicit warmup, then per-call block_until_ready
+    timings (common.py::measure_ns). Returns median us for the flat legacy
+    dict; the full {p10, median, p90} ns sample lands in the ledger under
+    ``key``."""
+    m = measure_ns(fn, *args, iters=iters, warmup=warmup)
+    if key is not None:
+        _NS[key] = m
+    return m["median_ns"] / 1e3
 
 
 def _train_step_compare(out: dict) -> None:
@@ -43,50 +53,58 @@ def _train_step_compare(out: dict) -> None:
         def one(t):
             return step(*state, batch, jax.random.fold_in(key, t), t)[3]
 
-        out[f"train_step_{carrier}_us"] = _bench(one, 0, iters=3)
+        out[f"train_step_{carrier}_us"] = _bench(
+            one, 0, iters=3, key=f"train_step_{carrier}")
 
 
-def _quantize_bench(out: dict, x) -> None:
+def _quantize_bench(out: dict, x, block: int) -> None:
     """Wire-codec wall time: Pallas block-quantize/dequantize (interpret on
     CPU) vs the jit'd jnp oracle the vmap runtimes execute."""
     d = x.size
-    nb = d // 1024
+    nb = d // block
     for bits in (8, 4):
         out[f"quantize{bits}_pallas_interp_us"] = _bench(
-            lambda t, b=bits: ops.block_quantize(t, block=1024, bits=b),
-            x, iters=2)
+            lambda t, b=bits: ops.block_quantize(t, block=block, bits=b),
+            x, iters=2, key=f"quantize{bits}_pallas_interp")
         out[f"quantize{bits}_ref_us"] = _bench(
             jax.jit(lambda t, b=bits: ref.block_quantize_ref(
-                t.reshape(nb, 1024), b)), x)
-        q, s = ops.block_quantize(x, block=1024, bits=bits)
+                t.reshape(nb, block), b)), x, key=f"quantize{bits}_ref")
+        q, s = ops.block_quantize(x, block=block, bits=bits)
         out[f"dequantize{bits}_pallas_interp_us"] = _bench(
             lambda a, b, bb=bits: ops.block_dequantize(
-                a, b, d=d, block=1024, bits=bb), q, s, iters=2)
+                a, b, d=d, block=block, bits=bb), q, s, iters=2,
+            key=f"dequantize{bits}_pallas_interp")
         out[f"dequantize{bits}_ref_us"] = _bench(
             jax.jit(lambda a, b, bb=bits: ref.block_dequantize_ref(
-                a, b, bits=bb, cols=1024)), q, s)
+                a, b, bits=bb, cols=block)), q, s,
+            key=f"dequantize{bits}_ref")
 
 
-def _wire_savings(out: dict) -> None:
+def _wire_savings(out: dict, d: int, block: int, k: int) -> None:
     """Honest per-client wire words of one d-dim EF message per carrier at
     equal K (core/carriers.py::Carrier.wire_words): the x-axis the paper's
     per-bit plots use, and the collective-bytes lever --carrier buys."""
     from repro.core import carriers as carrier_lib
     from repro.core import compressors as C
 
-    d = 1 << 20
-    btk = C.BlockTopK(block=1024, k_per_block=16)
-    for name in ("dense", "sparse", "quant8", "quant4"):
+    btk = C.BlockTopK(block=block, k_per_block=k)
+    uplink = ("dense", "sparse", "quant8", "quant4",
+              "fused_quant8", "fused_quant4")
+    for name in uplink:
         out[f"wire_words_{name}"] = carrier_lib.make(name).wire_words(btk, d)
     out["wire_savings_quant8_vs_sparse"] = (
         out["wire_words_sparse"] / out["wire_words_quant8"])
     out["wire_savings_quant4_vs_sparse"] = (
         out["wire_words_sparse"] / out["wire_words_quant4"])
+    # the fused carrier ships dense quantized payloads (no index words, every
+    # block present) — this is the wire premium the one-launch uplink pays
+    out["wire_premium_fused_quant8_vs_quant8"] = (
+        out["wire_words_fused_quant8"] / out["wire_words_quant8"])
     # downlink split (DESIGN.md §8): the server broadcast per round, per
     # carrier — 'dense' is the implicit f32 broadcast every unidirectional
     # runtime ships, the lever --downlink-carrier attacks (acceptance: the
     # quant4 broadcast undercuts dense by well over 7×)
-    for name in ("dense", "sparse", "quant8", "quant4"):
+    for name in uplink:
         out[f"downlink_words_{name}"] = carrier_lib.downlink_words(
             carrier_lib.make(name), btk, d)
     for name in ("sparse", "quant8", "quant4"):
@@ -130,45 +148,85 @@ def _schedule_wire(out: dict) -> None:
         out["sched_wire_up_uniform_total"] / max(total, 1e-9))
 
 
-def run() -> dict:
+def run(tiny: bool = False) -> dict:
     rng = np.random.RandomState(0)
     out = {}
+    _NS.clear()
 
-    B, S, H, hd = 1, 512, 4, 64
-    q, k, v = [jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
-               for _ in range(3)]
+    # --tiny shrinks every geometry so the CI bench-smoke step exercises the
+    # full codepath (incl. the ledger write) in seconds; the numbers it
+    # records are labelled by their geometry, never compared across modes.
+    S = 128 if tiny else 512
+    d = 1 << 14 if tiny else 1 << 20
+    block, k = (256, 8) if tiny else (1024, 16)
+
+    B, H, hd = 1, 4, 64
+    q, kk, v = [jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
+                for _ in range(3)]
     out["flash_pallas_interp_us"] = _bench(
         lambda a, b, c: ops.flash_attention(a, b, c, block_q=128, block_k=128),
-        q, k, v, iters=2)
+        q, kk, v, iters=2, key="flash_pallas_interp")
     out["flash_ref_us"] = _bench(
-        jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)), q, k, v)
+        jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)), q, kk, v,
+        key="flash_ref")
 
-    x = jnp.asarray(rng.randn(1 << 20).astype(np.float32))
+    x = jnp.asarray(rng.randn(d).astype(np.float32))
     out["block_topk_pallas_interp_us"] = _bench(
-        lambda t: ops.block_topk(t, block=1024, k=16), x, iters=2)
+        lambda t: ops.block_topk(t, block=block, k=k), x, iters=2,
+        key="block_topk_pallas_interp")
     out["block_topk_ref_us"] = _bench(
-        jax.jit(lambda t: ref.block_topk_ref(t, 1024, 16)), x)
+        jax.jit(lambda t: ref.block_topk_ref(t, block, k)), x,
+        key="block_topk_ref")
 
-    g, vv, gg = [jnp.asarray(rng.randn(1 << 20).astype(np.float32))
+    g, vv, gg = [jnp.asarray(rng.randn(d).astype(np.float32))
                  for _ in range(3)]
     out["ef_update_fused_interp_us"] = _bench(
         lambda a, b, c: ops.ef21_sgdm_update(a, b, c, eta=0.1), g, vv, gg,
-        iters=2)
+        iters=2, key="ef_update_fused_interp")
     out["ef_update_ref_us"] = _bench(
         jax.jit(lambda a, b, c: ref.ef21_sgdm_update_ref(
-            a, b, c, eta=0.1, block=1024, k=16)), g, vv, gg)
+            a, b, c, eta=0.1, block=block, k=k)), g, vv, gg,
+        key="ef_update_ref")
 
-    _quantize_bench(out, x)
-    _wire_savings(out)
-    _schedule_wire(out)
-    _train_step_compare(out)
+    # the one-launch uplink mega-kernel vs its composed jnp oracle (both
+    # interpret-path on CPU — differential overhead only; the honest speedup
+    # claim lives in benchmarks/fused_round_bench.py on the compiled path)
+    out["fused_uplink_pallas_interp_us"] = _bench(
+        lambda a, b, c: ops.ef21_sgdm_topk_quant(
+            a, b, c, eta=0.1, block=block, k=k, bits=8), g, vv, gg, iters=2,
+        key="fused_uplink_pallas_interp")
+    out["fused_uplink_ref_us"] = _bench(
+        jax.jit(lambda a, b, c: ref.ef21_sgdm_topk_quant_ref(
+            a, b, c, eta=0.1, block=block, k=k, bits=8)), g, vv, gg,
+        key="fused_uplink_ref")
+
+    _quantize_bench(out, x, block)
+    _wire_savings(out, d, block, k)
+    if not tiny:
+        _schedule_wire(out)
+        _train_step_compare(out)
 
     save_json("kernel_bench", out)
+    speedups = {"ef_update_ref_vs_fused_uplink_ref": (
+        _NS["ef_update_ref"]["median_ns"]
+        / max(_NS["fused_uplink_ref"]["median_ns"], 1))}
+    if "train_step_dense" in _NS:
+        speedups["train_step_fused_vs_dense"] = (
+            _NS["train_step_dense"]["median_ns"]
+            / max(_NS["train_step_fused"]["median_ns"], 1))
+    ledger = save_bench("kernels", bench_run(
+        geometry={"d": d, "block": block, "k_per_block": k, "bits": [8, 4],
+                  "flash": {"B": B, "S": S, "H": H, "hd": hd},
+                  "tiny": tiny},
+        metrics=_NS, speedup_vs_ref=speedups))
+    out["bench_ledger"] = ledger
+    step = ("" if tiny else
+            f"step_dense_us={out['train_step_dense_us']:.0f};"
+            f"step_fused_us={out['train_step_fused_us']:.0f};")
     csv_row("kernel_bench", out["flash_pallas_interp_us"],
             f"topk_ref_us={out['block_topk_ref_us']:.0f};"
             f"ef_ref_us={out['ef_update_ref_us']:.0f};"
-            f"step_dense_us={out['train_step_dense_us']:.0f};"
-            f"step_fused_us={out['train_step_fused_us']:.0f};"
+            f"fused_uplink_ref_us={out['fused_uplink_ref_us']:.0f};" + step +
             f"wire_q8_x={out['wire_savings_quant8_vs_sparse']:.1f};"
             f"wire_q4_x={out['wire_savings_quant4_vs_sparse']:.1f};"
             f"down_q4_x={out['downlink_savings_quant4_vs_dense']:.1f}")
@@ -176,4 +234,11 @@ def run() -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tiny", action="store_true",
+                   help="CI bench-smoke geometry: shrink every size so the "
+                        "full codepath (incl. the BENCH ledger write) runs "
+                        "in seconds")
+    run(tiny=p.parse_args().tiny)

@@ -196,6 +196,32 @@ def to_markdown(rows: List[Dict]) -> str:
     return hdr + "\n".join(lines) + "\n"
 
 
+def _emit_ledger(rows: List[Dict], in_path: str) -> Optional[str]:
+    """Record the derived roofline terms in the checked-in BENCH_roofline.json
+    ledger (benchmarks/common.py). The terms are analytic — deterministic
+    given the dry-run HLO — so each metric is a single 'sample' with
+    p10 = median = p90 (the schema's percentile fields still give later PRs
+    one uniform shape to diff against measured benches)."""
+    from benchmarks.common import bench_run, save_bench
+    metrics = {}
+    for r in rows:
+        key = f"{r['arch']}_{r['shape']}"
+        for term in ("compute_s", "memory_s", "collective_s"):
+            ns = r[term] * 1e9
+            metrics[f"{key}_{term[:-2]}"] = {
+                "p10_ns": ns, "median_ns": ns, "p90_ns": ns, "iters": 1}
+    if not metrics:
+        return None
+    speedups = {f"{r['arch']}_{r['shape']}_ef_mem_unfused_vs_fused":
+                r["ef_mem_unfused_s"] / r["ef_mem_fused_s"]
+                for r in rows if "ef_mem_unfused_s" in r}
+    return save_bench("roofline", bench_run(
+        geometry={"source": in_path, "analytic": True,
+                  "hardware": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                               "link_bw": LINK_BW}},
+        metrics=metrics, speedup_vs_ref=speedups or None))
+
+
 def run(in_path: str = "results/dryrun_baseline_1pod.json",
         out_prefix: str = "results/roofline_baseline") -> List[Dict]:
     with open(in_path) as f:
@@ -207,6 +233,7 @@ def run(in_path: str = "results/dryrun_baseline_1pod.json",
             rows.append(row)
         elif rec["status"] == "SKIP":
             skips.append(rec)
+    _emit_ledger(rows, in_path)
     with open(out_prefix + ".json", "w") as f:
         json.dump({"rows": rows, "skips": skips}, f, indent=1)
     with open(out_prefix + ".md", "w") as f:

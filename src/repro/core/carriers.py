@@ -8,7 +8,7 @@ owns how c travels, every runtime (the vmap simulator in core/simulate.py, the
 vmap runtime ``ef_round``, and the shard_map runtime ``ef_round_sharded`` in
 core/distributed.py) dispatches through it, and methods never see the wire.
 
-Five carriers:
+The carriers:
 
   DenseCarrier        paper-faithful: c is shipped as a dense d-word tensor and
                       the mean lowers to an all-reduce (lax.pmean on the mesh,
@@ -38,6 +38,15 @@ Five carriers:
                       sparsification. Aggregation always dequantizes BEFORE
                       the collective arithmetic: summing int8 mantissas across
                       blocks with different scales is not associative.
+  FusedQuantCarrier   ``fused_quant8`` / ``fused_quant4``: the quantized wire
+                      AND the one-launch uplink — EF21-SGD(M) update,
+                      Block-TopK selection, absmax quantization, and the
+                      EF-invariant g' = g + decode(wire) integration all in a
+                      single mega-kernel (kernels/fused_round.py). The
+                      payload is the block-dense quantized innovation at the
+                      selection geometry (decodes bit-identically to the
+                      sparse payload; see the class docstring for the
+                      wire-words tradeoff).
 
 Execution plans — a runtime asks ``carrier.plan(method, eta)`` and gets:
 
@@ -46,10 +55,15 @@ Execution plans — a runtime asks ``carrier.plan(method, eta)`` and gets:
   'wire'   run pre_compress, then per-leaf encode → local_c → aggregate,
            then post_compress (message must equal the wire, method.wire_is_msg);
   'fused'  call ``carrier.fused_update`` which replaces the entire three-phase
-           chain with the fused kernel; aggregate the dense c it returns.
+           chain with the fused kernel; aggregate the dense c it returns;
+  'fused_wire'
+           call ``carrier.fused_wire_round`` — one mega-kernel launch per
+           leaf produces (v', g', quantized wire) with the EF invariant
+           integrated in-kernel, and the aggregated mean comes back with it
+           (the aggregation needs the wire, so it cannot be split off).
 
-``plan_with_reason`` additionally returns WHY a carrier degraded to the
-always-correct dense plan (empty reason = the native plan runs). Launch
+``plan_with_reason`` additionally returns WHY a carrier degraded from its
+native plan (empty reason = the native plan runs). Launch
 surfaces print it, so a misconfigured run no longer looks identical to a
 working one in logs.
 
@@ -101,6 +115,40 @@ def axis_size(axis_name) -> jax.Array:
     return jax.lax.psum(1, axis_name)
 
 
+def ring_all_gather(x: PyTree, axis_name, fn=None) -> PyTree:
+    """``lax.all_gather`` rebuilt as a ring of n−1 ``ppermute`` steps.
+
+    Bit-identical transport: the result is stacked in axis-index order, exactly
+    like ``lax.all_gather``'s leading axis — only the route differs. The point
+    of the ring is *comm/compute overlap*: ``fn`` (when given) maps each chunk
+    as it lands, and because chunk s never depends on permute s+1, XLA is free
+    to run ``fn`` on the chunk in hand while the next permute is in flight —
+    double-buffered decode behind the collective. ``fn`` must be elementwise
+    per chunk (applied chunk-by-chunk here vs. once on the gathered stack must
+    be the same bits); identity when omitted.
+
+    Degenerates to a no-op stack on a 1-device axis."""
+    if fn is None:
+        fn = lambda c: c                                 # noqa: E731
+    n = int(axis_size(axis_name))
+    if n == 1:
+        return jax.tree_util.tree_map(lambda a: a[None], fn(x))
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    buf, chunks = x, [fn(x)]
+    for _ in range(n - 1):
+        # chunk s arrives from ring-neighbor s hops back while fn(chunk s−1)
+        # is still runnable — the double buffer is (buf, chunks[-1])
+        buf = jax.tree_util.tree_map(
+            lambda a: jax.lax.ppermute(a, axis_name, perm), buf)
+        chunks.append(fn(buf))
+    stacked = jax.tree_util.tree_map(lambda *cs: jnp.stack(cs), *chunks)
+    # chunks[s] came from axis index (me − s) mod n; re-index to axis order
+    me = jax.lax.axis_index(axis_name)
+    order = jnp.mod(me - jnp.arange(n), n)
+    return jax.tree_util.tree_map(lambda s: jnp.take(s, order, axis=0),
+                                  stacked)
+
+
 def sparse_geom(comp, d: int) -> Tuple[int, int, int]:
     """(nb, block, kb) geometry of the fixed-size TopK-family wire for a flat
     (d,) leaf. Plain TopK = one block spanning the leaf (exact global TopK);
@@ -146,10 +194,30 @@ class Carrier:
     """Base carrier. Frozen dataclass → hashable, usable inside jit statics."""
 
     name: str = "abstract"
+    # comm/compute overlap (EFConfig.overlap / RunSpec --overlap): gather-wire
+    # carriers transport their all-gathers as a ppermute ring and decode each
+    # chunk while the next is in flight (ring_all_gather). Bit-identical to
+    # the blocking path by construction; a no-op for all-reduce wires (dense
+    # psum has no per-client chunks to pipeline).
+    overlap: bool = False
+
+    def _gather(self, x: PyTree, axis_name, fn=None) -> PyTree:
+        """The collective behind every gather-wire aggregate: blocking
+        ``lax.all_gather`` by default, the overlapped ppermute ring when
+        ``overlap`` is set. ``fn`` maps chunks as they arrive (overlap path)
+        or the whole stack at once (blocking path) — same bits either way."""
+        if self.overlap:
+            return ring_all_gather(x, axis_name, fn)
+        gathered = jax.tree_util.tree_map(
+            lambda a: jax.lax.all_gather(a, axis_name), x)
+        if fn is None:
+            return gathered
+        return jax.vmap(fn)(gathered)
 
     # -- plan selection ------------------------------------------------------
     def plan_with_reason(self, method, eta=None) -> Tuple[str, str]:
-        """(plan, reason): plan is 'dense' | 'wire' | 'fused'. The reason is
+        """(plan, reason): plan is 'dense' | 'wire' | 'fused' | 'fused_wire'.
+        The reason is
         the empty string when the carrier's native plan runs, and a
         human-readable explanation whenever it degraded to 'dense' — runtimes
         stay silent, but launch surfaces print it so a degraded configuration
@@ -204,6 +272,15 @@ class Carrier:
         """The dense C(delta) the client keeps locally for its gᵢ update —
         never transmitted. Returns flat (d,)."""
         return self.decode(comp, wire, d=delta.size, dtype=delta.dtype)
+
+    def decode_add(self, comp: comp_lib.Compressor, wire: Wire,
+                   base: jax.Array, *, d: int, dtype) -> jax.Array:
+        """``base + decode(wire)`` as one logical launch — the downlink's
+        h-integration hook (``downlink_round_integrate``). The default IS
+        that expression, so overriding carriers (quantized wires run the
+        fused dequantize+add Pallas kernel on TPU) stay bit-compatible
+        within float-compilation tolerance. ``base``: flat (d,)."""
+        return base + self.decode(comp, wire, d=d, dtype=dtype)
 
     def aggregate(self, comp: comp_lib.Compressor, wire: Wire, *, d: int,
                   dtype, dp: Optional[int] = None,
@@ -326,8 +403,7 @@ class SparseBlockCarrier(Carrier):
             n = 1
             for a in axes:                               # explicit wire
                 n = n * axis_size(a)
-                vals = jax.lax.all_gather(vals, a)
-                idx = jax.lax.all_gather(idx, a)
+                vals, idx = self._gather((vals, idx), a)
             vals = vals.reshape(-1, nb, kb)
             idx = idx.reshape(-1, nb, kb)
         else:
@@ -589,26 +665,54 @@ class QuantCarrier(Carrier):
                                          cols=self.qblock)
         return vals.reshape(-1)[:d].astype(dtype)
 
+    def decode_add(self, comp, wire, base, *, d, dtype):
+        # dense payload on TPU: dequantize + integrate in ONE Pallas launch
+        # (kernels/fused_round.py::dequant_add). Off-TPU the default jnp
+        # expression already compiles to one fused XLA computation, and the
+        # sparse payload's scatter decode has no tiled kernel — both take
+        # the base-class path. Same math either way, so the h-integration
+        # stays within float-compilation tolerance across backends.
+        if self._sparse_ok(comp) or jax.default_backend() != "tpu":
+            return super().decode_add(comp, wire, base, d=d, dtype=dtype)
+        from repro.kernels import fused_round as fr
+        q, scales = wire
+        out = fr.dequant_add(q, scales, base.astype(jnp.float32), d=d,
+                             block=self.qblock, bits=self.bits,
+                             interpret=False)
+        return out.astype(dtype)
+
     def aggregate(self, comp, wire, *, d, dtype, dp=None, axes=None):
         from repro.kernels import ref as kref
         if self._sparse_ok(comp):                        # sparse payload
             q, scales, idx = wire
             nb, block, kb = sparse_geom(comp, d)
-            if axes is not None:
-                n = 1
-                for a in axes:                           # gather the QUANTIZED
-                    n = n * axis_size(a)                 # wire — savings live
-                    q = jax.lax.all_gather(q, a)         # on the links
-                    scales = jax.lax.all_gather(scales, a)
-                    idx = jax.lax.all_gather(idx, a)
-                q = q.reshape(-1, nb, q.shape[-1])
-                scales = scales.reshape(-1, nb)
+            if axes is not None and len(axes) == 1:
+                # gather the QUANTIZED wire (the savings live on the links)
+                # and decode each client's chunk as it arrives — under
+                # ``overlap`` the ring keeps the next permute in flight while
+                # this chunk dequantizes; the blocking path applies the same
+                # per-chunk decode to the gathered stack (same bits)
+                n = axis_size(axes[0])
+                vals, idx = self._gather(
+                    (q, scales, idx), axes[0],
+                    fn=lambda w: (kref.block_dequantize_ref(
+                        w[0], w[1], bits=self.bits, cols=kb), w[2]))
+                vals = vals.reshape(-1, nb, kb)
                 idx = idx.reshape(-1, nb, kb)
             else:
-                n = dp                                   # (dp, nb, ·) layout
-            vals = kref.block_dequantize_ref(
-                q.reshape(-1, q.shape[-1]), scales.reshape(-1),
-                bits=self.bits, cols=kb).reshape(-1, nb, kb)
+                if axes is not None:
+                    n = 1
+                    for a in axes:
+                        n = n * axis_size(a)
+                        q, scales, idx = self._gather((q, scales, idx), a)
+                    q = q.reshape(-1, nb, q.shape[-1])
+                    scales = scales.reshape(-1, nb)
+                    idx = idx.reshape(-1, nb, kb)
+                else:
+                    n = dp                               # (dp, nb, ·) layout
+                vals = kref.block_dequantize_ref(
+                    q.reshape(-1, q.shape[-1]), scales.reshape(-1),
+                    bits=self.bits, cols=kb).reshape(-1, nb, kb)
             rows = jnp.broadcast_to(
                 jnp.arange(nb, dtype=jnp.int32)[None, :, None], idx.shape)
             buf = jnp.zeros((nb, block), jnp.float32)
@@ -657,6 +761,249 @@ class QuantCarrier(Carrier):
         """Predicted α of the composed compressor (0 when the bound is
         vacuous — the wire still works, EF just loses the rate guarantee)."""
         return max(0.0, 1.0 - self.composed_err_factor(comp, d))
+
+
+# ---------------------------------------------------------------------------
+# fused quantized wires (the one-launch mega-kernel carriers)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FusedQuantCarrier(QuantCarrier):
+    """Quantized wire + the ENTIRE uplink client round in one kernel launch.
+
+    Where ``fused`` fuses the EF21-SGD(M) update but still ships a dense f32
+    wire, and ``quant8``/``quant4`` quantize the wire but launch the update,
+    selection, and codec as separate kernels, this carrier runs
+    ``kernels/fused_round.py::ef21_sgdm_topk_quant`` — momentum update,
+    Block-TopK selection, absmax quantization, AND the EF-invariant
+    g' = g + decode(wire) integration — as ONE HBM pass (plan
+    ``'fused_wire'``), and the quantized payload is what travels.
+
+    Payload: the BLOCK-DENSE quantized form of the k-sparse innovation at the
+    selection geometry — q (nb, block·bits/8 bytes) + one f32 scale per
+    selection block. The quantization row IS the selection block, so the
+    masked row's absmax equals the selected values' absmax and masked-out
+    zeros get mantissa 0 exactly: this payload decodes bit-identically to the
+    (vals, idx) sparse payload, without the TPU-hostile in-kernel compaction
+    a sparse payload would need. The honest cost is on the links:
+    nb·(1 + block·bits/32) words/client — bits/32 of the dense/fused
+    carriers' d words, but MORE than quant8/quant4's kb-sized sparse payload.
+    Pick this carrier when the round is launch/HBM-bound (the mega-kernel is
+    the win); pick plain quant8/quant4 when the links are the bottleneck.
+
+    For methods/compressors the mega-kernel does not cover, the plan degrades
+    to the ordinary unfused ``'wire'`` (same payload, oracle codec) — still
+    correct, just three launches — or to ``'dense'`` under the base
+    QuantCarrier's own degradations. Launch surfaces treat a degraded
+    fused_quant like a degraded ``fused``: a hard misconfiguration error.
+
+    Aggregation dequantizes locally and pmeans f32 (the dense-payload rule:
+    mantissas under different scales are not associative), so ``overlap`` is
+    a no-op here — there is no per-client gather to pipeline.
+    """
+
+    name: str = "fused_quant8"
+    interpret: Optional[bool] = None
+
+    def _interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def _fused_geom(self, comp, d: int) -> Tuple[int, int, int]:
+        # the mega-kernel's launch geometry: selection geometry with
+        # single-block leaves lane-rounded (FusedPallasCarrier._kernel_geom).
+        # A degraded plan still routes the wire codec here with a plain
+        # (global) TopK compressor — one block spanning the leaf, same lane
+        # rounding, no ``BlockTopK.geom`` to call
+        if isinstance(comp, comp_lib.BlockTopK):
+            return FusedPallasCarrier._kernel_geom(comp, d)
+        nb, block, kb = sparse_geom(comp, d)
+        if nb == 1:
+            lanes = FusedPallasCarrier._LANES
+            block = -(-block // lanes) * lanes
+        return nb, block, kb
+
+    # -- plan ---------------------------------------------------------------
+    def plan_with_reason(self, method, eta=None):
+        plan, reason = super().plan_with_reason(method, eta)
+        if plan != "wire":
+            return plan, reason                          # dense degradation
+        if method.name not in ("ef21_sgdm", "ef21_sgd"):
+            return "wire", (
+                f"the fused wire kernel implements the EF21-SGD(M) client "
+                f"chain only, not {method.name!r}; running the unfused "
+                "quantized wire")
+        if not isinstance(method.compressor, comp_lib.BlockTopK):
+            return "wire", (
+                f"the fused wire kernel compresses with BlockTopK only, not "
+                f"{type(method.compressor).__name__}; running the unfused "
+                "quantized wire")
+        if not (eta is None or isinstance(eta, (int, float))):
+            return "wire", (
+                "momentum η is traced (time-varying schedule); the kernel "
+                "needs a static η to bake in — running the unfused "
+                "quantized wire")
+        if self.bits == 4 and method.compressor.block % 2:
+            # multi-block leaves launch at the compressor's own block width;
+            # single-block leaves lane-round to 128 and can never be odd
+            return "wire", (
+                "uint4 packing needs an even BlockTopK block; running the "
+                "unfused quantized wire")
+        return "fused_wire", ""
+
+    # -- wire (block-dense payload at the selection geometry) ----------------
+    def encode(self, comp, delta, rng=None):
+        from repro.kernels import ref as kref
+        if not self._sparse_ok(comp):
+            return super().encode(comp, delta, rng)
+        nb, block, _ = self._fused_geom(comp, delta.size)
+        c = comp(delta, rng).astype(jnp.float32)         # threshold-mask C(δ)
+        cb = jnp.pad(c, (0, nb * block - c.size)).reshape(nb, block)
+        return kref.block_quantize_ref(cb, self.bits)
+
+    def encode_local(self, comp, delta, rng=None):
+        if not self._sparse_ok(comp):
+            return super().encode_local(comp, delta, rng)
+        return self.encode(comp, delta, rng)
+
+    def decode(self, comp, wire, *, d, dtype):
+        from repro.kernels import ref as kref
+        if not self._sparse_ok(comp):
+            return super().decode(comp, wire, d=d, dtype=dtype)
+        q, scales = wire
+        _, block, _ = self._fused_geom(comp, d)
+        vals = kref.block_dequantize_ref(q, scales, bits=self.bits,
+                                         cols=block)
+        return vals.reshape(-1)[:d].astype(dtype)
+
+    def decode_add(self, comp, wire, base, *, d, dtype):
+        # the block-dense payload at the fused launch geometry runs the same
+        # one-launch dequantize+add kernel as the dense quant payload; an
+        # explicit ``interpret`` field (tests) or a real TPU selects the
+        # kernel, otherwise the default jnp expression (one fused XLA
+        # computation off-TPU) — bit-compatible within float-compilation
+        # tolerance either way
+        use_kernel = (self.interpret is not None
+                      or jax.default_backend() == "tpu")
+        if not self._sparse_ok(comp) or not use_kernel:
+            return super().decode_add(comp, wire, base, d=d, dtype=dtype)
+        from repro.kernels import fused_round as fr
+        q, scales = wire
+        _, block, _ = self._fused_geom(comp, d)
+        out = fr.dequant_add(q, scales, base.astype(jnp.float32), d=d,
+                             block=block, bits=self.bits,
+                             interpret=self._interpret())
+        return out.astype(dtype)
+
+    def aggregate(self, comp, wire, *, d, dtype, dp=None, axes=None):
+        from repro.kernels import ref as kref
+        if not self._sparse_ok(comp):
+            return super().aggregate(comp, wire, d=d, dtype=dtype, dp=dp,
+                                     axes=axes)
+        if axes is not None:                             # dense-payload rule:
+            deq = self.decode(comp, wire, d=d, dtype=jnp.float32)
+            return jax.lax.pmean(deq, axes).astype(dtype)  # dequant THEN psum
+        q, scales = wire                                 # (dp, nb, ·) layout
+        _, block, _ = self._fused_geom(comp, d)
+        dp_, nb = scales.shape
+        vals = kref.block_dequantize_ref(
+            q.reshape(dp_ * nb, q.shape[-1]), scales.reshape(-1),
+            bits=self.bits, cols=block)
+        return vals.reshape(dp_, -1)[:, :d].mean(0).astype(dtype)
+
+    # -- accounting ---------------------------------------------------------
+    def wire_words(self, comp, d):
+        if not self._sparse_ok(comp):
+            return super().wire_words(comp, d)
+        nb, block, _ = self._fused_geom(comp, d)
+        return nb * (1.0 + block * self.bits / 32.0)
+
+    def quant_eps(self, comp, d: int) -> float:
+        # one scale per SELECTION block (not per kb values): the absmax is
+        # still the selected values' absmax, and only the ≤ block selected
+        # slots carry error mass, but the bound must count the slots a scale
+        # covers — use the selection block for an honest constant
+        if not self._sparse_ok(comp):
+            return super().quant_eps(comp, d)
+        qmax = 2 ** (self.bits - 1) - 1
+        _, _, kb = sparse_geom(comp, d)
+        return kb / (4.0 * qmax * qmax)
+
+    # -- the one-launch round ------------------------------------------------
+    def fused_wire_round(self, method, grads: PyTree, state: dict, *,
+                         eta=None, batched: bool = False,
+                         axes: Optional[Tuple[str, ...]] = None,
+                         dp: Optional[int] = None):
+        """The 'fused_wire' plan: one mega-kernel launch per leaf produces
+        (v', g', wire) with g' = g + decode(wire) integrated in-kernel, then
+        the wire aggregates under the dense-payload rule. ``grads``/``state``
+        leaves are client-local (shard_map, ``batched=False``) or carry a
+        leading client axis (vmap runtimes, ``batched=True`` — clients become
+        extra tile rows; no vmap-of-pallas_call is ever emitted).
+        Returns (msg_mean_tree, new_state)."""
+        from repro.kernels import fused_round as fr
+        from repro.kernels import ref as kref
+
+        comp = method.compressor
+        if method.name == "ef21_sgd":
+            eta_f = 1.0                                  # v' = grad exactly
+            v_tree = state["g"]
+        else:
+            eta_f = float(eta) if eta is not None else float(method.eta)
+            v_tree = state["v"]
+        interp = self._interpret()
+
+        g_leaves, treedef = jax.tree_util.tree_flatten(state["g"])
+        v_leaves = jax.tree_util.tree_leaves(v_tree)
+        grad_leaves = jax.tree_util.tree_leaves(grads)
+
+        v_out, g_out, msg_out = [], [], []
+        for grad, v, g in zip(grad_leaves, v_leaves, g_leaves):
+            if batched:
+                # pad each client's leaf to whole launch blocks FIRST so
+                # client boundaries and tile-row boundaries coincide
+                dpn = grad.shape[0]
+                d = grad[0].size
+                nb, block, kb = self._fused_geom(comp, d)
+                pad = nb * block - d
+
+                def prep(x):
+                    return jnp.pad(x.reshape(dpn, d), ((0, 0), (0, pad)))
+
+                v2, g2, q, scales = fr.ef21_sgdm_topk_quant(
+                    prep(grad), prep(v), prep(g), eta=eta_f, block=block,
+                    k=kb, bits=self.bits, interpret=interp)
+                v2 = v2[:, :d].reshape(grad.shape)
+                g2 = g2[:, :d].reshape(grad.shape)
+                vals = kref.block_dequantize_ref(q, scales, bits=self.bits,
+                                                 cols=block)
+                msg = (vals.reshape(dpn, -1)[:, :d].mean(0)
+                       .reshape(grad.shape[1:]).astype(grad.dtype))
+            else:
+                d = grad.size
+                nb, block, kb = self._fused_geom(comp, d)
+                v2, g2, q, scales = fr.ef21_sgdm_topk_quant(
+                    grad, v, g, eta=eta_f, block=block, k=kb,
+                    bits=self.bits, interpret=interp)
+                vals = kref.block_dequantize_ref(q, scales, bits=self.bits,
+                                                 cols=block)
+                dec = vals.reshape(-1)[:d].astype(jnp.float32)
+                msg = (jax.lax.pmean(dec, axes)      # dense-payload rule:
+                       .reshape(grad.shape)          # dequant THEN psum
+                       .astype(grad.dtype))
+            v_out.append(v2)
+            g_out.append(g2)
+            msg_out.append(msg)
+
+        unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)  # noqa: E731
+        msg_mean = unf(msg_out)
+        g_new = method._cast(unf(g_out))
+        if method.name == "ef21_sgd":
+            new_state = {"g": g_new}
+        else:
+            new_state = {"v": method._cast(unf(v_out)), "g": g_new}
+        return msg_mean, new_state
 
 
 # ---------------------------------------------------------------------------
@@ -731,6 +1078,34 @@ def downlink_round(carrier: Carrier, comp, delta: PyTree,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def downlink_round_integrate(carrier: Carrier, comp, delta: PyTree,
+                             h: PyTree, rng: Optional[jax.Array] = None
+                             ) -> PyTree:
+    """One downlink broadcast leg WITH the h-integration fused in, per leaf:
+    h' = h + decode(encode(C(delta))), dispatched through
+    ``Carrier.decode_add`` so quantized wires can run the one-launch
+    dequantize+add Pallas kernel on TPU instead of a decode launch followed
+    by an add. Bit-compatible with ``tree_add(h, downlink_round(...))``
+    (the default decode_add IS that expression; the kernel path stays within
+    float-compilation tolerance). Same encode/rng discipline as
+    ``downlink_round`` — the wire that travels is identical."""
+    plan = carrier.plan_down(comp)
+    d_leaves, treedef = jax.tree_util.tree_flatten(delta)
+    h_leaves = jax.tree_util.tree_leaves(h)
+    out = []
+    for i, (leaf, hl) in enumerate(zip(d_leaves, h_leaves)):
+        flat = leaf.reshape(-1)
+        r = None if rng is None else jax.random.fold_in(rng, i)
+        if plan == "wire":
+            wire = carrier.encode(comp, flat, r)
+            new = carrier.decode_add(comp, wire, hl.reshape(-1),
+                                     d=flat.size, dtype=hl.dtype)
+        else:
+            new = hl.reshape(-1) + comp(flat, r).astype(hl.dtype)
+        out.append(new.reshape(hl.shape).astype(hl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def downlink_words(carrier: Carrier, comp, d: int) -> float:
     """Words the server puts on the wire per broadcast message of dimension
     d — the downlink twin of ``Carrier.wire_words`` (the degraded dense plan
@@ -752,12 +1127,22 @@ def _quant4() -> "QuantCarrier":
     return QuantCarrier(name="quant4", bits=4)
 
 
+def _fused_quant8() -> "FusedQuantCarrier":
+    return FusedQuantCarrier(name="fused_quant8", bits=8)
+
+
+def _fused_quant4() -> "FusedQuantCarrier":
+    return FusedQuantCarrier(name="fused_quant4", bits=4)
+
+
 REGISTRY = {
     "dense": DenseCarrier,
     "sparse": SparseBlockCarrier,
     "fused": FusedPallasCarrier,
     "quant8": _quant8,
     "quant4": _quant4,
+    "fused_quant8": _fused_quant8,
+    "fused_quant4": _fused_quant4,
 }
 
 

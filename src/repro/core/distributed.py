@@ -26,6 +26,11 @@ dispatch the wire format of meanᵢ(cᵢ) through :mod:`repro.core.carriers` —
              arrays; dense payloads dequantize locally before the psum (an
              int8 all-reduce across differing scales is not associative).
              EF re-sends the quantization error — local_c is the wire decode.
+  'fused_quant8' / 'fused_quant4'
+           — the one-launch round: the whole client chain (EF update +
+             Block-TopK + quantize + EF-invariant integration) runs as ONE
+             Pallas mega-kernel (kernels/fused_round.py) and the quantized
+             block-dense payload is what aggregates (dequantize, then pmean).
 
 Bidirectional compression (DESIGN.md §8): ``EFConfig.down_carrier`` /
 ``down_compressor`` add a DOWNLINK leg to the round — the server keeps an
@@ -59,7 +64,7 @@ DOWNLINK_FOLD = carrier_lib.DOWNLINK_FOLD
 @dataclasses.dataclass(frozen=True)
 class EFConfig:
     method: ef_lib.Method
-    carrier: str = "dense"     # 'dense'|'sparse'|'fused'|'quant8'|'quant4'
+    carrier: str = "dense"     # any core/carriers.py REGISTRY name
     data_axes: Tuple[str, ...] = ("data",)  # mesh axes forming the client dim
     b_init_scale: bool = True              # Alg 1 line 2: init v⁰=g⁰ to first grads
     # downlink (server → client broadcast) leg, DESIGN.md §8: 'dense' with no
@@ -74,6 +79,12 @@ class EFConfig:
     # own. None runs the legacy single-compressor path unchanged; a uniform
     # one-group schedule is bit-identical to it (tests/test_schedule.py).
     schedule: Optional[sched_lib.CompressionSchedule] = None
+    # comm/compute overlap (DESIGN.md §10): gather-wire aggregations on the
+    # shard_map runtime transport their all-gathers as a ppermute ring and
+    # decode each chunk while the next is in flight. Bit-identical to the
+    # blocking anchor (the ring reproduces all_gather's axis order exactly);
+    # a no-op for all-reduce wires and for the vmap runtimes (no collectives)
+    overlap: bool = False
 
     @property
     def has_downlink(self) -> bool:
@@ -170,6 +181,8 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
     c_axes = efc.data_axes
     sched = efc.schedule
     carrier = carrier_lib.make(efc.carrier)
+    if efc.overlap:
+        carrier = dataclasses.replace(carrier, overlap=True)
     plan = carrier.plan(method, eta)
     down_carrier = carrier_lib.make(efc.down_carrier)
     down_comp = efc.down_comp()
@@ -183,12 +196,19 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
             # grouped engine: one wire (and one aggregation collective) per
             # group, each on its group's carrier/compressor
             msg_mean, new_cl = sched_lib.round_local(
-                sched, method, g, cl, c_axes, rng_l, eta)
+                sched, method, g, cl, c_axes, rng_l, eta,
+                overlap=efc.overlap)
             return ex(new_cl), msg_mean
         if plan == "fused":
             c_tree, new_cl = carrier.fused_update(method, g, cl, eta=eta)
             msg_mean = jax.tree_util.tree_map(
                 lambda c: jax.lax.pmean(c, c_axes), c_tree)
+        elif plan == "fused_wire":
+            # one mega-kernel launch per leaf: update + select + quantize +
+            # EF-invariant integration; the aggregated mean comes back with
+            # the new client state (aggregation needs the wire)
+            msg_mean, new_cl = carrier.fused_wire_round(
+                method, g, cl, eta=eta, axes=c_axes)
         elif plan == "wire":
             deltas, ctx = method.pre_compress(g, cl, eta=eta)
             c_tree, msg_mean = carrier_lib.wire_round_local(
@@ -282,6 +302,9 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
         c_tree, new_clients = carrier.fused_update(
             method, grads, clients, eta=eta, batched=True)
         msg_mean = jax.tree_util.tree_map(lambda c: c.mean(0), c_tree)
+    elif plan == "fused_wire":
+        msg_mean, new_clients = carrier.fused_wire_round(
+            method, grads, clients, eta=eta, batched=True, dp=dp)
     elif plan == "wire":
         deltas, ctxs = jax.vmap(
             lambda g, s: method.pre_compress(g, s, eta=eta))(grads, clients)

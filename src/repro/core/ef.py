@@ -518,9 +518,11 @@ def downlink_sync(carrier, comp, g_server: PyTree, h: Optional[PyTree],
     from repro.core import carriers as carrier_lib
     if not memory:
         return carrier_lib.downlink_round(carrier, comp, g_server, rng), None
-    dec = carrier_lib.downlink_round(carrier, comp, tree_sub(g_server, h),
-                                     rng)
-    h_new = tree_add(h, dec)
+    # decode + h-integration in one fused leg (downlink_round_integrate):
+    # quantized wires run the one-launch dequantize+add kernel on TPU;
+    # everywhere else this is exactly h + decode(wire)
+    h_new = carrier_lib.downlink_round_integrate(
+        carrier, comp, tree_sub(g_server, h), h, rng)
     return h_new, h_new
 
 

@@ -23,7 +23,8 @@ dispatches through (the vmap simulator in core/simulate.py, ``ef_round`` and
 ``ef_round_sharded`` in core/distributed.py): per group, the existing
 single-compressor machinery runs unchanged on that group's leaf list — the
 same pre_compress → C(·) → post_compress chain, the same carrier plans
-('dense' | 'wire' | 'fused'), the same downlink broadcast leg — and the
+('dense' | 'wire' | 'fused' | 'fused_wire'), the same downlink broadcast
+leg — and the
 results are scattered back into the full tree. A uniform single-group
 schedule therefore executes the *identical* operation sequence (including
 rng folding: the group rng is the round rng untouched when there is only
@@ -295,7 +296,8 @@ def init_state_grouped(schedule: CompressionSchedule, method,
 # ---------------------------------------------------------------------------
 
 def _grouped_round(schedule: CompressionSchedule, method, grads: PyTree,
-                   states: Dict, rng, eta, leg) -> Tuple[PyTree, Dict]:
+                   states: Dict, rng, eta, leg,
+                   overlap: bool = False) -> Tuple[PyTree, Dict]:
     """The scaffolding both layouts share: resolve leaves → per-group take →
     ``leg(m_g, carrier, plan, grads_g, states_g, r_g) -> (agg_g, new_st)`` →
     scatter-merge back onto the full treedef. Keeping this in ONE place is
@@ -316,6 +318,8 @@ def _grouped_round(schedule: CompressionSchedule, method, grads: PyTree,
             continue
         m_g = group_method(method, grp)
         carrier = carrier_lib.make(grp.carrier)
+        if overlap:
+            carrier = dataclasses.replace(carrier, overlap=True)
         plan = carrier.plan(m_g, eta)
         agg_g, new_st = leg(m_g, carrier, plan,
                             _take_grads(grads, method, ii),
@@ -348,6 +352,9 @@ def round_batched(schedule: CompressionSchedule, method, grads: PyTree,
                 m_g, grads_g, states_g, eta=eta, batched=True)
             return jax.tree_util.tree_map(lambda c: c.mean(0),
                                           c_tree), new_st
+        if plan == "fused_wire":
+            return carrier.fused_wire_round(
+                m_g, grads_g, states_g, eta=eta, batched=True, dp=dp)
         if plan == "wire":
             deltas, ctxs = jax.vmap(
                 lambda g, s, m=m_g: m.pre_compress(g, s, eta=eta))(
@@ -371,16 +378,22 @@ def round_batched(schedule: CompressionSchedule, method, grads: PyTree,
 
 
 def round_local(schedule: CompressionSchedule, method, grads: PyTree,
-                states: Dict, axes: Tuple[str, ...], rng, eta=None
-                ) -> Tuple[PyTree, Dict]:
+                states: Dict, axes: Tuple[str, ...], rng, eta=None,
+                overlap: bool = False) -> Tuple[PyTree, Dict]:
     """Per-group client legs with client-local leaves and explicit named-axis
-    collectives (``ef_round_sharded``). Returns ``(msg_mean, new_states)``."""
+    collectives (``ef_round_sharded``). ``overlap`` turns each group
+    carrier's gather-wire aggregation into the ppermute ring
+    (carriers.ring_all_gather — bit-identical transport). Returns
+    ``(msg_mean, new_states)``."""
     def leg(m_g, carrier, plan, grads_g, states_g, r_g):
         if plan == "fused":
             c_tree, new_st = carrier.fused_update(
                 m_g, grads_g, states_g, eta=eta)
             return jax.tree_util.tree_map(
                 lambda c: jax.lax.pmean(c, axes), c_tree), new_st
+        if plan == "fused_wire":
+            return carrier.fused_wire_round(
+                m_g, grads_g, states_g, eta=eta, axes=axes)
         if plan == "wire":
             deltas, ctx = m_g.pre_compress(grads_g, states_g, eta=eta)
             c_tree, agg_g = carrier_lib.wire_round_local(
@@ -391,7 +404,8 @@ def round_local(schedule: CompressionSchedule, method, grads: PyTree,
         return jax.tree_util.tree_map(
             lambda m: jax.lax.pmean(m, axes), msg), new_st
 
-    return _grouped_round(schedule, method, grads, states, rng, eta, leg)
+    return _grouped_round(schedule, method, grads, states, rng, eta, leg,
+                          overlap=overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -465,8 +479,10 @@ def wire_words_tree(schedule: CompressionSchedule, method, tree: PyTree,
             plan = car.plan(m_g, eta)
             for i in idx[gi]:
                 d = int(leaves[i].size)
+                # the fused_wire plan ships the quantized payload, so it
+                # counts the carrier's wire words exactly like 'wire'
                 total += (car.wire_words(m_g.compressor, d)
-                          if plan == "wire" else float(d))
+                          if plan in ("wire", "fused_wire") else float(d))
         per.append(total)
     return tuple(per), float(sum(per))
 
@@ -511,7 +527,7 @@ def plan_table(schedule: CompressionSchedule, method, tree: PyTree,
     up_per, up_total = wire_words_tree(schedule, method, tree, "up", eta)
     dn_per, dn_total = wire_words_tree(schedule, method, tree, "down", eta)
     rows = [f"{'group':18s} {'leaves':>6s} {'params':>10s} "
-            f"{'compressor':14s} {'carrier':8s} {'plan':6s} "
+            f"{'compressor':14s} {'carrier':12s} {'plan':10s} "
             f"{'down':8s} {'wire_up':>10s} {'wire_down':>10s}"]
     for gi, grp in enumerate(schedule.groups):
         m_g = group_method(method, grp)
@@ -520,12 +536,12 @@ def plan_table(schedule: CompressionSchedule, method, tree: PyTree,
         params = sum(int(leaves[i].size) for i in idx[gi])
         rows.append(
             f"{grp.pattern:18s} {len(idx[gi]):6d} {params:10d} "
-            f"{type(grp.compressor).__name__:14s} {grp.carrier:8s} "
-            f"{plan:6s} {grp.down_carrier:8s} {up_per[gi]:10.0f} "
+            f"{type(grp.compressor).__name__:14s} {grp.carrier:12s} "
+            f"{plan:10s} {grp.down_carrier:8s} {up_per[gi]:10.0f} "
             f"{dn_per[gi]:10.0f}"
             + (f"  (degraded: {reason})" if reason else ""))
     rows.append(f"{'TOTAL':18s} {len(leaves):6d} "
                 f"{sum(int(x.size) for x in leaves):10d} "
-                f"{'':14s} {'':8s} {'':6s} {'':8s} {up_total:10.0f} "
+                f"{'':14s} {'':12s} {'':10s} {'':8s} {up_total:10.0f} "
                 f"{dn_total:10.0f}")
     return "\n".join(rows)

@@ -40,7 +40,8 @@ class SimConfig:
     b_init: int = 1                 # initial batch size B_init (Alg 1 line 2)
     time_varying: bool = False      # γₜ = γ/√(t+1), ηₜ = η/√(t+1) (App. J / Fig 4)
     record_every: int = 1
-    carrier: str = "dense"     # 'dense'|'sparse'|'fused'|'quant8'|'quant4'
+    carrier: str = "dense"     # any core/carriers.py REGISTRY name:
+    # 'dense'|'sparse'|'fused'|'quant8'|'quant4'|'fused_quant8'|'fused_quant4'
     # downlink (server → client broadcast) leg, DESIGN.md §8. The default
     # ('dense', no compressor) is the unidirectional simulator, bit-identical
     # to pre-downlink behavior. ``down_memory=False`` is the NAIVE ablation
@@ -146,6 +147,10 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
             c_tree, states_new = carrier.fused_update(
                 method, grads, states, eta=eta_t, batched=True)
             msg_mean = jax.tree_util.tree_map(lambda c: c.mean(0), c_tree)
+        elif plan == "fused_wire":
+            grads = jax.vmap(client_grads)(clients, r_grads)
+            msg_mean, states_new = carrier.fused_wire_round(
+                method, grads, states, eta=eta_t, batched=True, dp=cfg.n)
         elif plan == "wire":
             grads = jax.vmap(client_grads)(clients, r_grads)
             deltas, ctxs = jax.vmap(

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.quantize import _row_tiles
 from repro.kernels.topk_compress import _bisect_threshold
 
 
@@ -49,10 +50,7 @@ def ef21_sgdm_update(grad: jax.Array, v: jax.Array, g: jax.Array, *,
     def prep(x):
         return jnp.pad(x.reshape(-1), (0, pad)).reshape(nb, block)
 
-    rt = min(rows_per_tile, nb)
-    while nb % rt:
-        rt -= 1
-
+    rt = _row_tiles(nb, block, rows_per_tile)
     spec = pl.BlockSpec((rt, block), lambda i: (i, 0))
     v_new, g_new, c = pl.pallas_call(
         functools.partial(_ef_kernel, eta=eta, k=k),

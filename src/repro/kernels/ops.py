@@ -14,6 +14,7 @@ import jax
 
 from repro.kernels import ef_update as _ef
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_round as _fr
 from repro.kernels import quantize as _qz
 from repro.kernels import topk_compress as _tk
 
@@ -40,6 +41,24 @@ def ef21_sgdm_update(grad, v, g, *, eta: float, block: int = 1024,
                      k: int = 16) -> Tuple[jax.Array, jax.Array, jax.Array]:
     return _ef.ef21_sgdm_update(grad, v, g, eta=eta, block=block, k=k,
                                 interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "block", "k", "bits"))
+def ef21_sgdm_topk_quant(grad, v, g, *, eta: float, block: int = 1024,
+                         k: int = 16, bits: int = 8
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                    jax.Array]:
+    """One-launch uplink: EF update + BlockTopK + quantize → (v', g', q, s)."""
+    return _fr.ef21_sgdm_topk_quant(grad, v, g, eta=eta, block=block, k=k,
+                                    bits=bits, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("d", "block", "bits", "alpha"))
+def dequant_add(q, scales, base, *, d: int, block: int = 256, bits: int = 8,
+                alpha: float = 1.0) -> jax.Array:
+    """One-launch downlink: base + alpha·dequantize(q, scales)."""
+    return _fr.dequant_add(q, scales, base, d=d, block=block, bits=bits,
+                           alpha=alpha, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("block", "bits"))

@@ -50,8 +50,25 @@ def _dequant_kernel(q_ref, s_ref, o_ref, *, bits: int):
     o_ref[...] = (vals * scale[:, None]).astype(o_ref.dtype)
 
 
-def _row_tiles(nb: int, rows_per_tile: int) -> int:
-    rt = min(rows_per_tile, nb)
+# Per-operand VMEM budget for one grid step, in f32 words. A kernel holds a
+# handful of (rt, block) tiles live at once (inputs + outputs + intermediates
+# like |x| in the bisection), so 128Ki words ≈ 512 KB/operand keeps the worst
+# case (~6 operands) comfortably inside the ~16 MB/core VMEM.
+_VMEM_TILE_WORDS = 1 << 17
+
+
+def _row_tiles(nb: int, block: int, rows_per_tile: int = 8) -> int:
+    """Rows per grid step, picked from the array geometry.
+
+    ``rows_per_tile`` is an upper bound, further capped so one operand tile
+    (rt × block f32) stays within the per-operand VMEM budget — a lane-rounded
+    single-block leaf can make ``block`` itself huge, and a fixed rt=8 would
+    blow VMEM. The result must divide ``nb`` exactly (the grid is uniform);
+    lane alignment is the 128-wide last axis, which the callers own — this
+    helper only sizes the sublane (row) axis.
+    """
+    cap = max(1, _VMEM_TILE_WORDS // max(1, block))
+    rt = max(1, min(rows_per_tile, nb, cap))
     while nb % rt:
         rt -= 1
     return rt
@@ -68,7 +85,7 @@ def block_quantize(x: jax.Array, *, block: int = 256, bits: int = 8,
     d = x.size
     nb = -(-d // block)
     xb = jnp.pad(x.reshape(-1), (0, nb * block - d)).reshape(nb, block)
-    rt = _row_tiles(nb, rows_per_tile)
+    rt = _row_tiles(nb, block, rows_per_tile)
     qcols = block if bits == 8 else block // 2
     qdtype = jnp.int8 if bits == 8 else jnp.uint8
 
@@ -91,7 +108,7 @@ def block_dequantize(q: jax.Array, scales: jax.Array, *, d: int,
     """Inverse of :func:`block_quantize`; returns the flat (d,) f32 decode."""
     assert bits in (8, 4), bits
     nb = q.shape[0]
-    rt = _row_tiles(nb, rows_per_tile)
+    rt = _row_tiles(nb, block, rows_per_tile)
     out = pl.pallas_call(
         functools.partial(_dequant_kernel, bits=bits),
         grid=(nb // rt,),

@@ -48,6 +48,27 @@ def ef21_sgdm_update_ref(grad: jax.Array, v: jax.Array, g: jax.Array, *,
     return v_new, g + c, c
 
 
+def ef21_sgdm_topk_quant_ref(grad: jax.Array, v: jax.Array, g: jax.Array, *,
+                             eta: float, block: int, k: int, bits: int
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                        jax.Array]:
+    """Composed oracle for the fused uplink mega-kernel
+    (kernels/fused_round.py): block_quantize_ref ∘ block_topk_ref ∘
+    ef21_sgdm_update_ref, then g' integrates the DECODE of the wire (the EF
+    invariant — what the client remembers must equal what the server reads).
+    Returns (v', g', q, scales) on the same flat-block layout as the kernel."""
+    shape, d = grad.shape, grad.size
+    nb = -(-d // block)
+    v_new, _, c = ef21_sgdm_update_ref(grad, v, g, eta=eta, block=block, k=k)
+    cb = jnp.pad(c.reshape(-1).astype(jnp.float32),
+                 (0, nb * block - d)).reshape(nb, block)
+    q, scales = block_quantize_ref(cb, bits)
+    c_hat = block_dequantize_ref(q, scales, bits=bits,
+                                 cols=block).reshape(-1)[:d].reshape(shape)
+    g_new = (g.astype(jnp.float32) + c_hat).astype(g.dtype)
+    return v_new, g_new, q, scales
+
+
 def block_quantize_ref(x: jax.Array, bits: int
                        ) -> Tuple[jax.Array, jax.Array]:
     """Per-row absmax quantization of a (rows, cols) array — each row is one

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.quantize import _row_tiles
+
 BISECT_ITERS = 26
 
 
@@ -53,9 +55,7 @@ def block_topk(x: jax.Array, *, block: int = 1024, k: int = 16,
     shape, d = x.shape, x.size
     nb = -(-d // block)
     xb = jnp.pad(x.reshape(-1), (0, nb * block - d)).reshape(nb, block)
-    rt = min(rows_per_tile, nb)
-    while nb % rt:
-        rt -= 1
+    rt = _row_tiles(nb, block, rows_per_tile)
 
     out = pl.pallas_call(
         functools.partial(_topk_kernel, k=k),

@@ -67,6 +67,11 @@ def _check_group_plans(config, schedule, method, eta) -> None:
             raise ValueError(
                 f"group {grp.pattern!r}: carrier='fused' would silently run "
                 f"the UNFUSED dense plan: {reason}")
+        if grp.carrier in ("fused_quant8", "fused_quant4") \
+                and plan != "fused_wire":
+            raise ValueError(
+                f"group {grp.pattern!r}: carrier={grp.carrier!r} would "
+                f"silently run a DEGRADED plan ({plan!r}): {reason}")
         if grp.carrier != "dense" and plan == "dense":
             _warn_degraded(config,
                            f"group {grp.pattern!r} carrier {grp.carrier}",
@@ -89,7 +94,7 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
                       method: Optional[ef_lib.Method] = None,
                       down_carrier: str = "dense",
                       down_compressor: Optional[comp_lib.Compressor] = None,
-                      schedule=None) -> dist.EFConfig:
+                      schedule=None, overlap: bool = False) -> dist.EFConfig:
     """EFConfig assembly + the authoritative carrier-plan checks. Pass a
     prebuilt ``method`` (launch/session.py builds one from the RunSpec,
     including method_kw/compressor_kw) to skip the name-based construction
@@ -129,6 +134,13 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
             f"{reason}. Pick --carrier dense or sparse for "
             f"method={method.name!r} "
             f"compressor={type(method.compressor).__name__!r}.")
+    if carrier in ("fused_quant8", "fused_quant4") \
+            and exec_plan != "fused_wire" and schedule is None:
+        raise ValueError(
+            f"--carrier {carrier} would silently run a DEGRADED plan "
+            f"({exec_plan!r}): {reason}. Pick --carrier quant8 or quant4 "
+            f"(the unfused quantized wire) for method={method.name!r} "
+            f"compressor={type(method.compressor).__name__!r}.")
     if carrier != "dense" and exec_plan == "dense" and schedule is None:
         _warn_degraded(config_key, f"--carrier {carrier}", reason)
     # downlink (DESIGN.md §8): a fused downlink is a hard misconfiguration
@@ -157,7 +169,8 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
         c_ax = (c_ax,)
     return dist.EFConfig(method=method, carrier=carrier,
                          data_axes=tuple(c_ax), down_carrier=down_carrier,
-                         down_compressor=down_compressor, schedule=schedule)
+                         down_compressor=down_compressor, schedule=schedule,
+                         overlap=overlap)
 
 
 def _replicated(mesh, x):

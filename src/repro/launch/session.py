@@ -182,7 +182,7 @@ def ef_config(spec: spec_lib.RunSpec, mesh, plan: sh.ShardPlan
         ratio=spec.ratio, eta=spec.eta, carrier=spec.carrier,
         method=make_method(spec), down_carrier=spec.downlink_carrier,
         down_compressor=make_down_compressor(spec),
-        schedule=make_schedule(spec))
+        schedule=make_schedule(spec), overlap=spec.overlap)
 
 
 # ---------------------------------------------------------------------------

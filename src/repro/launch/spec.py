@@ -82,7 +82,8 @@ COMPRESSORS = frozenset({
     "identity", "topk", "randk", "block_topk", "hard_threshold", "natural",
     "rank1", "block_quant",
 })
-CARRIERS = frozenset({"dense", "sparse", "fused", "quant8", "quant4"})
+CARRIERS = frozenset({"dense", "sparse", "fused", "quant8", "quant4",
+                      "fused_quant8", "fused_quant4"})
 # the downlink broadcast has no fused path (the fused kernel IS the uplink
 # client update) — naming it is a construction error, mirroring the carrier's
 # own plan_down_with_reason degradation
@@ -141,14 +142,17 @@ FUSED_METHODS = frozenset({"ef21_sgdm", "ef21_sgd"})
 FUSED_COMPRESSORS = frozenset({"block_topk"})
 
 
-def plan_preview(method: str, compressor: str, carrier: str
-                 ) -> Tuple[str, str]:
+def plan_preview(method: str, compressor: str, carrier: str,
+                 block: Optional[int] = None) -> Tuple[str, str]:
     """Pure-python mirror of ``Carrier.plan_with_reason`` (core/carriers.py)
-    by name: (plan, reason) where plan ∈ {'dense','wire','fused'} and reason
-    is non-empty iff the carrier degraded to the always-correct dense plan.
-    η is always a static float in a RunSpec, so the fused carrier's
-    traced-η degradation can never trigger here. The plan (and reason
-    emptiness) is asserted equal to the real carriers over the whole
+    by name: (plan, reason) where plan ∈ {'dense','wire','fused',
+    'fused_wire'} and reason is non-empty iff the carrier degraded to a
+    less-fused plan (dense for sparse/quant/fused; the unfused quantized
+    wire for fused_quant). η is always a static float in a RunSpec, so the
+    traced-η degradations can never trigger here. ``block`` is the BlockTopK
+    block width when the spec sets one (fused_quant4's uint4 packing needs
+    it even; None = the even default). The plan (and reason emptiness) is
+    asserted equal to the real carriers over the whole
     (method × compressor × carrier) grid in tests/test_spec.py."""
     if carrier == "dense":
         return "dense", ""
@@ -170,11 +174,26 @@ def plan_preview(method: str, compressor: str, carrier: str
             return "dense", ("the fused kernel compresses with BlockTopK "
                              f"only, not {compressor!r}")
         return "fused", ""
-    # quant8 / quant4
+    # quant8 / quant4 / fused_quant8 / fused_quant4
     if compressor in NEEDS_RNG:
         return "dense", (
             f"compressor {compressor!r} draws randomness inside encode; the "
             "quantized wire ships deterministic compressors only")
+    if carrier in ("fused_quant8", "fused_quant4"):
+        if method not in FUSED_METHODS:
+            return "wire", (
+                "the fused wire kernel implements the EF21-SGD(M) client "
+                f"chain only, not {method!r}; running the unfused quantized "
+                "wire")
+        if compressor not in FUSED_COMPRESSORS:
+            return "wire", (
+                "the fused wire kernel compresses with BlockTopK only, not "
+                f"{compressor!r}; running the unfused quantized wire")
+        if carrier == "fused_quant4" and block is not None and block % 2:
+            return "wire", (
+                "uint4 packing needs an even BlockTopK block; running the "
+                "unfused quantized wire")
+        return "fused_wire", ""
     return "wire", ""
 
 
@@ -308,8 +327,11 @@ def schedule_preview(spec: "RunSpec") -> List[Dict[str, Any]]:
     ``Session.schedule_table()``."""
     rows = []
     for g in resolved_groups(spec):
+        blk = g["compressor_kw"].get("block") \
+            if isinstance(g.get("compressor_kw"), dict) else None
         plan, reason = plan_preview(spec.method, g["compressor"],
-                                    g["carrier"])
+                                    g["carrier"],
+                                    blk if isinstance(blk, int) else None)
         dplan, dreason = downlink_plan_preview(g["compressor"],
                                                g["downlink_carrier"])
         rows.append({**g, "plan": plan, "plan_reason": reason,
@@ -374,6 +396,11 @@ class RunSpec:
     # default from the spec (resolved_groups); the --schedule flag grammar
     # is 'pattern=carrier[:ratio][@compressor],…' (parse_schedule_flag).
     groups: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    # comm/compute overlap (DESIGN.md §10): gather-wire aggregations on the
+    # shard_map runtime transport their all-gather as a ppermute ring and
+    # decode each chunk while the next is in flight. Bit-identical to the
+    # blocking anchor; a no-op for all-reduce wires and the vmap runtimes.
+    overlap: bool = False
     method_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
     compressor_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -476,6 +503,14 @@ class RunSpec:
                     "carrier='fused' would silently run the UNFUSED dense "
                     f"plan: {reason}. Pick carrier='dense' or 'sparse' for "
                     f"method={self.method!r} compressor={self.compressor!r}")
+            if self.carrier in ("fused_quant8", "fused_quant4") \
+                    and plan != "fused_wire":
+                errs.append(
+                    f"carrier={self.carrier!r} would silently run a "
+                    f"DEGRADED plan ({plan!r}): {reason}. Pick "
+                    "carrier='quant8'/'quant4' (the unfused quantized wire) "
+                    f"for method={self.method!r} "
+                    f"compressor={self.compressor!r}")
         if errs:
             raise ValueError("invalid RunSpec:\n  - " + "\n  - ".join(errs))
 
@@ -545,11 +580,19 @@ class RunSpec:
             # the fused-misconfig hard error, per group (mirrors the
             # authoritative per-group check in launch/build.py)
             if self.method in METHODS:
-                plan, reason = plan_preview(self.method, comp, carrier)
+                blk = kw.get("block") if isinstance(kw, dict) else None
+                plan, reason = plan_preview(
+                    self.method, comp, carrier,
+                    blk if isinstance(blk, int) else None)
                 if carrier == "fused" and plan != "fused":
                     errs.append(
                         f"groups[{i}] ({pat!r}): carrier='fused' would "
                         f"silently run the UNFUSED dense plan: {reason}")
+                if carrier in ("fused_quant8", "fused_quant4") \
+                        and plan != "fused_wire":
+                    errs.append(
+                        f"groups[{i}] ({pat!r}): carrier={carrier!r} would "
+                        f"silently run a DEGRADED plan ({plan!r}): {reason}")
         # reported alongside any per-entry errors (one fix-and-rerun pass,
         # like the authoritative CompressionSchedule.__post_init__)
         if isinstance(self.groups[-1], dict) \
@@ -562,7 +605,10 @@ class RunSpec:
     def plan(self) -> Tuple[str, str]:
         """(execution plan, degradation reason) for this spec's carrier —
         see plan_preview."""
-        return plan_preview(self.method, self.compressor, self.carrier)
+        block = self.compressor_kw.get("block") \
+            if isinstance(self.compressor_kw, dict) else None
+        return plan_preview(self.method, self.compressor, self.carrier,
+                            block if isinstance(block, int) else None)
 
     def downlink_plan(self) -> Tuple[str, str]:
         """(execution plan, degradation reason) for the downlink broadcast —
@@ -724,6 +770,7 @@ _FLAGS: List[Tuple[str, str, str]] = [
     ("--downlink-carrier", "downlink_carrier", "str"),
     ("--downlink-ratio", "downlink_ratio", "float"),
     ("--schedule", "groups", "schedule"),
+    ("--overlap", "overlap", "bool"),
     ("--method-kw", "method_kw", "json"),
     ("--compressor-kw", "compressor_kw", "json"),
     ("--tp-pad-heads", "tp_pad_heads", "int"),
@@ -741,7 +788,12 @@ _FLAG_HELP = {
     "--shape": "named production InputShape for lower()/dryrun",
     "--carrier": "wire carrier for the EF sync (core/carriers.py): dense "
                  "all-reduce, sparse (values,indices) all-gather, the fused "
-                 "Pallas client update, or block-quantized wires",
+                 "Pallas client update, block-quantized wires, or the "
+                 "one-launch fused quantized wires (fused_quant8/4)",
+    "--overlap": "comm/compute overlap (DESIGN.md §10): ring-transport "
+                 "gather-wire aggregations on the shard_map runtime, "
+                 "decoding each chunk while the next is in flight; "
+                 "bit-identical to the blocking anchor",
     "--downlink-carrier": "wire carrier for the server → client broadcast "
                           "(DESIGN.md §8): 'dense' keeps the implicit dense "
                           "f32 broadcast; sparse/quant8/quant4 add the EF21 "
@@ -846,6 +898,13 @@ GOLDEN_SPECS: Dict[str, Dict[str, Any]] = {
                             "ratio": 0.02, "downlink_carrier": "quant4",
                             "downlink_ratio": 0.05},
                        ]},
+    # the one-launch fused quantized wire with comm/compute overlap
+    # (DESIGN.md §10): the mega-kernel uplink on a production mesh
+    "fused_quant8_overlap": {"carrier": "fused_quant8", "mesh": "pod",
+                             "shape": "train_4k", "eta": 0.2,
+                             "overlap": True,
+                             "compressor_kw": {"block": 1024,
+                                               "k_per_block": 16}},
 }
 
 

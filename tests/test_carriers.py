@@ -110,13 +110,20 @@ def test_every_method_carrier_pair_roundtrips_or_reports_why():
     plan_reason explaining the degradation (launch/build.py warns with it,
     launch/train.py prints it)."""
     comp = C.BlockTopK(block=8, k_per_block=3)
+    # each carrier's native (most-fused) plan: a reason is non-empty iff the
+    # executed plan is anything less — dense for most carriers; fused_quant
+    # additionally reports its fall-back to the unfused quantized 'wire'
+    native = {"dense": "dense", "sparse": "wire", "fused": "fused",
+              "quant8": "wire", "quant4": "wire",
+              "fused_quant8": "fused_wire", "fused_quant4": "fused_wire"}
+    assert set(native) == set(carrier_lib.REGISTRY)
     for m_name in ef.REGISTRY:
         method = ef.make(m_name, compressor=comp)
         for c_name in carrier_lib.REGISTRY:
             car = carrier_lib.make(c_name)
             plan, reason = car.plan_with_reason(method)
             assert plan == car.plan(method)
-            if plan == "dense" and c_name != "dense":
+            if plan != native[c_name]:
                 assert reason, (m_name, c_name)
             else:
                 assert reason == "", (m_name, c_name, reason)

@@ -64,6 +64,46 @@ def test_ruff_clean_when_available():
     assert out.returncode == 0, out.stdout + out.stderr
 
 
+def test_checked_in_bench_ledgers_validate():
+    """The perf ledgers at the repo root (DESIGN.md §10) are schema-valid,
+    and the checked-in fused-round baseline records the acceptance claim: a
+    full-geometry (non-tiny) run with the fused round ≥2× the unfused
+    step."""
+    import json
+    sys.path.insert(0, ROOT)
+    from benchmarks.common import validate_bench
+    for name in ("BENCH_kernels.json", "BENCH_fused_round.json"):
+        path = os.path.join(ROOT, name)
+        assert os.path.exists(path), f"{name} missing from the repo root"
+        with open(path) as f:
+            payload = json.load(f)
+        errs = validate_bench(payload)
+        assert not errs, f"{name} malformed: {errs}"
+    with open(os.path.join(ROOT, "BENCH_fused_round.json")) as f:
+        fused = json.load(f)
+    full = [r for r in fused["runs"] if not r["geometry"].get("tiny")]
+    assert full, "no full-geometry fused_round run recorded"
+    speedups = [r["speedup_vs_ref"]["fused_round_vs_unfused_step"]
+                for r in full if "speedup_vs_ref" in r]
+    assert speedups and max(speedups) >= 2.0, (
+        f"fused round speedup below the 2x acceptance bar: {speedups}")
+
+
+def test_ci_runs_bench_smoke_and_ledger_validation():
+    """ci.yml keeps the bench-smoke step: tiny kernel_bench +
+    fused_round_bench runs and the bench/v1 schema gate over both
+    checked-in ledgers."""
+    with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    assert "kernel_bench --tiny" in ci, "CI dropped the tiny kernel bench"
+    assert "fused_round_bench --tiny" in ci, (
+        "CI dropped the tiny fused-round bench")
+    assert "benchmarks.common --validate" in ci, (
+        "CI no longer validates the BENCH ledgers")
+    for name in ("BENCH_kernels.json", "BENCH_fused_round.json"):
+        assert name in ci, f"CI ledger gate no longer covers {name}"
+
+
 def test_ci_workflow_keeps_tier_gate_and_timing_report():
     """The CI yaml must keep (a) the tier-1 PR gate and (b) the
     --durations=15 timing report that makes slow-test creep visible in every

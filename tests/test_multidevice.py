@@ -30,7 +30,8 @@ SCRIPT = textwrap.dedent("""
     sspecs = {"clients": {k: {"w": P("data", None, None)} for k in ("v", "g")},
               "server": {"w": P(None, None)}}
 
-    for carrier in ("dense", "sparse", "fused", "quant8", "quant4"):
+    for carrier in ("dense", "sparse", "fused", "quant8", "quant4",
+                    "fused_quant8", "fused_quant4"):
         efc = D.EFConfig(method=method, carrier=carrier, data_axes=("data",))
         st = D.init_ef_state(efc, params, dp, init_grads=grads_t)
         g_ref, st_ref = D.ef_round(efc, grads_t, st, None)

@@ -132,6 +132,9 @@ def _supported_grid():
             for ca in sorted(spec_lib.CARRIERS):
                 if ca == "fused" and spec_lib.plan_preview(m, c, ca)[0] != "fused":
                     continue        # fused misconfig is a construction error
+                if ca in ("fused_quant8", "fused_quant4") \
+                        and spec_lib.plan_preview(m, c, ca)[0] != "fused_wire":
+                    continue        # degraded fused_quant, same hard error
                 yield m, c, ca
 
 
