@@ -222,6 +222,41 @@ def _emit_ledger(rows: List[Dict], in_path: str) -> Optional[str]:
         metrics=metrics, speedup_vs_ref=speedups or None))
 
 
+def tiny_record() -> Dict:
+    """A synthetic dry-run record for --tiny: the smallest arch on the
+    train shape with analytically self-consistent terms (flops = the MODEL
+    estimate so useful_ratio = 1.0, memory = the f32 param+EF state stream,
+    collectives = one dense all-reduce of the grads). Exercises the full
+    analyze → ledger path without needing results/dryrun_baseline_1pod.json
+    — CI checks the emitted BENCH_roofline.json against the bench/v1
+    schema alongside the kernel and fused-round ledgers."""
+    from repro.launch import mesh as mesh_lib
+    arch, shape_name = "smollm-360m", "train_4k"
+    rec = {"status": "OK", "arch": arch, "shape": shape_name,
+           "tag": "tiny-synthetic", "multi_pod": False,
+           "n_devices": mesh_lib.PROD_MODEL, "flops": 1.0,
+           "collective_bytes": 0.0, "memory": {}}
+    rec["flops"] = model_flops_per_device(rec)
+    d_per_dev = cb.get(arch).active_param_count() / mesh_lib.PROD_MODEL
+    # params + grads + EF (vᵢ, gᵢ) + opt state streamed once, f32
+    rec["memory"] = {"argument_bytes": 5 * d_per_dev * 4.0,
+                     "output_bytes": 3 * d_per_dev * 4.0,
+                     "temp_bytes": 2 * d_per_dev * 4.0}
+    rec["collective_bytes"] = d_per_dev * 4.0
+    return rec
+
+
+def run_tiny() -> List[Dict]:
+    rows = [analyze_record(tiny_record())]
+    path = _emit_ledger(rows, "synthetic:--tiny")
+    for r in rows:
+        print(f"{r['arch']:18s} {r['shape']:12s} dom={r['dominant']:10s} "
+              f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
+              f"x={r['collective_s']:.2e} useful={r['useful_ratio']:.2f}")
+    print(f"ledger: {path}")
+    return rows
+
+
 def run(in_path: str = "results/dryrun_baseline_1pod.json",
         out_prefix: str = "results/roofline_baseline") -> List[Dict]:
     with open(in_path) as f:
@@ -255,5 +290,12 @@ if __name__ == "__main__":
                     default="results/dryrun_baseline_1pod.json")
     ap.add_argument("--out", dest="out_prefix",
                     default="results/roofline_baseline")
+    ap.add_argument("--tiny", action="store_true",
+                    help="synthesize one self-consistent record and emit "
+                         "the BENCH_roofline.json ledger (no dry-run JSON "
+                         "needed — the CI bench-smoke path)")
     args = ap.parse_args()
-    run(args.in_path, args.out_prefix)
+    if args.tiny:
+        run_tiny()
+    else:
+        run(args.in_path, args.out_prefix)

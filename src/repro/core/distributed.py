@@ -53,6 +53,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import carriers as carrier_lib
 from repro.core import compressors as comp_lib
 from repro.core import ef as ef_lib
+from repro.core import participation as part_lib
 from repro.core import schedule as sched_lib
 
 PyTree = Any
@@ -85,6 +86,14 @@ class EFConfig:
     # blocking anchor (the ring reproduces all_gather's axis order exactly);
     # a no-op for all-reduce wires and for the vmap runtimes (no collectives)
     overlap: bool = False
+    # partial participation (DESIGN.md §11): mode='sampled' runs the masked
+    # cohort path — a seeded per-round mask zeroes non-sampled wires before
+    # the aggregation collective and freezes their whole EF state tree (the
+    # "EF21 with Bells & Whistles" rule). None (or mode='full') runs the
+    # legacy full-cohort path untouched; a sampled fraction=1.0 cohort is
+    # bit-identical to it (tests/test_participation.py). mode='async' never
+    # runs here — core/participation.py::run_async is the async simulator.
+    participation: Optional[part_lib.Participation] = None
 
     @property
     def has_downlink(self) -> bool:
@@ -156,9 +165,30 @@ def init_ef_state(efc: EFConfig, params: PyTree, dp: int,
 # one synchronization round
 # ---------------------------------------------------------------------------
 
+def _participation_mask(efc: EFConfig, n: int, step):
+    """The round's cohort mask for a sampled-participation config, or None
+    on the legacy full path. Hard-errors on async (a barrier runtime cannot
+    honor arrival order) and on a missing step (the cohort is a pure
+    function of (seed, round) so resume replays it)."""
+    part = efc.participation
+    if part is None or part.mode == "full":
+        return None
+    if part.mode == "async":
+        raise ValueError(
+            "participation mode 'async' does not run on the synchronous "
+            "runtimes (every round is a barrier); drive the event-driven "
+            "simulator instead: repro.core.participation.run_async")
+    if step is None:
+        raise ValueError(
+            "sampled participation derives the round cohort from the step "
+            "index; pass step= into ef_round / ef_round_sharded")
+    return part_lib.cohort_mask(part, n, step)
+
+
 def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
                      rng: Optional[jax.Array], mesh, grads_specs: PyTree,
-                     state_specs: Dict, eta: Optional[float] = None
+                     state_specs: Dict, eta: Optional[float] = None,
+                     step: Optional[jax.Array] = None
                      ) -> Tuple[PyTree, Dict]:
     """shard_map EF sync: each device runs its client's update on its LOCAL param
     shard (per-shard Block-TopK — contractive with the same α, DESIGN.md §4), then
@@ -187,23 +217,46 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
     down_carrier = carrier_lib.make(efc.down_carrier)
     down_comp = efc.down_comp()
 
-    def client_leg(grads_l, clients_l, rng_l):
+    n_total = 1
+    for a in c_axes:
+        n_total *= mesh.shape[a]
+    mask_full = _participation_mask(efc, n_total, step)
+    m_cohort = efc.participation.cohort_size(n_total) \
+        if mask_full is not None else n_total
+
+    def client_index():
+        # this device's global client index over the client axes
+        idx = 0
+        for a in c_axes:
+            idx = idx * carrier_lib.axis_size(a) + jax.lax.axis_index(a)
+        return idx
+
+    def client_leg(grads_l, clients_l, rng_l, mask_l=None):
         sq = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
         ex = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
         g, cl = sq(grads_l), sq(clients_l)        # strip the client dim (local=1)
+        # this client's scalar cohort entry: zero-masked wires make the
+        # collective fold only the sampled cohort (C(0) = 0 exactly)
+        mask_m = None if mask_l is None else mask_l[client_index()]
 
         if sched is not None:
             # grouped engine: one wire (and one aggregation collective) per
             # group, each on its group's carrier/compressor
             msg_mean, new_cl = sched_lib.round_local(
                 sched, method, g, cl, c_axes, rng_l, eta,
-                overlap=efc.overlap)
-            return ex(new_cl), msg_mean
-        if plan == "fused":
+                overlap=efc.overlap, mask=mask_m)
+        elif plan == "fused":
             c_tree, new_cl = carrier.fused_update(method, g, cl, eta=eta)
+            if mask_m is not None:
+                c_tree = part_lib.apply_mask(mask_m, c_tree)
             msg_mean = jax.tree_util.tree_map(
                 lambda c: jax.lax.pmean(c, c_axes), c_tree)
         elif plan == "fused_wire":
+            if mask_m is not None:
+                # unreachable behind the spec/build construction errors: the
+                # mega-kernel aggregates inside, no per-client wire to mask
+                raise ValueError(
+                    "sampled participation cannot run the fused_wire plan")
             # one mega-kernel launch per leaf: update + select + quantize +
             # EF-invariant integration; the aggregated mean comes back with
             # the new client state (aggregation needs the wire)
@@ -211,6 +264,8 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
                 method, g, cl, eta=eta, axes=c_axes)
         elif plan == "wire":
             deltas, ctx = method.pre_compress(g, cl, eta=eta)
+            if mask_m is not None:
+                deltas = part_lib.apply_mask(mask_m, deltas)
             c_tree, msg_mean = carrier_lib.wire_round_local(
                 carrier, method.compressor, deltas, c_axes, rng_l)
             _, new_cl = method.post_compress(c_tree, ctx)
@@ -220,33 +275,46 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
             # through method.update so methods without a two-phase API
             # (neolithic, ideal) also run on the sharded path
             msg, new_cl = method.update(g, cl, rng_l, eta=eta)
+            if mask_m is not None:
+                msg = part_lib.apply_mask(mask_m, msg)
             msg_mean = jax.tree_util.tree_map(
                 lambda m: jax.lax.pmean(m, c_axes), msg)
+        if mask_m is not None:
+            # Bells & Whistles: delta methods fold (1/n)Σ_S as-is, absolute
+            # methods rescale to the cohort mean; non-sampled clients keep
+            # their ENTIRE state tree (gᵢ, momentum, …) bit-frozen
+            msg_mean = part_lib.rescale_message(method, msg_mean, n_total,
+                                                m_cohort)
+            new_cl = part_lib.freeze_tree(mask_m, new_cl, cl)
         return ex(new_cl), msg_mean
 
     def fold_client(rng_l):
         # local client index for rng decorrelation
         if rng_l is None:
             return None
-        idx = 0
-        for a in c_axes:
-            idx = idx * carrier_lib.axis_size(a) + jax.lax.axis_index(a)
-        return jax.random.fold_in(rng_l, idx)
+        return jax.random.fold_in(rng_l, client_index())
 
     server_specs = state_specs["server"]
+    # the cohort mask rides into shard_map as one replicated (n,) array —
+    # arity is unchanged on the legacy path, keeping its jaxpr byte-stable
+    extra_args = () if mask_full is None else (mask_full,)
+    extra_specs = () if mask_full is None else (P(),)
 
     if efc.has_downlink:
-        def body(grads_l, clients_l, server_l, h_l, rng_l):
+        def body(grads_l, clients_l, server_l, h_l, rng_l, *mask_rest):
             # the downlink key comes off the round rng BEFORE the per-client
             # fold: the broadcast must be one identical message everywhere
             r_down = None if rng_l is None \
                 else jax.random.fold_in(rng_l, DOWNLINK_FOLD)
-            new_cl, msg_mean = client_leg(grads_l, clients_l,
-                                          fold_client(rng_l))
+            new_cl, msg_mean = client_leg(
+                grads_l, clients_l, fold_client(rng_l),
+                mask_rest[0] if mask_rest else None)
             new_server = ef_lib.server_step(method, server_l, msg_mean)
             # every device runs the same encode of the replicated-in-value
             # new_server (that IS the broadcast — the encoded wire is what
-            # travels) and the same decode its client would run
+            # travels) and the same decode its client would run. Sampling
+            # composes for free: h is server-side, so a client absent for k
+            # rounds still integrated every broadcast and re-enters in sync
             if sched is not None:
                 g_est, h_new = sched_lib.downlink_round_grouped(
                     sched, new_server, h_l, r_down)
@@ -259,34 +327,37 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
         fn = shard_map(
             body, mesh=mesh,
             in_specs=(grads_specs, state_specs["clients"], server_specs,
-                      h_specs, P()),
+                      h_specs, P()) + extra_specs,
             out_specs=(state_specs["clients"], server_specs, h_specs,
                        server_specs),
             check_rep=False)
         new_clients, new_server, h_new, g_est = fn(
             grads, ef_state["clients"], ef_state["server"], ef_state["h"],
-            rng)
+            rng, *extra_args)
         return g_est, {"clients": new_clients, "server": new_server,
                        "h": h_new}
 
-    def body(grads_l, clients_l, server_l, rng_l):
-        new_cl, msg_mean = client_leg(grads_l, clients_l, fold_client(rng_l))
+    def body(grads_l, clients_l, server_l, rng_l, *mask_rest):
+        new_cl, msg_mean = client_leg(
+            grads_l, clients_l, fold_client(rng_l),
+            mask_rest[0] if mask_rest else None)
         new_server = ef_lib.server_step(method, server_l, msg_mean)
         return new_cl, new_server, msg_mean
 
     out_specs = (state_specs["clients"], server_specs, server_specs)
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(grads_specs, state_specs["clients"], server_specs, P()),
+        in_specs=(grads_specs, state_specs["clients"], server_specs, P())
+        + extra_specs,
         out_specs=out_specs, check_rep=False)
     new_clients, new_server, msg_mean = fn(
-        grads, ef_state["clients"], ef_state["server"], rng)
+        grads, ef_state["clients"], ef_state["server"], rng, *extra_args)
     return new_server, {"clients": new_clients, "server": new_server}
 
 
 def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
-             rng: Optional[jax.Array], eta: Optional[float] = None
-             ) -> Tuple[PyTree, Dict]:
+             rng: Optional[jax.Array], eta: Optional[float] = None,
+             step: Optional[jax.Array] = None) -> Tuple[PyTree, Dict]:
     """vmap EF sync (single-device tests, exact global-TopK semantics).
     grads: per-client (dp leading). Returns (gᵗ⁺¹ estimate, new ef_state)."""
     method, dp = efc.method, jax.tree_util.tree_leaves(grads)[0].shape[0]
@@ -294,20 +365,32 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
     carrier = carrier_lib.make(efc.carrier)
     plan = carrier.plan(method, eta)
     rngs = jax.random.split(rng, dp) if rng is not None else None
+    mask = _participation_mask(efc, dp, step)
 
     if efc.schedule is not None:
         msg_mean, new_clients = sched_lib.round_batched(
-            efc.schedule, method, grads, clients, dp, rng, eta)
+            efc.schedule, method, grads, clients, dp, rng, eta, mask=mask)
     elif plan == "fused":
         c_tree, new_clients = carrier.fused_update(
             method, grads, clients, eta=eta, batched=True)
+        if mask is not None:
+            c_tree = part_lib.apply_mask(mask, c_tree)
         msg_mean = jax.tree_util.tree_map(lambda c: c.mean(0), c_tree)
     elif plan == "fused_wire":
+        if mask is not None:
+            # unreachable behind the spec/build construction errors: the
+            # mega-kernel aggregates inside, no per-client wire to mask
+            raise ValueError(
+                "sampled participation cannot run the fused_wire plan")
         msg_mean, new_clients = carrier.fused_wire_round(
             method, grads, clients, eta=eta, batched=True, dp=dp)
     elif plan == "wire":
         deltas, ctxs = jax.vmap(
             lambda g, s: method.pre_compress(g, s, eta=eta))(grads, clients)
+        if mask is not None:
+            # zero-masked wires: C(0) = 0 exactly, so the carrier's own
+            # aggregation folds only the sampled cohort
+            deltas = part_lib.apply_mask(mask, deltas)
         c_tree, msg_mean = carrier_lib.wire_round_batched(
             carrier, method.compressor, deltas, dp)
         _, new_clients = jax.vmap(method.post_compress)(c_tree, ctxs)
@@ -319,8 +402,17 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
                 grads, clients)
         else:
             msgs, new_clients = jax.vmap(upd)(grads, clients, rngs)
+        if mask is not None:
+            msgs = part_lib.apply_mask(mask, msgs)
         msg_mean = jax.tree_util.tree_map(lambda m: m.mean(0), msgs)
 
+    if mask is not None:
+        # Bells & Whistles: delta methods fold (1/n)Σ_S as-is, absolute
+        # methods rescale to the cohort mean; non-sampled clients keep
+        # their ENTIRE state tree (gᵢ, momentum, …) bit-frozen
+        msg_mean = part_lib.rescale_message(
+            method, msg_mean, dp, efc.participation.cohort_size(dp))
+        new_clients = part_lib.freeze_tree(mask, new_clients, clients)
     new_server = ef_lib.server_step(method, server, msg_mean)
     new_state = {"clients": new_clients, "server": new_server}
     if not efc.has_downlink:
@@ -356,9 +448,10 @@ def make_train_step(loss_fn: Callable, efc: EFConfig, optimizer, dp: int,
         if mesh is not None and grads_specs is not None:
             g_est, ef_state = ef_round_sharded(
                 efc, grads, ef_state, r_comp, mesh, grads_specs, state_specs,
-                eta=eta)
+                eta=eta, step=step)
         else:
-            g_est, ef_state = ef_round(efc, grads, ef_state, r_comp, eta=eta)
+            g_est, ef_state = ef_round(efc, grads, ef_state, r_comp, eta=eta,
+                                       step=step)
         updates, opt_state = optimizer.update(g_est, opt_state, params, step)
         params = apply_updates(params, updates)
         metrics = {"loss": loss,

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import carriers as carrier_lib
 from repro.core import compressors as comp_lib
 from repro.core import ef as ef_lib
+from repro.core import participation as part_lib
 
 PyTree = Any
 
@@ -340,25 +341,36 @@ def _grouped_round(schedule: CompressionSchedule, method, grads: PyTree,
 
 
 def round_batched(schedule: CompressionSchedule, method, grads: PyTree,
-                  states: Dict, dp: int, rng, eta=None
+                  states: Dict, dp: int, rng, eta=None, mask=None
                   ) -> Tuple[PyTree, Dict]:
     """Per-group client legs with clients on a leading axis (the vmap
     runtimes). Each group independently picks its carrier's plan and builds
-    its own wire; results merge back onto the full treedef. Returns
-    ``(msg_mean, new_states)``."""
+    its own wire; results merge back onto the full treedef. ``mask`` is an
+    optional (dp,) cohort mask (DESIGN.md §11): each group zeroes the
+    non-sampled clients' contribution before its own aggregation — the
+    freeze/rescale postlude stays at the CALLER (one method/mode across all
+    groups). Returns ``(msg_mean, new_states)``."""
     def leg(m_g, carrier, plan, grads_g, states_g, r_g):
         if plan == "fused":
             c_tree, new_st = carrier.fused_update(
                 m_g, grads_g, states_g, eta=eta, batched=True)
+            if mask is not None:
+                c_tree = part_lib.apply_mask(mask, c_tree)
             return jax.tree_util.tree_map(lambda c: c.mean(0),
                                           c_tree), new_st
         if plan == "fused_wire":
+            if mask is not None:
+                # unreachable behind the spec/build construction errors
+                raise ValueError("sampled participation cannot run the "
+                                 "fused_wire plan")
             return carrier.fused_wire_round(
                 m_g, grads_g, states_g, eta=eta, batched=True, dp=dp)
         if plan == "wire":
             deltas, ctxs = jax.vmap(
                 lambda g, s, m=m_g: m.pre_compress(g, s, eta=eta))(
                 grads_g, states_g)
+            if mask is not None:
+                deltas = part_lib.apply_mask(mask, deltas)
             c_tree, agg_g = carrier_lib.wire_round_batched(
                 carrier, m_g.compressor, deltas, dp)
             _, new_st = jax.vmap(m_g.post_compress)(c_tree, ctxs)
@@ -372,6 +384,8 @@ def round_batched(schedule: CompressionSchedule, method, grads: PyTree,
             msgs, new_st = jax.vmap(
                 lambda g, s, r, m=m_g: m.update(g, s, r, eta=eta))(
                 grads_g, states_g, rngs)
+        if mask is not None:
+            msgs = part_lib.apply_mask(mask, msgs)
         return jax.tree_util.tree_map(lambda m: m.mean(0), msgs), new_st
 
     return _grouped_round(schedule, method, grads, states, rng, eta, leg)
@@ -379,28 +393,41 @@ def round_batched(schedule: CompressionSchedule, method, grads: PyTree,
 
 def round_local(schedule: CompressionSchedule, method, grads: PyTree,
                 states: Dict, axes: Tuple[str, ...], rng, eta=None,
-                overlap: bool = False) -> Tuple[PyTree, Dict]:
+                overlap: bool = False, mask=None) -> Tuple[PyTree, Dict]:
     """Per-group client legs with client-local leaves and explicit named-axis
     collectives (``ef_round_sharded``). ``overlap`` turns each group
     carrier's gather-wire aggregation into the ppermute ring
-    (carriers.ring_all_gather — bit-identical transport). Returns
+    (carriers.ring_all_gather — bit-identical transport). ``mask`` is this
+    device's SCALAR cohort membership (DESIGN.md §11): each group zeroes a
+    non-sampled device's contribution before its collective — the
+    freeze/rescale postlude stays at the CALLER. Returns
     ``(msg_mean, new_states)``."""
     def leg(m_g, carrier, plan, grads_g, states_g, r_g):
         if plan == "fused":
             c_tree, new_st = carrier.fused_update(
                 m_g, grads_g, states_g, eta=eta)
+            if mask is not None:
+                c_tree = part_lib.apply_mask(mask, c_tree)
             return jax.tree_util.tree_map(
                 lambda c: jax.lax.pmean(c, axes), c_tree), new_st
         if plan == "fused_wire":
+            if mask is not None:
+                # unreachable behind the spec/build construction errors
+                raise ValueError("sampled participation cannot run the "
+                                 "fused_wire plan")
             return carrier.fused_wire_round(
                 m_g, grads_g, states_g, eta=eta, axes=axes)
         if plan == "wire":
             deltas, ctx = m_g.pre_compress(grads_g, states_g, eta=eta)
+            if mask is not None:
+                deltas = part_lib.apply_mask(mask, deltas)
             c_tree, agg_g = carrier_lib.wire_round_local(
                 carrier, m_g.compressor, deltas, axes, r_g)
             _, new_st = m_g.post_compress(c_tree, ctx)
             return agg_g, new_st
         msg, new_st = m_g.update(grads_g, states_g, r_g, eta=eta)
+        if mask is not None:
+            msg = part_lib.apply_mask(mask, msg)
         return jax.tree_util.tree_map(
             lambda m: jax.lax.pmean(m, axes), msg), new_st
 

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.core import carriers as carrier_lib
 from repro.core import compressors as comp_lib
 from repro.core import ef as ef_lib
+from repro.core import participation as part_lib
 from repro.core import schedule as sched_lib
 
 PyTree = Any
@@ -55,6 +56,14 @@ class SimConfig:
     # core/schedule.py, exactly like EFConfig.schedule on the production
     # runtimes; the single-knob carrier/down_* fields above are ignored.
     schedule: Optional[sched_lib.CompressionSchedule] = None
+    # partial participation (DESIGN.md §11): mode='sampled' masks each round
+    # to a seeded cohort — non-sampled clients' wires are zeroed before the
+    # aggregation and their ENTIRE EF state (gᵢ, momentum) stays bit-frozen
+    # (the "EF21 with Bells & Whistles" rule). None / mode='full' is the
+    # legacy full-cohort loop; fraction=1.0 sampling is bit-identical to it.
+    # mode='async' never runs here — core/participation.py::run_async is the
+    # event-driven simulator.
+    participation: Optional[part_lib.Participation] = None
 
     @property
     def has_downlink(self) -> bool:
@@ -102,6 +111,15 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
     down_car = carrier_lib.make(cfg.down_carrier)
     down_comp = cfg.down_compressor if cfg.down_compressor is not None \
         else comp_lib.Identity()
+    part = cfg.participation
+    if part is not None and part.mode == "async":
+        raise ValueError(
+            "participation mode 'async' does not run on the synchronous "
+            "simulator (every scan step is a barrier); drive the "
+            "event-driven simulator instead: "
+            "repro.core.participation.run_async")
+    sampling = part is not None and part.is_sampling
+    m_cohort = part.cohort_size(cfg.n) if sampling else cfg.n
 
     def step(carry, t):
         if has_down:
@@ -137,17 +155,28 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
             return problem.stoch_grad(x_next, c, rg, cfg.batch_size)
 
         r_grads = _client_rngs(r_grad, cfg.n)
+        # cohort mask for this round (DESIGN.md §11): seeded pure in
+        # (seed, t), so kill-and-resume replays the exact cohort sequence
+        mask = part_lib.cohort_mask(part, cfg.n, t) if sampling else None
         plan = carrier.plan(method, eta_t)   # static: traced ηₜ forces 'dense'
         if cfg.schedule is not None:
             grads = jax.vmap(client_grads)(clients, r_grads)
             msg_mean, states_new = sched_lib.round_batched(
-                cfg.schedule, method, grads, states, cfg.n, r_comp, eta_t)
+                cfg.schedule, method, grads, states, cfg.n, r_comp, eta_t,
+                mask=mask)
         elif plan == "fused":
             grads = jax.vmap(client_grads)(clients, r_grads)
             c_tree, states_new = carrier.fused_update(
                 method, grads, states, eta=eta_t, batched=True)
+            if mask is not None:
+                c_tree = part_lib.apply_mask(mask, c_tree)
             msg_mean = jax.tree_util.tree_map(lambda c: c.mean(0), c_tree)
         elif plan == "fused_wire":
+            if mask is not None:
+                # unreachable behind the spec/build construction errors: the
+                # mega-kernel aggregates inside, no per-client wire to mask
+                raise ValueError(
+                    "sampled participation cannot run the fused_wire plan")
             grads = jax.vmap(client_grads)(clients, r_grads)
             msg_mean, states_new = carrier.fused_wire_round(
                 method, grads, states, eta=eta_t, batched=True, dp=cfg.n)
@@ -156,6 +185,10 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
             deltas, ctxs = jax.vmap(
                 lambda g, s: method.pre_compress(g, s, eta=eta_t))(
                 grads, states)
+            if mask is not None:
+                # zero-masked wires: C(0) = 0 exactly, the carrier's own
+                # aggregation then folds only the sampled cohort
+                deltas = part_lib.apply_mask(mask, deltas)
             c_tree, msg_mean = carrier_lib.wire_round_batched(
                 carrier, method.compressor, deltas, cfg.n)
             _, states_new = jax.vmap(method.post_compress)(c_tree, ctxs)
@@ -164,7 +197,16 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
                 return method.update(client_grads(c, rg), st, rc, eta=eta_t)
             msgs, states_new = jax.vmap(client_update)(
                 clients, states, r_grads, _client_rngs(r_comp, cfg.n))
+            if mask is not None:
+                msgs = part_lib.apply_mask(mask, msgs)
             msg_mean = jax.tree_util.tree_map(lambda m: m.mean(0), msgs)
+        if mask is not None:
+            # Bells & Whistles: delta methods fold (1/n)Σ_S as-is, absolute
+            # methods rescale to the cohort mean; non-sampled clients keep
+            # their ENTIRE state tree (gᵢ, momentum, …) bit-frozen
+            msg_mean = part_lib.rescale_message(
+                method, msg_mean, cfg.n, m_cohort)
+            states_new = part_lib.freeze_tree(mask, states_new, states)
         g_server_new = ef_lib.server_step(method, g_server, msg_mean)
 
         gn = ef_lib.tree_norm_sq(problem.full_grad(x_next))
@@ -193,6 +235,10 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
     # traced ηₜ), what went on the wire was the dense tensor — d words
     eta_static = None if cfg.time_varying else (
         cfg.eta if cfg.eta is not None else getattr(method, "eta", 1.0))
+    # Sampled participation: only the m = cohort_size(fraction·n) sampled
+    # clients upload, so the honest uplink budget is per-message words × m
+    # (DESIGN.md §11). The downlink broadcast still reaches all n links —
+    # that is how absent clients stay in sync with the server memory h.
     if cfg.schedule is not None:
         # per-group accounting (DESIGN.md §9): each group's executed wire,
         # summed over its leaves — exposed per group AND in total
@@ -200,22 +246,23 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
             cfg.schedule, method, x0, "up", eta_static)
         dn_per, dn_each = sched_lib.wire_words_tree(
             cfg.schedule, method, x0, "down", eta_static)
-        up_words, down_words = up_each * cfg.n, dn_each * cfg.n
-        coords = sched_lib.coords_tree(cfg.schedule, method, x0) * cfg.n
+        up_words, down_words = up_each * m_cohort, dn_each * cfg.n
+        coords = sched_lib.coords_tree(cfg.schedule, method, x0) * m_cohort
         group_words = {
-            "wire_words_up_per_group": tuple(w * cfg.n for w in up_per),
+            "wire_words_up_per_group": tuple(w * m_cohort for w in up_per),
             "wire_words_down_per_group": tuple(w * cfg.n for w in dn_per),
         }
     else:
         executed = cfg.carrier \
             if carrier.plan(method, eta_static) != "dense" else "dense"
-        up_words = method.coords_per_message(d_total, carrier=executed) * cfg.n
+        up_words = method.coords_per_message(
+            d_total, carrier=executed) * m_cohort
         # downlink: one broadcast message per client link; without a downlink
         # carrier the server ships the dense f32 estimate — d words per client
         down_each = carrier_lib.downlink_words(down_car, down_comp, d_total) \
             if has_down else float(d_total)
         down_words = down_each * cfg.n
-        coords = method.coords_per_message(d_total) * cfg.n
+        coords = method.coords_per_message(d_total) * m_cohort
         group_words = {}
     return {
         "grad_norm_sq": gns,

@@ -94,7 +94,8 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
                       method: Optional[ef_lib.Method] = None,
                       down_carrier: str = "dense",
                       down_compressor: Optional[comp_lib.Compressor] = None,
-                      schedule=None, overlap: bool = False) -> dist.EFConfig:
+                      schedule=None, overlap: bool = False,
+                      participation=None) -> dist.EFConfig:
     """EFConfig assembly + the authoritative carrier-plan checks. Pass a
     prebuilt ``method`` (launch/session.py builds one from the RunSpec,
     including method_kw/compressor_kw) to skip the name-based construction
@@ -120,6 +121,29 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
     config_key = (method, carrier, down_carrier, down_compressor, schedule)
     if schedule is not None:
         _check_group_plans(config_key, schedule, method, eta)
+    # partial participation (DESIGN.md §11): the authoritative checks
+    # mirroring RunSpec._validate_participation — async never builds a
+    # synchronous step, and a sampled cohort cannot ride the fused wire
+    # (the mega-kernel aggregates all clients inside; nothing to mask)
+    if participation is not None and participation.mode == "async":
+        raise ValueError(
+            "participation mode 'async' does not build a synchronous step "
+            "(every round is a barrier); drive the event-driven simulator "
+            "instead: repro.core.participation.run_async")
+    if participation is not None and participation.is_sampling:
+        fused_wire_carriers = ("fused_quant8", "fused_quant4")
+        bad = [f"carrier={carrier!r}"] \
+            if schedule is None and carrier in fused_wire_carriers else []
+        if schedule is not None:
+            bad += [f"group {g.pattern!r} carrier={g.carrier!r}"
+                    for g in schedule.groups
+                    if g.carrier in fused_wire_carriers]
+        if bad:
+            raise ValueError(
+                f"sampled participation cannot run the fused quantized wire "
+                f"({', '.join(bad)}): the mega-kernel aggregates all clients "
+                "inside, leaving no per-client wire to mask — use "
+                "carrier='quant8'/'quant4'")
     # the carrier itself is the source of truth for what it can execute; an
     # explicitly requested fused carrier that would silently degrade to the
     # unfused dense plan is a misconfiguration worth failing fast on, and any
@@ -170,7 +194,7 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
     return dist.EFConfig(method=method, carrier=carrier,
                          data_axes=tuple(c_ax), down_carrier=down_carrier,
                          down_compressor=down_compressor, schedule=schedule,
-                         overlap=overlap)
+                         overlap=overlap, participation=participation)
 
 
 def _replicated(mesh, x):

@@ -150,6 +150,21 @@ def make_schedule(spec: spec_lib.RunSpec):
     return sched_lib.CompressionSchedule(tuple(groups))
 
 
+def make_participation(spec: spec_lib.RunSpec):
+    """The Participation named by the spec, or None when the spec has no
+    explicit participation (the legacy full-cohort path — a mode='full'
+    object would be equivalent, but None keeps the legacy runtimes'
+    jaxprs byte-stable)."""
+    if not spec.participation:
+        return None
+    from repro.core import participation as part_lib
+    p = spec.participation
+    return part_lib.Participation(
+        mode=p.get("mode", "full"),
+        fraction=float(p.get("fraction", 1.0)),
+        seed=int(p.get("seed", 0)))
+
+
 def make_method(spec: spec_lib.RunSpec) -> ef_lib.Method:
     """EF method named by the spec, usable standalone (simulator examples)
     or via ``ef_config`` on the production path."""
@@ -182,7 +197,8 @@ def ef_config(spec: spec_lib.RunSpec, mesh, plan: sh.ShardPlan
         ratio=spec.ratio, eta=spec.eta, carrier=spec.carrier,
         method=make_method(spec), down_carrier=spec.downlink_carrier,
         down_compressor=make_down_compressor(spec),
-        schedule=make_schedule(spec), overlap=spec.overlap)
+        schedule=make_schedule(spec), overlap=spec.overlap,
+        participation=make_participation(spec))
 
 
 # ---------------------------------------------------------------------------

@@ -67,7 +67,14 @@ from repro.configs import base as cb
 # leaves smaller than one block a proportional K instead of the degenerate
 # full-block K, so a resumed v2 checkpoint whose model has sub-block
 # leaves continues under the corrected compression, not the old bug.
-SCHEMA_VERSION = 3
+# v4: partial participation — the ``participation`` field selects which
+# clients upload each round ({mode: full|sampled|async, fraction, seed},
+# DESIGN.md §11). v3 specs are AUTO-UPGRADED on read: an absent
+# ``participation`` IS mode='full' (every client, every round — exactly what
+# every v3 spec always executed), and the empty dict is the default, excluded
+# from the sparse spec_hash, so v3 checkpoints stay resumable. v2 chains
+# through the v3 upgrade first.
+SCHEMA_VERSION = 4
 
 # ---------------------------------------------------------------------------
 # jax-free mirrors of the jax-importing registries (sync-tested in
@@ -113,6 +120,15 @@ GROUP_KEYS = frozenset({"pattern", "carrier", "compressor", "ratio",
                         "ef_state_dtype"})
 GROUP_STATE_DTYPES = (None, "bfloat16", "float32")
 PATTERN_RESERVED = set("=,:@")
+
+# partial participation surface (mirror of core/participation.py,
+# sync-tested): the modes a spec may name and the keys one ``participation``
+# dict may carry. 'full' is the legacy every-client barrier; 'sampled' runs
+# the masked-cohort synchronous path; 'async' names the event-driven
+# simulator (core/participation.py::run_async) and is a construction error
+# on the synchronous runtimes (launch/build.py).
+PART_MODES = ("full", "sampled", "async")
+PART_KEYS = frozenset({"mode", "fraction", "seed"})
 
 
 def pattern_token_errors(pattern: str) -> List[str]:
@@ -339,6 +355,63 @@ def schedule_preview(spec: "RunSpec") -> List[Dict[str, Any]]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# partial participation: jax-free grammar + preview (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def parse_participation_flag(s: str) -> Dict[str, Any]:
+    """Parse the ``--participation`` value into a participation dict. Two
+    forms:
+
+      grammar   ``"sampled:0.25:7"`` — colon-separated ``mode[:fraction
+                [:seed]]`` (``"full"``, ``"sampled:0.25"``, …)
+      JSON      a ``{...}`` dict, for exact round-trips of any keyset
+
+    ``format_participation_flag`` is the inverse; grammar-expressible dicts
+    round-trip exactly (tier-1 tested)."""
+    if s.lstrip().startswith("{"):
+        return json.loads(s)
+    parts = s.split(":")
+    if len(parts) > 3 or not parts[0]:
+        raise ValueError(f"bad --participation value {s!r}: want "
+                         "'mode[:fraction[:seed]]' or a JSON dict")
+    out: Dict[str, Any] = {"mode": parts[0]}
+    if len(parts) >= 2:
+        out["fraction"] = float(parts[1])
+    if len(parts) == 3:
+        out["seed"] = int(parts[2])
+    return out
+
+
+def format_participation_flag(p: Dict[str, Any]) -> str:
+    """The canonical ``--participation`` value for a participation dict: the
+    compact grammar when the keyset is a grammar prefix, JSON otherwise."""
+    keys = set(p)
+    if keys == {"mode"}:
+        return str(p["mode"])
+    if keys == {"mode", "fraction"}:
+        return f"{p['mode']}:{p['fraction']}"
+    if keys == {"mode", "fraction", "seed"}:
+        return f"{p['mode']}:{p['fraction']}:{p['seed']}"
+    return json.dumps(p, sort_keys=True)
+
+
+def participation_preview(spec: "RunSpec") -> Dict[str, Any]:
+    """Jax-free resolved participation: mode/fraction/seed with defaults
+    filled in, plus the paper's n for this spec and the per-round cohort
+    size m = max(1, round(fraction·n)) — EXACTLY the arithmetic of
+    ``core.participation.Participation.cohort_size`` (sync-tested in
+    tests/test_participation_properties.py)."""
+    p = spec.participation
+    mode = p.get("mode", "full") if p else "full"
+    fraction = float(p.get("fraction", 1.0)) if p else 1.0
+    seed = int(p.get("seed", 0)) if p else 0
+    n = spec.n_clients_preview()
+    cohort = n if mode == "full" else max(1, int(round(fraction * n)))
+    return {"mode": mode, "fraction": fraction, "seed": seed,
+            "n": n, "cohort": cohort}
+
+
 def _known_arch(arch: str) -> bool:
     return arch in cb.ARCH_ALIASES or arch in cb.ARCH_IDS
 
@@ -401,6 +474,15 @@ class RunSpec:
     # decode each chunk while the next is in flight. Bit-identical to the
     # blocking anchor; a no-op for all-reduce wires and the vmap runtimes.
     overlap: bool = False
+    # partial participation (DESIGN.md §11): which clients upload each round.
+    # Empty dict = mode 'full' (every client, every round — the v3 meaning,
+    # bit-identical, excluded from the sparse spec_hash). mode='sampled'
+    # draws a seeded cohort of max(1, round(fraction·n)) clients per round
+    # (--participation sampled:0.25:7); fraction=1.0 sampling is
+    # bit-identical to 'full' (tests/test_participation.py). mode='async'
+    # names the event-driven simulator and never runs the synchronous
+    # drivers. Keys ⊆ PART_KEYS.
+    participation: Dict[str, Any] = dataclasses.field(default_factory=dict)
     method_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
     compressor_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -478,6 +560,7 @@ class RunSpec:
                 errs.append(f"{kw_name} must map str keys to JSON scalars, "
                             f"got {kw!r}")
         errs.extend(self._validate_groups())
+        errs.extend(self._validate_participation())
         # the (batch % clients) divisibility the runtime would assert
         # mid-step — checked for BOTH batch geometries a spec can run: the
         # interactive train geometry (global_batch, Session.train) and,
@@ -601,6 +684,53 @@ class RunSpec:
                         "'*' so every leaf lands in exactly one group")
         return errs
 
+    def _validate_participation(self) -> List[str]:
+        """Construction-time participation validation, jax-free (the real
+        Participation re-validates authoritatively in
+        session.make_participation / launch/build.py)."""
+        p = self.participation
+        if not isinstance(p, dict):
+            return [f"participation must be a dict, got {p!r}"]
+        if not p:
+            return []
+        errs: List[str] = []
+        unknown = sorted(set(p) - PART_KEYS)
+        if unknown:
+            errs.append(f"participation: unknown keys {unknown}; have "
+                        f"{sorted(PART_KEYS)}")
+        mode = p.get("mode", "full")
+        if mode not in PART_MODES:
+            errs.append(f"participation: unknown mode {mode!r}; have "
+                        f"{list(PART_MODES)}")
+        frac = p.get("fraction", 1.0)
+        if not (isinstance(frac, (int, float)) and not isinstance(frac, bool)
+                and 0.0 < frac <= 1.0):
+            errs.append(f"participation: fraction must be in (0, 1], got "
+                        f"{frac!r}")
+        seed = p.get("seed", 0)
+        if not isinstance(seed, int) or isinstance(seed, bool):
+            errs.append(f"participation: seed must be an int, got {seed!r}")
+        if mode in ("sampled", "async"):
+            # the fused wire aggregates INSIDE the mega-kernel — there is no
+            # per-client wire left to mask, so a sampled cohort cannot ride
+            # it. Fail at construction, like the fused-misconfig errors.
+            fused_wire_carriers = {"fused_quant8", "fused_quant4"}
+            bad = []
+            if self.carrier in fused_wire_carriers:
+                bad.append(f"carrier={self.carrier!r}")
+            for i, e in enumerate(self.groups):
+                if isinstance(e, dict) \
+                        and e.get("carrier") in fused_wire_carriers:
+                    bad.append(f"groups[{i}] "
+                               f"(pattern={e.get('pattern')!r})")
+            if bad:
+                errs.append(
+                    f"participation mode {mode!r} cannot run the fused "
+                    f"quantized wire ({', '.join(bad)}): the mega-kernel "
+                    "aggregates all clients inside, leaving no per-client "
+                    "wire to mask — use carrier='quant8'/'quant4'")
+        return errs
+
     # -------------------------------------------------------------- previews
     def plan(self) -> Tuple[str, str]:
         """(execution plan, degradation reason) for this spec's carrier —
@@ -653,12 +783,16 @@ class RunSpec:
         if "version" not in d:
             raise ValueError("spec dict has no 'version' key — refusing to "
                              "guess the schema")
-        # v2 → v3 auto-upgrade: v3 is purely additive over v2 (the new
-        # ``groups`` field defaults to the uniform one-group schedule of the
-        # single-knob fields — exactly what a v2 spec always meant), so a v2
-        # dict upgrades mechanically and round-trips as v3. v1 (pre-downlink)
-        # stays rejected: its absence of downlink fields changed execution.
+        # v2 → v3 → v4 chained auto-upgrade: each bump is purely additive
+        # (v3's ``groups`` defaults to the uniform one-group schedule of the
+        # single-knob fields; v4's ``participation`` defaults to mode 'full'
+        # — exactly what every older spec always executed), so old dicts
+        # upgrade mechanically and round-trip at the current schema. v1
+        # (pre-downlink) stays rejected: its absence of downlink fields
+        # changed execution.
         if d.get("version") == 2 and "groups" not in d:
+            d = dict(d, version=3)
+        if d.get("version") == 3 and "participation" not in d:
             d = dict(d, version=SCHEMA_VERSION)
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = sorted(set(d) - known)
@@ -718,6 +852,8 @@ class RunSpec:
                 out.extend([flag, json.dumps(val, sort_keys=True)])
             elif kind == "schedule":
                 out.extend([flag, format_schedule_flag(val)])
+            elif kind == "participation":
+                out.extend([flag, format_participation_flag(val)])
             else:
                 out.extend([flag, str(val)])
         return out
@@ -771,6 +907,7 @@ _FLAGS: List[Tuple[str, str, str]] = [
     ("--downlink-ratio", "downlink_ratio", "float"),
     ("--schedule", "groups", "schedule"),
     ("--overlap", "overlap", "bool"),
+    ("--participation", "participation", "participation"),
     ("--method-kw", "method_kw", "json"),
     ("--compressor-kw", "compressor_kw", "json"),
     ("--tp-pad-heads", "tp_pad_heads", "int"),
@@ -809,6 +946,14 @@ _FLAG_HELP = {
                   "the catch-all '*' — e.g. "
                   "'norm|bias=dense,embed=quant4:0.05,*=sparse:0.02'; a JSON "
                   "[...] list unlocks per-group downlink / state-dtype knobs",
+    "--participation": "partial participation (DESIGN.md §11): "
+                       "'mode[:fraction[:seed]]' — 'full' (every client, "
+                       "every round), 'sampled:0.25:7' (a seeded cohort of "
+                       "max(1, round(fraction·n)) clients per round; "
+                       "non-sampled clients' EF state stays frozen), or a "
+                       "JSON {...} dict; 'async' names the event-driven "
+                       "simulator (core/participation.py) and refuses the "
+                       "synchronous drivers",
     "--clients": "emulated EF clients on the single-device mesh",
     "--method-kw": "JSON dict of extra Method kwargs (e.g. "
                    "'{\"gamma\": 0.01}')",
@@ -854,6 +999,8 @@ def add_flags(ap: argparse.ArgumentParser) -> None:
             kw["type"] = json.loads
         elif kind == "schedule":
             kw["type"] = parse_schedule_flag
+        elif kind == "participation":
+            kw["type"] = parse_participation_flag
         else:
             kw["type"] = _TYPES[kind]
             if flag in _FLAG_CHOICES:
@@ -905,6 +1052,12 @@ GOLDEN_SPECS: Dict[str, Dict[str, Any]] = {
                              "overlap": True,
                              "compressor_kw": {"block": 1024,
                                                "k_per_block": 16}},
+    # v4: partial participation — a quarter cohort per round, seeded
+    # (DESIGN.md §11; `--participation sampled:0.25:7`)
+    "sampled_quarter": {"smoke": True, "clients": 4, "global_batch": 8,
+                        "seq_len": 64,
+                        "participation": {"mode": "sampled",
+                                          "fraction": 0.25, "seed": 7}},
 }
 
 

@@ -98,6 +98,10 @@ def main(argv=None) -> None:
             dplan, dreason = sess.spec.downlink_plan()
             print(f"downlink={sess.spec.downlink_carrier} plan={dplan}"
                   + (f" (degraded: {dreason})" if dreason else ""))
+    pp = spec_lib.participation_preview(sess.spec)
+    if pp["mode"] != "full":
+        print(f"participation mode={pp['mode']} fraction={pp['fraction']} "
+              f"seed={pp['seed']} cohort={pp['cohort']}/{pp['n']} per round")
 
     sess.train(args.steps, log_every=args.log_every, verbose=True)
     if sess.spec.ckpt_dir:

@@ -1,0 +1,171 @@
+"""Straggler scenarios for the event-driven async EF simulator
+(core/participation.run_async, DESIGN.md §11).
+
+Three arrival models — uniform (well-behaved), heavy_tail (Pareto
+stragglers), dropout (clients that vanish and resample) — exercised for
+the properties the async design claims: wall-clock wins over the
+synchronous barrier under heavy tails, no deadlock under dropout, honest
+staleness accounting with a hard cap, and replay determinism. Marked
+slow: these run the numpy event loop for dozens of model updates.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compressors as C
+from repro.core import ef, problems
+from repro.core import participation as part_lib
+
+pytestmark = pytest.mark.slow
+
+BTK = C.BlockTopK(block=16, k_per_block=4)
+
+
+def _method():
+    return ef.EF21SGDM(compressor=BTK, eta=0.2)
+
+
+def _prob(n):
+    return problems.MLPClassification(n=n, m_per_client=32)
+
+
+# ---------------------------------------------------------------------------
+# uniform arrivals: the well-behaved baseline and its accounting invariants
+# ---------------------------------------------------------------------------
+
+def test_uniform_arrivals_accounting_invariants():
+    n, rounds = 4, 5
+    out = part_lib.run_async(
+        _prob(n), _method(), n=n, gamma=0.05, rounds=rounds,
+        arrival=part_lib.ArrivalModel(kind="uniform"), seed=0)
+    # a round = n accepted uploads; uniform never drops or discards
+    assert out["rounds"] == rounds
+    assert out["arrivals_applied"] == n * rounds
+    assert out["arrivals_dropped"] == 0
+    assert out["arrivals_discarded"] == 0
+    assert out["wall_clock"] > 0.0
+    # every applied arrival lands in exactly one staleness bucket
+    assert out["stale_age_hist"].sum() == out["arrivals_applied"]
+    assert len(out["grad_norm_sq_per_round"]) == rounds
+    assert np.isfinite(out["loss"])
+    assert np.isfinite(out["grad_norm_sq"])
+
+
+def test_async_replay_is_deterministic():
+    kw = dict(n=4, gamma=0.05, rounds=3,
+              arrival=part_lib.ArrivalModel(kind="uniform"), seed=7)
+    a = part_lib.run_async(_prob(4), _method(), **kw)
+    b = part_lib.run_async(_prob(4), _method(), **kw)
+    assert a["wall_clock"] == b["wall_clock"]
+    import jax
+    for la, lb in zip(jax.tree_util.tree_leaves(a["x_final"]),
+                      jax.tree_util.tree_leaves(b["x_final"])):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+    assert np.array_equal(a["stale_age_hist"], b["stale_age_hist"])
+
+
+def test_async_actually_optimizes():
+    out = part_lib.run_async(
+        _prob(4), _method(), n=4, gamma=0.02, rounds=30,
+        arrival=part_lib.ArrivalModel(kind="uniform"), seed=0)
+    gpr = np.asarray(out["grad_norm_sq_per_round"])
+    # the tail of the trajectory sits well below the head
+    assert gpr[-5:].mean() < gpr[:5].mean()
+
+
+# ---------------------------------------------------------------------------
+# heavy-tail stragglers: async beats the synchronous barrier on wall-clock
+# ---------------------------------------------------------------------------
+
+def test_heavy_tail_async_beats_sync_barrier_wallclock():
+    """Under Pareto(alpha=1.3) compute times with n=16 clients the sync
+    barrier pays E[max of 16 draws] per round while async pays ~mean per
+    accepted upload — async finishes the same number of rounds several
+    times faster. Verified across seeds (margins 2.9×–5.9× empirically)."""
+    n, rounds = 16, 4
+    arrival = part_lib.ArrivalModel(kind="heavy_tail", alpha=1.3)
+    for seed in range(3):
+        out = part_lib.run_async(_prob(n), _method(), n=n, gamma=0.05,
+                                 rounds=rounds, arrival=arrival, seed=seed)
+        assert out["rounds"] == rounds
+        assert out["wall_clock"] < out["sync_wall_clock"], (
+            f"seed={seed}: async {out['wall_clock']:.2f} did not beat "
+            f"sync barrier {out['sync_wall_clock']:.2f}")
+
+
+def test_heavy_tail_produces_staleness():
+    """Stragglers make stale wires: the age histogram has mass above 0
+    and max_staleness reflects the oldest applied wire."""
+    out = part_lib.run_async(
+        _prob(16), _method(), n=16, gamma=0.05, rounds=4,
+        arrival=part_lib.ArrivalModel(kind="heavy_tail", alpha=1.3), seed=0)
+    hist = out["stale_age_hist"]
+    assert hist.sum() == out["arrivals_applied"]
+    assert len(hist) == out["max_staleness"] + 1
+    assert hist[1:].sum() > 0, "heavy tails never produced a stale wire"
+    assert out["mean_staleness"] > 0.0
+    assert out["max_staleness"] >= out["mean_staleness"]
+
+
+def test_staleness_cap_bounds_applied_ages():
+    """With staleness_cap=k no applied wire is older than k rounds of
+    server progress; over-age arrivals are counted discarded, and the
+    emitted histogram is bounded by the cap."""
+    cap = 8
+    arrival = part_lib.ArrivalModel(kind="heavy_tail", alpha=1.3)
+    capped = part_lib.run_async(_prob(16), _method(), n=16, gamma=0.05,
+                                rounds=3, arrival=arrival,
+                                staleness_cap=cap, seed=0)
+    free = part_lib.run_async(_prob(16), _method(), n=16, gamma=0.05,
+                              rounds=3, arrival=arrival, seed=0)
+    assert capped["max_staleness"] <= cap
+    assert len(capped["stale_age_hist"]) <= cap + 1
+    assert capped["arrivals_discarded"] > 0
+    assert free["arrivals_discarded"] == 0
+    assert free["max_staleness"] > cap  # the cap actually bit something
+    assert capped["rounds"] == free["rounds"] == 3
+
+
+# ---------------------------------------------------------------------------
+# dropout: vanishing clients resample — progress continues, no deadlock
+# ---------------------------------------------------------------------------
+
+def test_dropout_never_deadlocks_and_counts_drops():
+    n, rounds = 8, 3
+    out = part_lib.run_async(
+        _prob(n), _method(), n=n, gamma=0.05, rounds=rounds,
+        arrival=part_lib.ArrivalModel(kind="dropout", drop_prob=0.5), seed=1)
+    assert out["rounds"] == rounds           # completed despite 50% drops
+    assert out["arrivals_applied"] == n * rounds
+    assert out["arrivals_dropped"] > 0
+    assert np.isfinite(out["loss"])
+    # a dropped upload costs wall-clock but no server progress
+    assert out["wall_clock"] > 0.0
+
+
+def test_dropout_heavier_drops_cost_more_wallclock():
+    kw = dict(n=8, gamma=0.05, rounds=3, seed=2)
+    light = part_lib.run_async(
+        _prob(8), _method(),
+        arrival=part_lib.ArrivalModel(kind="dropout", drop_prob=0.1), **kw)
+    heavy = part_lib.run_async(
+        _prob(8), _method(),
+        arrival=part_lib.ArrivalModel(kind="dropout", drop_prob=0.7), **kw)
+    assert heavy["arrivals_dropped"] > light["arrivals_dropped"]
+    assert heavy["wall_clock"] > light["wall_clock"]
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_absolute_mode_method_is_rejected():
+    m = ef.make("ef14_sgd", compressor=BTK)
+    with pytest.raises(ValueError, match="absolute"):
+        part_lib.run_async(_prob(4), m, n=4, gamma=0.05, rounds=2)
+
+
+def test_sync_barrier_wallclock_scales_with_rounds():
+    arrival = part_lib.ArrivalModel(kind="uniform")
+    short = part_lib.sync_barrier_wallclock(arrival, n=4, rounds=2, seed=0)
+    long = part_lib.sync_barrier_wallclock(arrival, n=4, rounds=8, seed=0)
+    assert 0 < short < long

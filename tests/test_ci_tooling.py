@@ -72,7 +72,8 @@ def test_checked_in_bench_ledgers_validate():
     import json
     sys.path.insert(0, ROOT)
     from benchmarks.common import validate_bench
-    for name in ("BENCH_kernels.json", "BENCH_fused_round.json"):
+    for name in ("BENCH_kernels.json", "BENCH_fused_round.json",
+                  "BENCH_roofline.json"):
         path = os.path.join(ROOT, name)
         assert os.path.exists(path), f"{name} missing from the repo root"
         with open(path) as f:
@@ -91,17 +92,25 @@ def test_checked_in_bench_ledgers_validate():
 
 def test_ci_runs_bench_smoke_and_ledger_validation():
     """ci.yml keeps the bench-smoke step: tiny kernel_bench +
-    fused_round_bench runs and the bench/v1 schema gate over both
-    checked-in ledgers."""
+    fused_round_bench + roofline runs and the bench/v1 schema gate over
+    all three checked-in ledgers."""
     with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
         ci = f.read()
     assert "kernel_bench --tiny" in ci, "CI dropped the tiny kernel bench"
     assert "fused_round_bench --tiny" in ci, (
         "CI dropped the tiny fused-round bench")
+    assert "roofline --tiny" in ci, "CI dropped the tiny roofline bench"
     assert "benchmarks.common --validate" in ci, (
         "CI no longer validates the BENCH ledgers")
-    for name in ("BENCH_kernels.json", "BENCH_fused_round.json"):
+    for name in ("BENCH_kernels.json", "BENCH_fused_round.json",
+                 "BENCH_roofline.json"):
         assert name in ci, f"CI ledger gate no longer covers {name}"
+    # every checked-in ledger must exist at the repo root so the CI
+    # append+validate path starts from the committed state
+    for name in ("BENCH_kernels.json", "BENCH_fused_round.json",
+                 "BENCH_roofline.json"):
+        assert os.path.exists(os.path.join(ROOT, name)), (
+            f"{name} is not checked in at the repo root")
 
 
 def test_ci_workflow_keeps_tier_gate_and_timing_report():

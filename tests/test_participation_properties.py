@@ -1,0 +1,193 @@
+"""Seeded-sampling property tests for core/participation.py.
+
+Deterministic grid always runs; hypothesis fuzzers widen the same
+properties when the library is installed (mirrors
+test_carrier_properties.py). Everything here is jax-free-adjacent: the
+numpy mirror cohort_mask_np is the oracle, and the jax cohort_mask must
+agree with it bit-for-bit so spec previews, tests, and the traced train
+step can never disagree about who was sampled.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import participation as part_lib
+from repro.launch import session as session_lib
+from repro.launch import spec as spec_lib
+
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("participation", max_examples=10, deadline=None)
+    settings.load_profile("participation")
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+fuzz = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="hypothesis not installed; the deterministic grid ran")
+
+
+def _mask_seq(part, n, rounds):
+    return np.stack([part_lib.cohort_mask_np(part, n, t)
+                     for t in range(rounds)])
+
+
+# ---------------------------------------------------------------------------
+# deterministic grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,fraction", [
+    (4, 0.25), (4, 0.5), (8, 0.5), (8, 0.125), (16, 0.75), (5, 0.4),
+])
+def test_empirical_frequency_matches_fraction(n, fraction):
+    """Over many rounds every client is sampled ≈ m/n of the time — the
+    without-replacement permutation sampler is unbiased per client."""
+    part = part_lib.Participation(mode="sampled", fraction=fraction, seed=11)
+    rounds = 2000
+    masks = _mask_seq(part, n, rounds)
+    m = part.cohort_size(n)
+    assert all(row.sum() == m for row in masks)      # exact cohort size
+    freq = masks.mean(axis=0)
+    np.testing.assert_allclose(freq, m / n, atol=0.05)
+
+
+def test_same_seed_same_cohort_sequence():
+    a = part_lib.Participation(mode="sampled", fraction=0.5, seed=42)
+    b = part_lib.Participation(mode="sampled", fraction=0.5, seed=42)
+    assert np.array_equal(_mask_seq(a, 8, 50), _mask_seq(b, 8, 50))
+
+
+def test_disjoint_seeds_decorrelate():
+    """Different seeds give genuinely different cohort sequences (not a
+    shifted copy): the per-round masks disagree somewhere, and the match
+    rate across rounds is far from 1."""
+    a = _mask_seq(part_lib.Participation("sampled", 0.5, seed=1), 8, 200)
+    b = _mask_seq(part_lib.Participation("sampled", 0.5, seed=2), 8, 200)
+    same_rows = np.mean([np.array_equal(x, y) for x, y in zip(a, b)])
+    assert same_rows < 0.5
+
+
+def test_jax_mask_matches_numpy_mirror():
+    """cohort_mask (jax, traced into the train step) and cohort_mask_np
+    (numpy, used by previews/tests) are the same function."""
+    for n in (2, 4, 7, 16):
+        for frac in (0.25, 0.5, 1.0):
+            part = part_lib.Participation("sampled", frac, seed=5)
+            for t in range(8):
+                got = np.asarray(part_lib.cohort_mask(part, n, t))
+                want = part_lib.cohort_mask_np(part, n, t)
+                assert np.array_equal(got, want), (n, frac, t)
+
+
+def test_fraction_one_mask_is_all_ones():
+    part = part_lib.Participation("sampled", 1.0, seed=9)
+    for t in range(5):
+        assert part_lib.cohort_mask_np(part, 6, t).all()
+
+
+def test_cohort_masks_roundtrip_through_spec_json():
+    """RunSpec → JSON → RunSpec → Participation reproduces the exact
+    per-round cohort masks: participation is fully pinned by the spec."""
+    spec = spec_lib.RunSpec(
+        arch="smollm-360m", smoke=True, clients=8, global_batch=16,
+        seq_len=32,
+        participation={"mode": "sampled", "fraction": 0.375, "seed": 13})
+    back = spec_lib.RunSpec.from_json(spec.to_json())
+    assert back.participation == spec.participation
+    p0 = session_lib.make_participation(spec)
+    p1 = session_lib.make_participation(back)
+    assert p0 == p1
+    assert np.array_equal(_mask_seq(p0, spec.clients, 40),
+                          _mask_seq(p1, back.clients, 40))
+    pv = spec_lib.participation_preview(back)
+    assert pv["cohort"] == p1.cohort_size(spec.clients)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 8, 17, 64])
+@pytest.mark.parametrize("fraction", [0.1, 0.25, 0.5, 0.9, 1.0])
+def test_cohort_size_matches_spec_preview(n, fraction):
+    part = part_lib.Participation("sampled", fraction, seed=0)
+    spec = spec_lib.RunSpec(
+        arch="smollm-360m", smoke=True, clients=n,
+        global_batch=max(2 * n, 4), seq_len=32,
+        participation={"mode": "sampled", "fraction": fraction})
+    assert part.cohort_size(n) == spec_lib.participation_preview(spec)["cohort"]
+    assert 1 <= part.cohort_size(n) <= n
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        part_lib.Participation(mode="bogus")
+    with pytest.raises(ValueError):
+        part_lib.Participation(mode="sampled", fraction=0.0)
+    with pytest.raises(ValueError):
+        part_lib.Participation(mode="sampled", fraction=1.5)
+    with pytest.raises(ValueError):
+        part_lib.ArrivalModel(kind="bogus")
+    with pytest.raises(ValueError):
+        part_lib.ArrivalModel(kind="dropout", drop_prob=1.0)
+    with pytest.raises(ValueError):
+        part_lib.ArrivalModel(kind="heavy_tail", alpha=1.0)
+
+
+def test_flag_grammar_roundtrip():
+    for flag in ("sampled", "sampled:0.25", "sampled:0.25:7", "async:0.5:3"):
+        d = spec_lib.parse_participation_flag(flag)
+        assert spec_lib.format_participation_flag(d) == flag
+    with pytest.raises(ValueError):
+        spec_lib.parse_participation_flag("sampled:0.25:7:9")
+    with pytest.raises(ValueError):
+        spec_lib.parse_participation_flag("")
+    # the JSON escape hatch covers dicts the colon grammar can't print
+    d = spec_lib.parse_participation_flag('{"mode": "sampled", "seed": 3}')
+    assert d == {"mode": "sampled", "seed": 3}
+    flag = spec_lib.format_participation_flag(d)
+    assert json.loads(flag) == d
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzzers — same properties, wider input space
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @fuzz
+    @given(n=st.integers(1, 64),
+           fraction=st.floats(0.01, 1.0, allow_nan=False),
+           seed=st.integers(0, 2**31 - 1),
+           step=st.integers(0, 10_000))
+    def test_fuzz_mask_invariants(n, fraction, seed, step):
+        part = part_lib.Participation("sampled", fraction, seed)
+        mask = part_lib.cohort_mask_np(part, n, step)
+        assert mask.shape == (n,)
+        assert set(np.unique(mask)) <= {0.0, 1.0}
+        assert mask.sum() == part.cohort_size(n)
+        assert 1 <= part.cohort_size(n) <= n
+        # replay determinism at arbitrary (seed, step)
+        assert np.array_equal(mask, part_lib.cohort_mask_np(part, n, step))
+
+    @fuzz
+    @given(n=st.integers(2, 32),
+           fraction=st.floats(0.1, 1.0, allow_nan=False),
+           seed=st.integers(0, 2**31 - 1))
+    def test_fuzz_jax_numpy_agree(n, fraction, seed):
+        part = part_lib.Participation("sampled", fraction, seed)
+        for t in (0, 1, 17):
+            assert np.array_equal(
+                np.asarray(part_lib.cohort_mask(part, n, t)),
+                part_lib.cohort_mask_np(part, n, t))
+
+    @fuzz
+    @given(fraction=st.floats(0.1, 1.0, allow_nan=False),
+           seed=st.integers(0, 2**16))
+    def test_fuzz_spec_json_roundtrip(fraction, seed):
+        d = {"mode": "sampled", "fraction": fraction, "seed": seed}
+        spec = spec_lib.RunSpec(arch="smollm-360m", smoke=True, clients=4,
+                                global_batch=8, seq_len=32, participation=d)
+        back = spec_lib.RunSpec.from_json(spec.to_json())
+        assert back.participation == d
+        assert np.array_equal(
+            _mask_seq(session_lib.make_participation(spec), 4, 10),
+            _mask_seq(session_lib.make_participation(back), 4, 10))

@@ -26,10 +26,12 @@ def test_name_universes_match_registries():
     from repro.core import compressors as comp_lib
     from repro.core import ef as ef_lib
     from repro.optim import optimizer as opt_lib
+    from repro.core import participation as part_lib
     assert spec_lib.METHODS == set(ef_lib.REGISTRY)
     assert spec_lib.COMPRESSORS == set(comp_lib.REGISTRY)
     assert spec_lib.CARRIERS == set(carrier_lib.REGISTRY)
     assert spec_lib.OPTIMIZERS == set(opt_lib.REGISTRY)
+    assert spec_lib.PART_MODES == part_lib.PART_MODES
 
 
 def test_mesh_geometry_matches_mesh_module():
@@ -182,6 +184,12 @@ def test_flag_spec_flag_stability():
             {"pattern": "*", "carrier": "quant4", "ratio": 0.02,
              "downlink_carrier": "quant4", "downlink_ratio": 0.05,
              "ef_state_dtype": "bfloat16"}]),
+        # --participation grammar round-trip (mode[:fraction[:seed]])
+        RunSpec(participation={"mode": "sampled", "fraction": 0.25,
+                               "seed": 7}),
+        RunSpec(participation={"mode": "sampled", "fraction": 0.5}),
+        # --participation JSON fallback (non-prefix keyset)
+        RunSpec(participation={"mode": "sampled", "seed": 3}),
     ]
     for spec in cases:
         assert RunSpec.from_flags(spec.to_flags()) == spec, spec.to_flags()
@@ -317,28 +325,42 @@ def test_from_json_rejects_unknown_keys_and_bad_version():
         RunSpec.from_dict({k: v for k, v in good.items() if k != "version"})
     # the v2 schema bump (downlink fields change what a spec EXECUTES):
     # pre-downlink v1 specs are rejected loudly, never silently upgraded
-    assert spec_lib.SCHEMA_VERSION == 3
+    assert spec_lib.SCHEMA_VERSION == 4
     v1 = {k: v for k, v in good.items()
-          if k not in ("downlink_carrier", "downlink_ratio", "groups")}
+          if k not in ("downlink_carrier", "downlink_ratio", "groups",
+                       "participation")}
     with pytest.raises(ValueError, match="version"):
         RunSpec.from_dict({**v1, "version": 1})
 
 
-def test_v2_spec_auto_upgrades_to_v3_and_roundtrips():
+def test_old_specs_auto_upgrade_and_roundtrip():
     """v3 is purely additive over v2 (``groups`` defaults to the uniform
-    one-group schedule, exactly what a v2 spec always meant), so a v2 dict
-    upgrades mechanically, round-trips as v3, and hashes identically —
-    every v2 checkpoint stays resumable."""
+    one-group schedule) and v4 over v3 (``participation`` defaults to mode
+    'full') — exactly what every older spec always meant — so old dicts
+    upgrade mechanically (v2 chains through v3), round-trip at the current
+    schema, and hash identically: every old checkpoint stays resumable."""
     now = RunSpec(arch="gemma2-9b", carrier="quant4", eta=0.3)
-    v2 = {k: v for k, v in now.to_dict().items() if k != "groups"}
-    v2["version"] = 2
-    up = RunSpec.from_dict(v2)
-    assert up == now and up.version == 3 and up.groups == []
+    v3 = {k: v for k, v in now.to_dict().items() if k != "participation"}
+    v3["version"] = 3
+    up = RunSpec.from_dict(v3)
+    assert up == now and up.version == 4 and up.participation == {}
     assert RunSpec.from_json(up.to_json()) == up
     assert up.spec_hash() == now.spec_hash()
-    # a v2 dict that somehow carries 'groups' is NOT silently upgraded
+    # v2 chains v2 → v3 → v4
+    v2 = {k: v for k, v in now.to_dict().items()
+          if k not in ("groups", "participation")}
+    v2["version"] = 2
+    up2 = RunSpec.from_dict(v2)
+    assert up2 == now and up2.version == 4 and up2.groups == []
+    assert up2.spec_hash() == now.spec_hash()
+    # an old dict that somehow carries the newer field is NOT silently
+    # upgraded (it was written by something claiming an impossible schema)
     with pytest.raises(ValueError, match="version"):
         RunSpec.from_dict({**now.to_dict(), "version": 2})
+    with pytest.raises(ValueError, match="version"):
+        RunSpec.from_dict(
+            {**now.to_dict(), "version": 3,
+             "participation": {"mode": "sampled", "fraction": 0.5}})
 
 
 # ---------------------------------------------------------------------------
