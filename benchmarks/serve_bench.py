@@ -1,0 +1,135 @@
+"""Load-generator benchmark for the wire-fed serving fleet (ISSUE 8): one
+trainer publishes its quant4 downlink stream, a replica fleet subscribes, and
+a synthetic request load drives it at configurable arrival rates. Recorded in
+the checked-in ledger BENCH_serving.json.
+
+What is measured, per arrival rate:
+
+* request latency percentiles (p10/p50/p90 + p99) over the completed load —
+  wall-clock from arrival to batch completion under the decode-budget
+  scheduler, so queueing delay is in the number, not hidden;
+* sustained QPS and the staleness (trainer head − replica step) each request
+  was actually served at;
+* the wire accounting that justifies streaming at all: broadcast words per
+  sync (``core/stream.py::legs_wire_words`` — the same accounting the
+  training downlink reports) vs a dense f32 weight push, as bytes and as a
+  compression ratio. The acceptance bar is ≥ 20× at quant4.
+
+Every replica in the timed fleet serves params BIT-IDENTICAL to the
+trainer's post-step model at its lag (the invariant tests/test_fleet.py
+pins); the latency numbers are never bought with drifted weights."""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_run, bench_session, csv_row, save_bench
+from repro.core import stream as stream_lib
+from repro.launch import fleet as fleet_lib
+
+# CPU-bench-sized trainer: EF21-SGDM uplink + quant4 downlink at the reduced
+# smollm geometry — the same production step the train driver runs
+SPEC_KW = dict(clients=2, global_batch=4, compressor="block_topk", ratio=0.1,
+               downlink_carrier="quant4", downlink_ratio=0.05)
+
+
+def _percentiles_ns(latencies_s) -> dict:
+    lat = np.asarray(sorted(latencies_s)) * 1e9
+    return {"p10_ns": float(np.percentile(lat, 10)),
+            "median_ns": float(np.percentile(lat, 50)),
+            "p90_ns": float(np.percentile(lat, 90)),
+            "p99_ns": float(np.percentile(lat, 99)),
+            "iters": int(lat.size)}
+
+
+def run(tiny: bool = False) -> dict:
+    steps = 3 if tiny else 6
+    n_requests = 6 if tiny else 24
+    rates = [20.0] if tiny else [4.0, 16.0]
+    prompt_len, max_new = (8, 4) if tiny else (16, 8)
+    decode_budget, max_batch = (8, 2) if tiny else (16, 4)
+
+    stream_dir = tempfile.mkdtemp(prefix="serve_bench_wire_")
+    try:
+        sess = bench_session(**SPEC_KW)
+        sess.publish_to(stream_dir, bootstrap_every=max(steps // 2, 1))
+        t0 = time.time()
+        sess.train(steps)
+        train_s = time.time() - t0
+
+        fleet = fleet_lib.Fleet(stream_dir, n_replicas=2, lags=(0, 2),
+                                decode_budget=decode_budget,
+                                max_batch=max_batch, prompt_len=prompt_len)
+        fleet.sync()
+
+        # wire accounting: per-sync broadcast words on THIS stream's legs vs
+        # a dense f32 push of the whole model — the one-wire-two-consumers
+        # claim (DESIGN.md §12) in bytes
+        rep = fleet.replicas[0]
+        params_like = rep._likes["params"]
+        wire_words = stream_lib.legs_wire_words(rep.legs, params_like)
+        d = sum(int(np.prod(leaf.shape)) for leaf in
+                jax.tree_util.tree_leaves(params_like))
+        wire_bytes = 4.0 * wire_words
+        dense_bytes = 4.0 * d
+        ratio_vs_dense = dense_bytes / max(wire_bytes, 1.0)
+
+        metrics, serving = {}, {}
+        for rate in rates:
+            reqs = fleet_lib.synthetic_requests(
+                n_requests, rate=rate, prompt_len=prompt_len,
+                max_new_tokens=max_new,
+                vocab_size=fleet.replicas[0].session.cfg.vocab_size)
+            out = fleet.run(reqs, sync_every=1)
+            key = f"latency_rate{rate:g}"
+            metrics[key] = _percentiles_ns(
+                [r.latency_s for r in out["requests"]])
+            serving[key] = {
+                "rate_req_s": rate, "qps": out["qps"],
+                "p50_ms": out["p50_ms"], "p99_ms": out["p99_ms"],
+                "batches": out["batches"],
+                "staleness_mean": out["staleness_mean"],
+                "staleness_max": out["staleness_max"],
+            }
+            csv_row(f"serve_bench_rate{rate:g}",
+                    metrics[key]["median_ns"] / 1e3,
+                    f"qps={out['qps']:.2f};p99_ms={out['p99_ms']:.0f};"
+                    f"staleness_max={out['staleness_max']}")
+
+        run_entry = bench_run(
+            geometry={"arch": fleet.replicas[0].spec.arch, "tiny": tiny,
+                      "steps": steps, "requests": n_requests,
+                      "replicas": len(fleet.replicas), "lags": [0, 2],
+                      "prompt_len": prompt_len, "max_new_tokens": max_new,
+                      "decode_budget": decode_budget, "max_batch": max_batch,
+                      "downlink_carrier": "quant4", "downlink_ratio": 0.05},
+            metrics=metrics,
+            speedup_vs_ref={"wire_bytes_vs_dense_f32": ratio_vs_dense})
+        run_entry["serving"] = serving
+        run_entry["wire"] = {
+            "wire_bytes_per_sync": wire_bytes,
+            "dense_f32_push_bytes": dense_bytes,
+            "ratio_vs_dense": ratio_vs_dense,
+            "train_s": train_s,
+        }
+        ledger = save_bench("serving", run_entry)
+        return {"ledger": ledger, "ratio_vs_dense": ratio_vs_dense,
+                "serving": serving, "metrics": metrics}
+    finally:
+        shutil.rmtree(stream_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tiny", action="store_true",
+                   help="CI smoke load (3 trainer steps, 6 requests, one "
+                        "rate) instead of the full sweep")
+    out = run(tiny=p.parse_args().tiny)
+    print(f"wire bytes per sync vs dense f32 push: "
+          f"{out['ratio_vs_dense']:.1f}x (ledger: {out['ledger']})")

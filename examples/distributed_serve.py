@@ -1,23 +1,57 @@
-"""Serving demo: batched prefill + decode across three architecture families
-(dense SWA, Mamba1, hybrid) via the RunSpec/Session API — each arch is one
-spec, and ``Session.serve`` routes through the production
-``build_prefill``/``build_decode`` shardings (launch/build.py).
+"""Streaming-serve demo: one trainer publishing its downlink wire, two
+serving replicas subscribing at different lags (launch/fleet.py).
+
+The trainer runs EF21-SGDM with a quant4 downlink carrier and publishes every
+wire record to a stream dir; each replica joins from the stream's bootstrap
+checkpoint, replays the records through the exact train-step tail, and serves
+requests on params that are BIT-IDENTICAL to the trainer's post-step model at
+its lag — dense f32 weights never travel (DESIGN.md §12).
 
     PYTHONPATH=src python examples/distributed_serve.py
 """
 import os
 import sys
-import time
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import numpy as np
+import jax
+
+from repro.launch import fleet as fleet_lib
 from repro.launch.session import Session
 from repro.launch.spec import RunSpec
 
-for arch in ["h2o-danube-3-4b", "falcon-mamba-7b", "zamba2-1.2b"]:
-    sess = Session(RunSpec(arch=arch, smoke=True))
-    t0 = time.time()
-    out = sess.serve(batch=2, prompt_len=64, decode_steps=16)
-    print(f"{arch:18s} family={sess.cfg.family:7s} prefill+16tok: "
-          f"{time.time() - t0:5.1f}s  cache={out['cache_bytes']/2**20:6.1f} "
-          f"MiB  sample={out['tokens'][0, :8].tolist()}")
+stream_dir = os.path.join(tempfile.mkdtemp(prefix="repro_wire_"), "wire")
+
+# --- the trainer: EF21-SGDM, quant4 downlink, publishing to the stream -----
+spec = RunSpec(arch="smollm-360m", smoke=True, clients=2, global_batch=4,
+               seq_len=32, compressor="block_topk", ratio=0.1,
+               downlink_carrier="quant4", downlink_ratio=0.05)
+trainer = Session(spec)
+trainer.publish_to(stream_dir, bootstrap_every=4)
+trainer.train(6)
+print(f"trainer @ step {trainer.step}, stream at {stream_dir}")
+
+# --- the fleet: two replicas on ONE wire, one fresh and one 2 steps behind -
+fleet = fleet_lib.Fleet(stream_dir, n_replicas=2, lags=(0, 2),
+                        decode_budget=16, max_batch=2, prompt_len=16)
+fleet.sync()
+for rep in fleet.replicas:
+    match = all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree_util.tree_leaves(trainer._tr["params"]),
+                                jax.tree_util.tree_leaves(rep.params)))
+    print(f"{rep.name}: lag={rep.lag} step={rep.step} "
+          f"bit-identical-to-head={match}")
+
+# --- drive a small request load through the fleet --------------------------
+reqs = fleet_lib.synthetic_requests(8, rate=20.0, prompt_len=16,
+                                    max_new_tokens=8,
+                                    vocab_size=trainer.cfg.vocab_size)
+out = fleet.run(reqs, sync_every=1)
+print(f"{len(out['requests'])} requests in {out['batches']} batches: "
+      f"qps={out['qps']:.2f} p50={out['p50_ms']:.0f}ms "
+      f"p99={out['p99_ms']:.0f}ms staleness mean={out['staleness_mean']:.1f}")
+for req in out["requests"][:3]:
+    print(f"  req {req.rid} via {req.replica} (staleness {req.staleness}): "
+          f"{req.tokens_out.tolist()}")

@@ -90,7 +90,7 @@ plots via ``Method.coords_per_message(d, carrier=...)``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -1078,32 +1078,63 @@ def downlink_round(carrier: Carrier, comp, delta: PyTree,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def downlink_round_integrate(carrier: Carrier, comp, delta: PyTree,
-                             h: PyTree, rng: Optional[jax.Array] = None
-                             ) -> PyTree:
-    """One downlink broadcast leg WITH the h-integration fused in, per leaf:
-    h' = h + decode(encode(C(delta))), dispatched through
-    ``Carrier.decode_add`` so quantized wires can run the one-launch
-    dequantize+add Pallas kernel on TPU instead of a decode launch followed
-    by an add. Bit-compatible with ``tree_add(h, downlink_round(...))``
-    (the default decode_add IS that expression; the kernel path stays within
-    float-compilation tolerance). Same encode/rng discipline as
-    ``downlink_round`` — the wire that travels is identical."""
+def downlink_encode(carrier: Carrier, comp, delta: PyTree,
+                    rng: Optional[jax.Array] = None) -> List:
+    """The per-leaf WIRES of one downlink broadcast — the exact payload the
+    server puts on the wire (and what core/stream.py persists for serving
+    replicas). Per leaf ``i`` the rng is ``fold_in(rng, i)``; on the 'wire'
+    plan the payload is ``carrier.encode(C(delta))``, on the degraded 'dense'
+    plan it is the dense C(delta) tensor itself. This is the single encode
+    path: ``downlink_round_integrate`` (the in-step trainer leg) and the
+    stream publisher both call it, so a published record is the same bits the
+    trainer integrated."""
     plan = carrier.plan_down(comp)
-    d_leaves, treedef = jax.tree_util.tree_flatten(delta)
-    h_leaves = jax.tree_util.tree_leaves(h)
-    out = []
-    for i, (leaf, hl) in enumerate(zip(d_leaves, h_leaves)):
+    leaves = jax.tree_util.tree_leaves(delta)
+    wires = []
+    for i, leaf in enumerate(leaves):
         flat = leaf.reshape(-1)
         r = None if rng is None else jax.random.fold_in(rng, i)
         if plan == "wire":
-            wire = carrier.encode(comp, flat, r)
-            new = carrier.decode_add(comp, wire, hl.reshape(-1),
-                                     d=flat.size, dtype=hl.dtype)
+            wires.append(carrier.encode(comp, flat, r))
         else:
-            new = hl.reshape(-1) + comp(flat, r).astype(hl.dtype)
+            wires.append(comp(flat, r).astype(flat.dtype))
+    return wires
+
+
+def downlink_apply(carrier: Carrier, comp, wires: List, h: PyTree) -> PyTree:
+    """h' = h + decode(wire), per leaf — the integration EVERY subscriber of
+    the broadcast runs: the trainer inside its jitted step, and serving
+    replicas between request batches (core/stream.py). Dispatched through
+    ``Carrier.decode_add`` so quantized wires can run the one-launch
+    dequantize+add Pallas kernel on TPU; the default decode_add IS
+    ``h + decode(wire)``, so all consumers agree bit-exactly off-TPU."""
+    plan = carrier.plan_down(comp)
+    h_leaves, treedef = jax.tree_util.tree_flatten(h)
+    out = []
+    for wire, hl in zip(wires, h_leaves):
+        flat_h = hl.reshape(-1)
+        if plan == "wire":
+            new = carrier.decode_add(comp, wire, flat_h,
+                                     d=flat_h.size, dtype=hl.dtype)
+        else:
+            new = flat_h + wire.astype(hl.dtype)
         out.append(new.reshape(hl.shape).astype(hl.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def downlink_round_integrate(carrier: Carrier, comp, delta: PyTree,
+                             h: PyTree, rng: Optional[jax.Array] = None
+                             ) -> PyTree:
+    """One downlink broadcast leg WITH the h-integration fused in:
+    ``downlink_apply(downlink_encode(delta))`` — encode and integration live
+    in those two helpers so the stream publisher/replicas (core/stream.py)
+    run literally the same code as this in-step leg. Bit-compatible with
+    ``tree_add(h, downlink_round(...))`` (decode_add defaults to that
+    expression; the TPU kernel path stays within float-compilation
+    tolerance). Same encode/rng discipline as ``downlink_round`` — the wire
+    that travels is identical."""
+    wires = downlink_encode(carrier, comp, delta, rng)
+    return downlink_apply(carrier, comp, wires, h)
 
 
 def downlink_words(carrier: Carrier, comp, d: int) -> float:

@@ -1,0 +1,587 @@
+"""Train→serve streaming: the downlink wire as an ordered, seekable log.
+
+DESIGN.md §8 made the server's EF21 broadcast memory h a bit-exact compressed
+model-distribution channel: every round the server broadcasts the carrier
+wire of C_down(g − h) and ALL subscribers integrate h' = h + decode(wire).
+This module turns that broadcast into a durable transport so serving replicas
+can be subscribers too (DESIGN.md §12):
+
+  * ``WireRecord`` — one group's wire for one step, with an explicit
+    ``(step, spec_hash, group)`` header. ``kind='delta'`` records carry the
+    per-leaf carrier wires (apply: h += decode); ``kind='dense'`` records
+    carry the group's dense server leaves (the implicit dense broadcast of a
+    group without a downlink carrier — g_est IS the payload).
+  * ``WireLog`` — a directory of one-file-per-record npz entries (atomic
+    tmp+rename like checkpoint.py), ordered and seekable by step, plus the
+    ``bootstrap/`` checkpoints a replica joins from (checkpoint + replay).
+  * ``Publisher`` — the trainer-side hook: re-encodes each round's broadcast
+    OUTSIDE the jitted step with the exact rng fold discipline the step used
+    (``fold_in(fold_in(fold_in(rng0, step), 1), DOWNLINK_FOLD)``, then
+    per-group / per-leaf folds), and REFUSES to append any record whose
+    wires do not reproduce the trainer's own post-step h bit-exactly — a
+    published record is proven-correct at write time, never trusted.
+  * ``Subscriber`` — the replica-side state machine: holds
+    (params, opt_state, h, step) and advances them record-by-record through
+    the exact train-step tail (h-integration → optimizer update) via the
+    SAME ``carriers.downlink_apply`` the trainer ran, so each applied record
+    lands the replica bit-identical to the trainer's post-step model.
+
+Integrity rules (mirrors the checkpoint foreign-spec guard): out-of-order
+application raises ``StreamOrderError``; a missing record raises
+``StreamGapError`` (the replica must resync via a later bootstrap + replay,
+never skip — see launch/fleet.py); a record written by a different RunSpec
+raises ``StreamSpecMismatch``. Republishing after trainer kill-and-resume is
+idempotent: an append that bit-matches the existing record is a no-op, a
+conflicting one raises ``StreamIntegrityError``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import carriers as carrier_lib
+from repro.core import compressors as comp_lib
+from repro.core import schedule as sched_lib
+
+PyTree = Any
+
+STREAM_SCHEMA = "wire/v1"
+_NATIVE_KINDS = set("biufc")          # npz round-trips these dtypes natively
+
+
+class StreamError(RuntimeError):
+    """Base class for wire-stream failures."""
+
+
+class StreamOrderError(StreamError):
+    """A record was applied out of order (step != subscriber step + 1)."""
+
+
+class StreamGapError(StreamError):
+    """A needed record is missing from the log — resync, never skip."""
+
+
+class StreamSpecMismatch(StreamError):
+    """Record and subscriber were built from different RunSpecs."""
+
+
+class StreamIntegrityError(StreamError):
+    """A record conflicts with the log or fails the bit-exact verify."""
+
+
+# ---------------------------------------------------------------------------
+# records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireRecord:
+    """One group's downlink payload for one step. ``step`` is the trainer's
+    POST-step counter: applying this record advances a replica holding the
+    step-1 model to the trainer's exact step-``step`` model."""
+
+    step: int
+    spec_hash: str
+    group: str                 # group pattern ('*' on the uniform path)
+    group_index: int
+    n_records: int             # records that make up this step (non-empty groups)
+    kind: str                  # 'delta' (h += decode) | 'dense' (g_est = payload)
+    payload: Tuple[Any, ...]   # per leaf: np.ndarray | tuple of np.ndarray
+
+
+def _arrays_equal(a: np.ndarray, b: np.ndarray) -> bool:
+    if a.dtype != b.dtype or a.shape != b.shape:
+        return False
+    if a.dtype.kind == "f":
+        return bool(np.array_equal(a, b, equal_nan=True))
+    return bool(np.array_equal(a, b))
+
+
+def _record_arrays(rec: WireRecord) -> List[np.ndarray]:
+    out: List[np.ndarray] = []
+    for leaf in rec.payload:
+        comps = leaf if isinstance(leaf, tuple) else (leaf,)
+        out.extend(np.asarray(c) for c in comps)
+    return out
+
+
+def records_equal(a: WireRecord, b: WireRecord) -> bool:
+    if (a.step, a.spec_hash, a.group, a.group_index, a.n_records, a.kind) != \
+            (b.step, b.spec_hash, b.group, b.group_index, b.n_records, b.kind):
+        return False
+    aa, bb = _record_arrays(a), _record_arrays(b)
+    return len(aa) == len(bb) and all(
+        _arrays_equal(x, y) for x, y in zip(aa, bb))
+
+
+def record_nbytes(rec: WireRecord) -> int:
+    """On-the-wire payload bytes of one record (arrays only, no header)."""
+    return sum(arr.nbytes for arr in _record_arrays(rec))
+
+
+# ---------------------------------------------------------------------------
+# the log
+# ---------------------------------------------------------------------------
+
+_REC_RE = re.compile(r"^rec_(\d{8})_g(\d{2})\.npz$")
+
+
+class WireLog:
+    """Directory-backed record log: ``records/rec_<step>_g<group>.npz`` plus
+    the ``bootstrap/step_<step>.npz`` full-state checkpoints replicas join
+    from. Writes are atomic (mkstemp + rename; ``*.tmp.npz`` partials from a
+    killed writer are never listed — the checkpoint.py idiom)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self.records_dir = os.path.join(root, "records")
+        self.bootstrap_dir = os.path.join(root, "bootstrap")
+
+    # ------------------------------------------------------------- filenames
+    def record_path(self, step: int, group_index: int) -> str:
+        return os.path.join(self.records_dir,
+                            f"rec_{step:08d}_g{group_index:02d}.npz")
+
+    def bootstrap_path(self, step: int) -> str:
+        return os.path.join(self.bootstrap_dir, f"step_{step:08d}.npz")
+
+    def _listing(self) -> Dict[int, List[int]]:
+        """{step: [group indices present]} over complete FILES only."""
+        if not os.path.isdir(self.records_dir):
+            return {}
+        out: Dict[int, List[int]] = {}
+        for f in os.listdir(self.records_dir):
+            m = _REC_RE.match(f)
+            if m:
+                out.setdefault(int(m.group(1)), []).append(int(m.group(2)))
+        return out
+
+    def steps(self) -> List[int]:
+        """Steps with at least one record file, sorted."""
+        return sorted(self._listing())
+
+    def last_step(self) -> Optional[int]:
+        """Newest step whose record set is COMPLETE (a writer killed between
+        the group files of one step must not surface a partial step)."""
+        listing = self._listing()
+        for step in sorted(listing, reverse=True):
+            try:
+                recs = self.read_step(step)
+            except StreamError:
+                continue
+            if recs:
+                return step
+        return None
+
+    def bootstrap_steps(self) -> List[int]:
+        if not os.path.isdir(self.bootstrap_dir):
+            return []
+        out = []
+        for f in os.listdir(self.bootstrap_dir):
+            m = re.match(r"^step_(\d{8})\.npz$", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_bootstrap(self, upto: Optional[int] = None) -> Optional[str]:
+        steps = [s for s in self.bootstrap_steps()
+                 if upto is None or s <= upto]
+        return self.bootstrap_path(steps[-1]) if steps else None
+
+    # ------------------------------------------------------------ read/write
+    def append(self, rec: WireRecord) -> bool:
+        """Write one record atomically. Idempotent on republish (trainer
+        kill-and-resume replays already-published steps): a bit-identical
+        existing record is a no-op (returns False), a conflicting one raises
+        ``StreamIntegrityError`` — the log never silently forks."""
+        path = self.record_path(rec.step, rec.group_index)
+        if os.path.exists(path):
+            existing = self.read(rec.step, rec.group_index)
+            if records_equal(existing, rec):
+                return False
+            raise StreamIntegrityError(
+                f"refusing to overwrite {path}: a record for step {rec.step} "
+                f"group {rec.group!r} already exists with different bits "
+                "(a diverged republish would silently fork the stream)")
+        os.makedirs(self.records_dir, exist_ok=True)
+        flat: Dict[str, np.ndarray] = {}
+        struct: List[int] = []
+        dtypes: List[List[str]] = []
+        for i, leaf in enumerate(rec.payload):
+            comps = leaf if isinstance(leaf, tuple) else (leaf,)
+            struct.append(len(comps) if isinstance(leaf, tuple) else -1)
+            names = []
+            for j, c in enumerate(comps):
+                arr = np.asarray(jax.device_get(c))
+                names.append(str(arr.dtype))
+                # extension dtypes (bfloat16, fp8) round-trip poorly through
+                # npz: store as f32, cast back on read (lossless for bf16)
+                if arr.dtype.kind not in _NATIVE_KINDS:
+                    arr = np.asarray(
+                        jax.numpy.asarray(arr).astype(jax.numpy.float32))
+                flat[f"l{i}_c{j}"] = arr
+            dtypes.append(names)
+        meta = {"stream": STREAM_SCHEMA, "step": rec.step,
+                "spec_hash": rec.spec_hash, "group": rec.group,
+                "group_index": rec.group_index, "n_records": rec.n_records,
+                "kind": rec.kind, "struct": struct, "dtypes": dtypes}
+        flat["__meta__"] = np.frombuffer(json.dumps(meta).encode(),
+                                         dtype=np.uint8)
+        fd, tmp = tempfile.mkstemp(dir=self.records_dir, suffix=".tmp.npz")
+        os.close(fd)
+        np.savez(tmp, **flat)
+        os.replace(tmp, path)
+        return True
+
+    def read(self, step: int, group_index: int) -> WireRecord:
+        path = self.record_path(step, group_index)
+        if not os.path.exists(path):
+            raise StreamGapError(
+                f"no record for step {step} group {group_index} under "
+                f"{self.records_dir!r}")
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["__meta__"]).decode())
+            if meta.get("stream") != STREAM_SCHEMA:
+                raise StreamIntegrityError(
+                    f"{path}: unknown stream schema {meta.get('stream')!r} "
+                    f"(this reader speaks {STREAM_SCHEMA!r})")
+            payload: List[Any] = []
+            for i, (nc, names) in enumerate(zip(meta["struct"],
+                                                meta["dtypes"])):
+                comps = []
+                for j, name in enumerate(names if nc != -1 else names[:1]):
+                    arr = z[f"l{i}_c{j}"]
+                    if np.dtype(name).kind not in _NATIVE_KINDS \
+                            or str(arr.dtype) != name:
+                        arr = np.asarray(jax.numpy.asarray(arr).astype(name))
+                    comps.append(arr)
+                payload.append(tuple(comps) if nc != -1 else comps[0])
+        return WireRecord(step=meta["step"], spec_hash=meta["spec_hash"],
+                          group=meta["group"],
+                          group_index=meta["group_index"],
+                          n_records=meta["n_records"], kind=meta["kind"],
+                          payload=tuple(payload))
+
+    def read_step(self, step: int) -> List[WireRecord]:
+        """Every group record of one step, ordered by group index. Raises
+        ``StreamGapError`` when the step is absent and
+        ``StreamIntegrityError`` when only PART of the step's record set is
+        on disk (a half-published step must never be applied)."""
+        present = sorted(self._listing().get(step, []))
+        if not present:
+            raise StreamGapError(
+                f"no records for step {step} under {self.records_dir!r}")
+        recs = [self.read(step, gi) for gi in present]
+        want = recs[0].n_records
+        if len(recs) != want or any(r.n_records != want for r in recs):
+            raise StreamIntegrityError(
+                f"step {step} has {len(recs)} of {want} group records — "
+                "partial publish; refusing to apply an incomplete step")
+        return recs
+
+
+# ---------------------------------------------------------------------------
+# transport legs — the resolved downlink plan shared by both ends
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Leg:
+    """One group's transport: which leaves it covers and how they travel.
+    ``carrier is None`` means the group has no downlink — its server leaves
+    ship dense (``kind='dense'``), exactly the implicit dense broadcast of
+    ``schedule.downlink_round_grouped``."""
+
+    name: str
+    index: int                  # schedule group index — the rng fold index
+    n_groups: int
+    leaf_ii: Tuple[int, ...]    # leaf positions in the full flat param list
+    carrier: Optional[Any] = None
+    comp: Optional[Any] = None
+
+
+def resolve_legs(params_like: PyTree, schedule=None,
+                 down_carrier: str = "dense",
+                 down_compressor=None) -> List[Leg]:
+    """The downlink transport legs for one spec, resolved once against the
+    param treedef and shared verbatim by the publisher and every subscriber
+    (same group indices → same rng folds → same wires)."""
+    n_leaves = jax.tree_util.tree_structure(params_like).num_leaves
+    if schedule is None:
+        ii = tuple(range(n_leaves))
+        if down_carrier == "dense" and down_compressor is None:
+            return [Leg(name="*", index=0, n_groups=1, leaf_ii=ii)]
+        comp = down_compressor if down_compressor is not None \
+            else comp_lib.Identity()
+        return [Leg(name="*", index=0, n_groups=1, leaf_ii=ii,
+                    carrier=carrier_lib.make(down_carrier), comp=comp)]
+    idx = sched_lib._group_indices(schedule, params_like)
+    legs: List[Leg] = []
+    ng = len(schedule.groups)
+    for gi, grp in enumerate(schedule.groups):
+        if not idx[gi]:
+            continue                       # trainer skips empty groups too
+        if grp.has_downlink:
+            legs.append(Leg(name=grp.pattern, index=gi, n_groups=ng,
+                            leaf_ii=tuple(idx[gi]),
+                            carrier=carrier_lib.make(grp.down_carrier),
+                            comp=grp.down_comp()))
+        else:
+            legs.append(Leg(name=grp.pattern, index=gi, n_groups=ng,
+                            leaf_ii=tuple(idx[gi])))
+    return legs
+
+
+def legs_wire_words(legs: Sequence[Leg], params_like: PyTree) -> float:
+    """Honest per-sync broadcast words over all legs (DESIGN.md §9 rules:
+    a leg without a downlink ships its dense leaves). One wire serves both
+    training sync and the serving fleet, so fleet downlink bytes are THESE
+    words × 4 per subscriber — never accounted twice."""
+    leaves = jax.tree_util.tree_leaves(params_like)
+    total = 0.0
+    for leg in legs:
+        for i in leg.leaf_ii:
+            d = int(leaves[i].size)
+            if leg.carrier is None:
+                total += float(d)
+            else:
+                total += carrier_lib.downlink_words(leg.carrier, leg.comp, d)
+    return total
+
+
+def _round_down_rng(rng0: jax.Array, step: int) -> jax.Array:
+    """The downlink rng of the round that PRODUCED post-step ``step``:
+    the train step ran with fold_in(rng0, step-1), compression folds 1,
+    the downlink leg folds DOWNLINK_FOLD (core/distributed.py)."""
+    r_round = jax.random.fold_in(rng0, step - 1)
+    r_comp = jax.random.fold_in(r_round, 1)
+    return jax.random.fold_in(r_comp, carrier_lib.DOWNLINK_FOLD)
+
+
+# ---------------------------------------------------------------------------
+# trainer side — publisher
+# ---------------------------------------------------------------------------
+
+class Publisher:
+    """Appends one WireRecord per leg after each trainer step, re-encoding
+    the broadcast outside the jitted step and verifying the wires reproduce
+    the trainer's own post-step h bit-exactly before anything is written.
+    A failed verify raises — the log never carries a record that would
+    silently drift a replica."""
+
+    def __init__(self, log: WireLog, spec_hash: str, legs: Sequence[Leg],
+                 rng0: jax.Array):
+        self.log = log
+        self.spec_hash = spec_hash
+        self.legs = list(legs)
+        self.rng0 = rng0
+        self._encode_jit: Dict[int, Any] = {}
+
+    def _leg_encode(self, leg: Leg):
+        """encode + integrate for one leg, JITTED: eager op-by-op dispatch
+        can round quantization scales one ulp away from the trainer's
+        compiled step (seen on CPU), so the re-encode must go through XLA
+        exactly like the step did — the verify below then proves the wires
+        reproduce the trainer's h bit-for-bit."""
+        if leg.index not in self._encode_jit:
+            carrier, comp = leg.carrier, leg.comp
+
+            def enc(s_g, h_g, r):
+                delta = [s - h for s, h in zip(s_g, h_g)]
+                wires = carrier_lib.downlink_encode(carrier, comp, delta, r)
+                return wires, carrier_lib.downlink_apply(
+                    carrier, comp, wires, h_g)
+
+            self._encode_jit[leg.index] = jax.jit(enc)
+        return self._encode_jit[leg.index]
+
+    def publish(self, step: int, server: PyTree,
+                h_prev: Optional[PyTree], h_new: Optional[PyTree]) -> int:
+        """Publish the wire of the round that produced post-step ``step``.
+        Returns the number of NEW records written (0 when a resumed trainer
+        republishes steps already in the log — verified-identical, skipped).
+        """
+        s_leaves = jax.tree_util.tree_leaves(server)
+        hp_leaves = None if h_prev is None \
+            else jax.tree_util.tree_leaves(h_prev)
+        hn_leaves = None if h_new is None \
+            else jax.tree_util.tree_leaves(h_new)
+        needs_rng = any(leg.carrier is not None for leg in self.legs)
+        r_down = _round_down_rng(self.rng0, step) if needs_rng else None
+        written = 0
+        for leg in self.legs:
+            if leg.carrier is None:
+                payload = tuple(np.asarray(jax.device_get(s_leaves[i]))
+                                for i in leg.leaf_ii)
+                kind = "dense"
+            else:
+                assert hp_leaves is not None and hn_leaves is not None, \
+                    "downlink legs need the broadcast memory h"
+                r_leg = sched_lib._group_rng(r_down, leg.index, leg.n_groups)
+                # the proof obligation: these wires, applied through the same
+                # downlink_apply every subscriber runs, must land on the
+                # trainer's own h — else publishing would fork the stream
+                wires, got = self._leg_encode(leg)(
+                    [s_leaves[i] for i in leg.leaf_ii],
+                    [hp_leaves[i] for i in leg.leaf_ii], r_leg)
+                for gi, i in enumerate(leg.leaf_ii):
+                    a = np.asarray(jax.device_get(got[gi]))
+                    b = np.asarray(jax.device_get(hn_leaves[i]))
+                    if not _arrays_equal(a, b):
+                        raise StreamIntegrityError(
+                            f"step {step} group {leg.name!r}: re-encoded "
+                            "wire does not reproduce the trainer's post-step "
+                            "h bit-exactly; refusing to publish a drifting "
+                            "record")
+                payload = tuple(
+                    tuple(np.asarray(jax.device_get(c)) for c in w)
+                    if isinstance(w, tuple)
+                    else np.asarray(jax.device_get(w)) for w in wires)
+                kind = "delta"
+            rec = WireRecord(step=step, spec_hash=self.spec_hash,
+                             group=leg.name, group_index=leg.index,
+                             n_records=len(self.legs), kind=kind,
+                             payload=payload)
+            written += int(self.log.append(rec))
+        return written
+
+
+# ---------------------------------------------------------------------------
+# replica side — subscriber
+# ---------------------------------------------------------------------------
+
+class Subscriber:
+    """The replica-side state machine (DESIGN.md §12): subscribe → apply →
+    (serve) → resync. Holds exactly the state the train-step tail touches —
+    params, opt_state, the broadcast memory h, and the step cursor — and
+    advances it one record-set at a time. The h-integration runs through the
+    SAME ``carriers.downlink_apply`` as the trainer's in-step leg and the
+    optimizer update is the same ``optimizer.update`` + ``apply_updates``
+    composition, so an applied step is bit-identical to the trainer's.
+
+    Resync (checkpoint + replay on a gap) lives in launch/fleet.py — this
+    class only guarantees it never applies out of order and never skips."""
+
+    def __init__(self, log: WireLog, spec_hash: str, legs: Sequence[Leg],
+                 params: PyTree, opt_state: PyTree, h: Optional[PyTree],
+                 step: int, optimizer):
+        self.log = log
+        self.spec_hash = spec_hash
+        self.legs = list(legs)
+        self.params = params
+        self.opt_state = opt_state
+        self.h = h
+        self.step = int(step)
+        self.optimizer = optimizer
+        self._advance_jit = None
+
+    # ----------------------------------------------------------- validation
+    def _check(self, recs: List[WireRecord]) -> List[WireRecord]:
+        if not recs:
+            raise StreamGapError("empty record set")
+        for rec in recs:
+            if rec.spec_hash != self.spec_hash:
+                raise StreamSpecMismatch(
+                    f"record step {rec.step} group {rec.group!r} was "
+                    f"published by a different RunSpec (hash "
+                    f"{rec.spec_hash} != {self.spec_hash}); refusing to "
+                    "apply a foreign stream (the checkpoint foreign-spec "
+                    "rule, DESIGN.md §7)")
+            if rec.step != self.step + 1:
+                raise StreamOrderError(
+                    f"out-of-order record: got step {rec.step}, replica is "
+                    f"at {self.step} (next applicable is {self.step + 1}); "
+                    "applying out of order would silently drift h")
+        by_index = {r.group_index: r for r in recs}
+        want = [leg.index for leg in self.legs]
+        if sorted(by_index) != sorted(want) or len(by_index) != len(recs):
+            raise StreamIntegrityError(
+                f"step {recs[0].step}: record groups {sorted(by_index)} do "
+                f"not match the spec's transport legs {sorted(want)}")
+        ordered = [by_index[leg.index] for leg in self.legs]
+        for leg, rec in zip(self.legs, ordered):
+            want_kind = "dense" if leg.carrier is None else "delta"
+            if rec.kind != want_kind:
+                raise StreamIntegrityError(
+                    f"step {rec.step} group {rec.group!r}: kind "
+                    f"{rec.kind!r} does not match the leg's {want_kind!r}")
+            if len(rec.payload) != len(leg.leaf_ii):
+                raise StreamIntegrityError(
+                    f"step {rec.step} group {rec.group!r}: {len(rec.payload)}"
+                    f" payload leaves for {len(leg.leaf_ii)} group leaves")
+        return ordered
+
+    # ---------------------------------------------------------------- apply
+    def _build_advance(self):
+        legs = self.legs
+        optimizer = self.optimizer
+        from repro.optim.optimizer import apply_updates
+
+        def advance(params, opt_state, h, payloads, opt_step):
+            p_leaves, treedef = jax.tree_util.tree_flatten(params)
+            n = len(p_leaves)
+            h_leaves = jax.tree_util.tree_leaves(h) \
+                if h is not None else [None] * n
+            est_out: List[Any] = [None] * n
+            h_out: List[Any] = [None] * n
+            for leg, payload in zip(legs, payloads):
+                if leg.carrier is None:
+                    for pos, i in enumerate(leg.leaf_ii):
+                        est_out[i] = payload[pos]
+                        h_out[i] = payload[pos]
+                else:
+                    new_h = carrier_lib.downlink_apply(
+                        leg.carrier, leg.comp, list(payload),
+                        [h_leaves[i] for i in leg.leaf_ii])
+                    for pos, i in enumerate(leg.leaf_ii):
+                        est_out[i] = new_h[pos]
+                        h_out[i] = new_h[pos]
+            g_est = jax.tree_util.tree_unflatten(treedef, est_out)
+            new_h_tree = None if h is None \
+                else jax.tree_util.tree_unflatten(treedef, h_out)
+            updates, opt_state = optimizer.update(
+                g_est, opt_state, params, opt_step)
+            params = apply_updates(params, updates)
+            return params, opt_state, new_h_tree
+
+        return jax.jit(advance)
+
+    def _payload_jax(self, rec: WireRecord):
+        return tuple(
+            tuple(jax.numpy.asarray(c) for c in leaf)
+            if isinstance(leaf, tuple) else jax.numpy.asarray(leaf)
+            for leaf in rec.payload)
+
+    def apply(self, recs: List[WireRecord]) -> None:
+        """Apply one step's full record set; the replica lands bit-identical
+        to the trainer's post-step model at ``recs[0].step``."""
+        ordered = self._check(recs)
+        if self._advance_jit is None:
+            self._advance_jit = self._build_advance()
+        payloads = [self._payload_jax(r) for r in ordered]
+        # the trainer's optimizer.update ran with the PRE-increment step
+        self.params, self.opt_state, self.h = self._advance_jit(
+            self.params, self.opt_state, self.h, payloads, self.step)
+        self.step += 1
+
+    def sync(self, upto: Optional[int] = None) -> int:
+        """Apply every available record in order, up to ``upto`` (default:
+        the log's last complete step). Returns the number of steps applied.
+        Raises ``StreamGapError`` when a needed record is missing while later
+        ones exist — the caller must resync from a bootstrap (fleet layer),
+        because skipping would serve silently-drifted weights."""
+        last = self.log.last_step()
+        if last is None:
+            return 0
+        target = last if upto is None else min(int(upto), last)
+        applied = 0
+        while self.step < target:
+            recs = self.log.read_step(self.step + 1)
+            self.apply(recs)
+            applied += 1
+        return applied

@@ -1,0 +1,361 @@
+"""Serving fleet fed by the downlink wire (DESIGN.md §12).
+
+A ``ServeReplica`` is a serving ``Session`` whose parameters are kept
+bit-identical to the trainer's by SUBSCRIBING to the wire stream a training
+session publishes (``Session.publish_to`` → core/stream.py): it joins from
+the stream's bootstrap checkpoint, replays every record (checkpoint +
+replay), and between request batches applies new records through the exact
+train-step tail — never a dense f32 weight push. A ``Fleet`` runs several
+replicas against ONE stream at different lags behind the trainer head,
+dispatching a request queue through a decode-budget scheduler:
+
+    sess = Session(spec); sess.publish_to("/tmp/wire"); sess.train(100)
+    fleet = Fleet("/tmp/wire", n_replicas=2, lags=(0, 4))
+    results = fleet.run(synthetic_requests(32, rate=8.0))
+
+Scheduling: requests are admitted FIFO into one serving batch while
+``B × decode_steps ≤ decode_budget`` (decode steps bucketed to powers of two
+so the jitted serve geometries stay bounded — ``Session.serve`` caches its
+compiled prefill/decode per (B, S, D)). The per-arch serving carve-outs of
+DESIGN.md §5 (sliding-window caches, prefix-embed frontends) are enforced by
+``build_prefill``/``build_decode`` underneath ``Session.serve``; the
+scheduler's job is only to keep every serving step inside the decode budget
+those builds were sized for.
+
+Staleness: a replica at lag L serves the trainer's step-(head−L) model —
+exact, never drifted (gaps resync via a later bootstrap, or fail loudly).
+This is SERVING staleness, distinct from the async TRAINING staleness cap of
+DESIGN.md §11 — see §12 for the contrast.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.core import stream as stream_lib
+from repro.launch import session as session_lib
+from repro.launch import spec as spec_lib
+from repro.models import model as model_lib
+from repro.optim import optimizer as opt_lib
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# requests + decode-budget scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. ``arrival_s`` is relative to the run's t0; the
+    completion fields are filled by ``Fleet.run``."""
+
+    rid: int
+    tokens: np.ndarray                  # 1-D prompt token ids
+    max_new_tokens: int = 16
+    arrival_s: float = 0.0
+    # filled on completion
+    t_done: float = 0.0
+    latency_s: float = 0.0
+    replica: str = ""
+    staleness: int = 0
+    tokens_out: Optional[np.ndarray] = None
+
+
+def _bucket(n: int) -> int:
+    """Next power of two ≥ n — decode geometries are bucketed so the jitted
+    serve cache stays small (log2 many entries, not one per request mix)."""
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+@dataclasses.dataclass
+class DecodeBudgetScheduler:
+    """FIFO batcher under a decode budget: admit the longest queue prefix
+    whose batched decode cost ``B × D`` stays within ``decode_budget``,
+    where D is the power-of-two bucket of the batch's largest
+    ``max_new_tokens``. An oversized lone request is still admitted alone
+    with its decode capped at the budget (starving it forever would turn a
+    budget into a deadlock)."""
+
+    decode_budget: int = 64
+    max_batch: int = 4
+
+    def admit(self, queue: Deque[Request]) -> Tuple[List[Request], int]:
+        """Pop and return ``(batch, decode_steps)``; empty queue → ([], 0)."""
+        if not queue:
+            return [], 0
+        batch: List[Request] = []
+        d = 1
+        for req in list(queue):
+            cand_d = max(d, _bucket(max(req.max_new_tokens, 1)))
+            if batch and (len(batch) + 1 > self.max_batch
+                          or (len(batch) + 1) * cand_d > self.decode_budget):
+                break
+            batch.append(req)
+            d = cand_d
+            if len(batch) * d >= self.decode_budget:
+                break
+        for _ in batch:
+            queue.popleft()
+        return batch, min(d, max(self.decode_budget, 1))
+
+
+def synthetic_requests(n: int, rate: float = 0.0, prompt_len: int = 32,
+                       max_new_tokens: int = 8, vocab_size: int = 256,
+                       seed: int = 0) -> List[Request]:
+    """A deterministic load: ``n`` requests with exponential inter-arrivals
+    at ``rate`` req/s (rate ≤ 0 → everything arrives at t=0)."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, vocab_size, size=(n, prompt_len), dtype=np.int64)
+    if rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    else:
+        arrivals = np.zeros(n)
+    return [Request(rid=i, tokens=toks[i], arrival_s=float(arrivals[i]),
+                    max_new_tokens=max_new_tokens) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# one replica
+# ---------------------------------------------------------------------------
+
+class ServeReplica:
+    """subscribe → apply → serve → resync (DESIGN.md §12). Joins from the
+    stream's bootstrap checkpoint (never loading per-client EF state — a
+    replica restores only params + opt_state + h), replays the record log,
+    and serves through ``Session.serve`` with the subscriber's params
+    injected as the serve source. On a gap it resyncs from the newest
+    bootstrap past the gap and replays; with no such bootstrap it raises —
+    the replica keeps serving its last CONSISTENT model (stale is honest,
+    drift is not)."""
+
+    def __init__(self, stream_dir: str, name: str = "r0", lag: int = 0,
+                 bootstrap_step: Optional[int] = None):
+        self.log = stream_lib.WireLog(stream_dir)
+        self.name = name
+        self.lag = int(lag)
+        if bootstrap_step is not None:
+            path = self.log.bootstrap_path(bootstrap_step)
+        else:
+            # a lagged replica joins at a bootstrap at-or-below its target
+            # (head − lag) when one exists, so it starts BEHIND and stays
+            # there; fall back to the newest bootstrap otherwise
+            head = self.log.last_step()
+            path = None
+            if self.lag > 0 and head is not None:
+                path = self.log.latest_bootstrap(
+                    upto=max(head - self.lag, 0))
+            if path is None:
+                path = self.log.latest_bootstrap()
+        if path is None:
+            raise stream_lib.StreamError(
+                f"stream {stream_dir!r} has no bootstrap checkpoint — a "
+                "replica cannot join (params never travel on the wire); "
+                "attach the trainer with Session.publish_to first")
+        meta = ckpt_lib.read_meta(path)
+        if "spec" not in meta:
+            raise stream_lib.StreamError(
+                f"bootstrap {path} has no embedded RunSpec")
+        self.spec = spec_lib.RunSpec.from_dict(meta["spec"])
+        self.spec_hash = self.spec.spec_hash()
+        self.session = session_lib.Session(self.spec)
+        self.optimizer = opt_lib.make(self.spec.optimizer, lr=self.spec.lr)
+        self._likes = self._like_trees()
+        self.legs = stream_lib.resolve_legs(
+            self._likes["params"],
+            schedule=session_lib.make_schedule(self.spec),
+            down_carrier=self.spec.downlink_carrier,
+            down_compressor=session_lib.make_down_compressor(self.spec))
+        self.sub = self._load_bootstrap(path)
+        self.session.set_serve_params(self.sub.params)
+
+    # -------------------------------------------------------------- loading
+    def _like_trees(self) -> Dict[str, PyTree]:
+        """Shape/dtype templates via eval_shape — a replica restore never
+        pays init_params, and never materializes the per-CLIENT EF state
+        (``ef_state/clients``): only params, opt_state, and the broadcast
+        memory h leave the checkpoint."""
+        cfg = self.session.cfg
+        params_like = jax.eval_shape(
+            lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+        opt_like = jax.eval_shape(self.optimizer.init, params_like)
+        likes = {"params": params_like, "opt_state": opt_like}
+        if any(leg.carrier is not None for leg in stream_lib.resolve_legs(
+                params_like,
+                schedule=session_lib.make_schedule(self.spec),
+                down_carrier=self.spec.downlink_carrier,
+                down_compressor=session_lib.make_down_compressor(self.spec))):
+            likes["h"] = params_like
+        return likes
+
+    def _load_bootstrap(self, path: str) -> stream_lib.Subscriber:
+        meta = ckpt_lib.read_meta(path)
+        stored = meta.get("spec_hash")
+        if stored is not None and stored != self.spec_hash:
+            raise stream_lib.StreamSpecMismatch(
+                f"bootstrap {path} was written by a different RunSpec "
+                f"(hash {stored} != {self.spec_hash}); refusing to join a "
+                "foreign stream")
+        like = {"params": self._likes["params"],
+                "opt_state": self._likes["opt_state"]}
+        if "h" in self._likes:
+            like["ef_state"] = {"h": self._likes["h"]}
+        state, meta = ckpt_lib.restore(path, like)
+        return stream_lib.Subscriber(
+            self.log, self.spec_hash, self.legs, state["params"],
+            state["opt_state"], state.get("ef_state", {}).get("h"),
+            int(meta["step"]), self.optimizer)
+
+    # ------------------------------------------------------------------ sync
+    @property
+    def step(self) -> int:
+        return self.sub.step
+
+    @property
+    def params(self) -> PyTree:
+        return self.sub.params
+
+    def _target(self, upto: Optional[int]) -> Optional[int]:
+        last = self.log.last_step()
+        if last is None:
+            return None
+        target = max(0, last - self.lag)
+        return target if upto is None else min(target, int(upto))
+
+    def sync(self, upto: Optional[int] = None) -> int:
+        """Apply every record up to (head − lag); on a gap, resync via
+        checkpoint + replay. Returns steps advanced."""
+        target = self._target(upto)
+        if target is None or target <= self.step:
+            return 0
+        start = self.step
+        try:
+            self.sub.sync(upto=target)
+        except stream_lib.StreamGapError:
+            self.resync(target)
+        applied = self.step - start
+        if applied:
+            self.session.set_serve_params(self.sub.params)
+        return applied
+
+    def resync(self, target: int) -> int:
+        """Gap recovery: reload the newest bootstrap PAST the replica's
+        current step and replay forward — the replica re-enters the stream
+        bit-identical, never having applied records out of order. Raises
+        ``StreamGapError`` when no bootstrap bridges the gap (the replica
+        keeps its last consistent, honestly-stale model)."""
+        before = self.step
+        for b in sorted(self.log.bootstrap_steps(), reverse=True):
+            if b <= self.step or b > target:
+                continue
+            sub = self._load_bootstrap(self.log.bootstrap_path(b))
+            try:
+                sub.sync(upto=target)
+            except stream_lib.StreamGapError:
+                continue
+            self.sub = sub
+            self.session.set_serve_params(self.sub.params)
+            return self.step - before
+        raise stream_lib.StreamGapError(
+            f"replica {self.name!r} is at step {before} with a gap before "
+            f"step {target} and no bootstrap bridges it; refusing to skip "
+            "records (serving stays on the last consistent model)")
+
+    # ----------------------------------------------------------------- serve
+    def serve_batch(self, requests: Sequence[Request], prompt_len: int,
+                    decode_steps: int) -> Dict[str, Any]:
+        """One batched prefill+decode over ``requests`` at the replica's
+        current (synced) params. Prompts are right-padded/truncated to the
+        fleet's fixed ``prompt_len`` bucket."""
+        assert requests, "serve_batch needs at least one request"
+        vocab = self.session.cfg.vocab_size
+        toks = np.zeros((len(requests), prompt_len), dtype=np.int64)
+        for j, req in enumerate(requests):
+            row = np.asarray(req.tokens)[:prompt_len] % vocab
+            toks[j, :row.size] = row
+        return self.session.serve(tokens=jax.numpy.asarray(toks),
+                                  decode_steps=decode_steps)
+
+
+# ---------------------------------------------------------------------------
+# the fleet
+# ---------------------------------------------------------------------------
+
+class Fleet:
+    """N replicas subscribed to ONE wire stream at per-replica lags, served
+    round-robin under a shared decode-budget scheduler."""
+
+    def __init__(self, stream_dir: str, n_replicas: int = 2,
+                 lags: Optional[Sequence[int]] = None,
+                 decode_budget: int = 64, max_batch: int = 4,
+                 prompt_len: int = 32,
+                 bootstrap_step: Optional[int] = None):
+        lags = list(lags) if lags is not None else [0] * n_replicas
+        if len(lags) != n_replicas:
+            raise ValueError(f"{n_replicas} replicas but {len(lags)} lags")
+        self.replicas = [
+            ServeReplica(stream_dir, name=f"r{i}", lag=lags[i],
+                         bootstrap_step=bootstrap_step)
+            for i in range(n_replicas)]
+        self.scheduler = DecodeBudgetScheduler(decode_budget=decode_budget,
+                                               max_batch=max_batch)
+        self.prompt_len = int(prompt_len)
+
+    def sync(self) -> List[int]:
+        return [rep.sync() for rep in self.replicas]
+
+    def run(self, requests: Sequence[Request], sync_every: int = 1
+            ) -> Dict[str, Any]:
+        """Drive the request load through the fleet: arrivals are honored
+        against the wall clock, replicas sync (apply fresh wire records)
+        every ``sync_every`` batches, and each completed request records its
+        latency and the staleness (head − replica step) it was served at.
+        Returns the completed requests plus a QPS/p50/p99 summary."""
+        todo = collections.deque(sorted(requests, key=lambda r: r.arrival_s))
+        pending: Deque[Request] = collections.deque()
+        done: List[Request] = []
+        t0 = time.time()
+        batches = ri = 0
+        while todo or pending:
+            now = time.time() - t0
+            while todo and todo[0].arrival_s <= now:
+                pending.append(todo.popleft())
+            if not pending:
+                time.sleep(min(0.002, max(todo[0].arrival_s - now, 1e-4)))
+                continue
+            rep = self.replicas[ri % len(self.replicas)]
+            ri += 1
+            if sync_every and batches % sync_every == 0:
+                rep.sync()
+            batch, decode_steps = self.scheduler.admit(pending)
+            head = self.replicas[0].log.last_step() or 0
+            out = rep.serve_batch(batch, self.prompt_len, decode_steps)
+            t_done = time.time() - t0
+            for req, row in zip(batch, out["tokens"]):
+                req.t_done = t_done
+                req.latency_s = t_done - req.arrival_s
+                req.tokens_out = np.asarray(
+                    row)[:req.max_new_tokens + 1]
+                req.replica = rep.name
+                req.staleness = head - rep.step
+                done.append(req)
+            batches += 1
+        lat = np.array(sorted(r.latency_s for r in done)) if done \
+            else np.zeros(1)
+        wall = max((r.t_done for r in done), default=0.0)
+        stal = np.array([r.staleness for r in done]) if done else np.zeros(1)
+        return {
+            "requests": done,
+            "batches": batches,
+            "qps": len(done) / max(wall, 1e-9),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "staleness_mean": float(stal.mean()),
+            "staleness_max": int(stal.max()),
+        }

@@ -1,12 +1,23 @@
-"""Serving driver — a thin flags → RunSpec → Session shim.
+"""Serving driver — a thin flags → RunSpec → Session/Fleet shim.
+
+Static one-shot serve (the spec comes from flags):
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
       --batch 4 --prompt-len 128 --decode-steps 32
 
+Fleet mode — subscribe serving replicas to a wire stream a trainer is
+publishing (``repro.launch.train --publish-stream DIR``); the RunSpec comes
+from the stream's bootstrap checkpoint, NOT from flags:
+
+  PYTHONPATH=src python -m repro.launch.serve --serve-stream /tmp/wire \
+      --replicas 2 --lags 0,4 --requests 32 --rate 8 --decode-budget 64
+
 ``Session.serve`` routes prefill/decode through ``launch/build.py``'s
 ``build_prefill``/``build_decode`` on the spec's mesh, placing params, batch,
-and cache onto the production shardings (launch/shardings.py) — the old
-driver jitted unsharded lambdas and bypassed the sharding layer entirely.
+and cache onto the production shardings (launch/shardings.py). In fleet mode
+every replica's params stay bit-identical to the trainer's post-step model by
+applying the compressed wire records (DESIGN.md §12) — dense f32 weights are
+never pushed.
 """
 from __future__ import annotations
 
@@ -15,15 +26,59 @@ import argparse
 from repro.launch import spec as spec_lib
 
 
+def _fleet_main(args) -> None:
+    from repro.launch import fleet as fleet_lib  # defer the jax-heavy import
+
+    lags = [int(x) for x in args.lags.split(",")] if args.lags else None
+    fl = fleet_lib.Fleet(args.serve_stream, n_replicas=args.replicas,
+                         lags=lags, decode_budget=args.decode_budget,
+                         max_batch=args.batch, prompt_len=args.prompt_len)
+    fl.sync()
+    head = fl.replicas[0].log.last_step()
+    print(f"fleet of {len(fl.replicas)} replicas on {args.serve_stream} "
+          f"(head step {head}): "
+          + ", ".join(f"{r.name}@{r.step}(lag {r.lag})" for r in fl.replicas))
+
+    reqs = fleet_lib.synthetic_requests(
+        args.requests, rate=args.rate, prompt_len=args.prompt_len,
+        max_new_tokens=args.max_new_tokens,
+        vocab_size=fl.replicas[0].session.cfg.vocab_size)
+    out = fl.run(reqs, sync_every=args.sync_every)
+    print(f"{len(out['requests'])} requests in {out['batches']} batches: "
+          f"qps={out['qps']:.2f} p50={out['p50_ms']:.0f}ms "
+          f"p99={out['p99_ms']:.0f}ms staleness mean={out['staleness_mean']:.1f} "
+          f"max={out['staleness_max']}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser("repro.launch.serve")
     spec_lib.add_flags(ap)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static mode: serve batch; fleet mode: max batch "
+                         "per scheduler admit")
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--decode-steps", type=int, default=32)
+    # fleet mode
+    ap.add_argument("--serve-stream", default=None, metavar="DIR",
+                    help="subscribe a replica fleet to this wire stream "
+                         "(spec comes from its bootstrap, not from flags)")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--lags", default=None,
+                    help="comma-separated per-replica lags, e.g. '0,4'")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="request arrival rate (req/s); <=0 = all at t=0")
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--decode-budget", type=int, default=64)
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="apply fresh wire records every N serving batches")
     args = ap.parse_args(argv)
-    spec = spec_lib.RunSpec.from_args(args)
 
+    if args.serve_stream:
+        _fleet_main(args)
+        return
+
+    spec = spec_lib.RunSpec.from_args(args)
     from repro.launch.session import Session  # defer the jax-heavy import
     sess = Session(spec)
     out = sess.serve(batch=args.batch, prompt_len=args.prompt_len,

@@ -223,7 +223,16 @@ class Session:
         self._tr: Optional[Dict[str, Any]] = None
         self._last_saved_step: Optional[int] = None
         self._serve_cache: Dict[Any, Any] = {}
-        self._serve_params: Optional[PyTree] = None
+        # serve-param placement derives from ONE source of truth: the params
+        # version counter, bumped by every mutation path (step_once,
+        # restore_from, set_serve_params). serve() re-places exactly when the
+        # version moved — there is no second cache key to go stale.
+        self._params_version = 0
+        self._serve_params: Optional[PyTree] = None   # (version, placed tree)
+        self._serve_src: Optional[PyTree] = None      # injected serving tree
+        self._publisher = None                        # core/stream.py hook
+        self._publish_log = None
+        self._bootstrap_every = 0
 
     # ------------------------------------------------------------- assembly
     @staticmethod
@@ -362,12 +371,24 @@ class Session:
         """Advance exactly one training step; returns the step metrics.
         The unit benchmarks time (benchmarks/kernel_bench.py)."""
         tr = self._ensure_train()
+        h_prev = tr["ef_state"].get("h") if self._publisher is not None \
+            else None
         with self._ambient():
             batch = self.batch_for(self.step)
             (tr["params"], tr["opt_state"], tr["ef_state"], m) = tr["step_fn"](
                 tr["params"], tr["opt_state"], tr["ef_state"], batch,
                 jax.random.fold_in(tr["rng"], self.step), self.step)
         self.step += 1
+        self._params_version += 1
+        if self._publisher is not None:
+            # publish this round's downlink wire (verified bit-exact against
+            # the step's own h before anything hits the log)
+            self._publisher.publish(
+                self.step, tr["ef_state"]["server"], h_prev,
+                tr["ef_state"].get("h"))
+            if self._bootstrap_every \
+                    and self.step % self._bootstrap_every == 0:
+                self._write_bootstrap()
         return m
 
     def train(self, steps: int, log_every: int = 10, verbose: bool = False
@@ -421,6 +442,25 @@ class Session:
         return sum(losses) / max(len(losses), 1)
 
     # --------------------------------------------------------------- serving
+    def serve_source(self) -> PyTree:
+        """THE parameter tree serve() places — in priority order: the
+        injected serving tree (the wire-subscriber path, launch/fleet.py),
+        else the live training tree, else a fresh init. Every path that
+        mutates the answer bumps ``_params_version``, which is the only
+        cache key serve() consults."""
+        if self._serve_src is not None:
+            return self._serve_src
+        if self._tr is not None:
+            return self._tr["params"]
+        return model_lib.init_params(self.cfg, jax.random.PRNGKey(
+            self.spec.seed))
+
+    def set_serve_params(self, params: PyTree) -> None:
+        """Inject the tree serve() must use from now on (wire subscribers
+        push their post-apply params here between request batches)."""
+        self._serve_src = params
+        self._params_version += 1
+
     def serve(self, tokens=None, batch: int = 4, prompt_len: int = 128,
               decode_steps: int = 32) -> Dict[str, Any]:
         """Batched prefill + greedy decode THROUGH launch/build.py on the
@@ -459,16 +499,17 @@ class Session:
             lambda s: s.sharding, tree)
 
         with mesh_lib.mesh_context(mesh):
-            # placed params are cached and only refreshed when training
-            # advanced the step counter (untrained sessions key on -1):
-            # a serving loop never re-places an unchanged parameter tree
-            step_key = self.step if self._tr is not None else -1
+            # placed params are cached on the params VERSION — the single
+            # source of truth every mutation path bumps (step_once,
+            # restore_from, set_serve_params) — so a serving loop never
+            # re-places an unchanged tree and never serves a stale one
+            # (restoring a checkpoint at the same step counter used to slip
+            # past the old step-keyed cache)
             if self._serve_params is None \
-                    or self._serve_params[0] != step_key:
-                src = self._tr["params"] if self._tr is not None \
-                    else model_lib.init_params(cfg, rng)
+                    or self._serve_params[0] != self._params_version:
                 self._serve_params = (
-                    step_key, jax.device_put(src, shard_of(p_spec)))
+                    self._params_version,
+                    jax.device_put(self.serve_source(), shard_of(p_spec)))
             params = self._serve_params[1]
             raw = pipe_lib.with_prefix_embeds(cfg, {"tokens": tokens},
                                               pad_to=pad)
@@ -584,6 +625,52 @@ class Session:
         tr["opt_state"] = state["opt_state"]
         tr["ef_state"] = state["ef_state"]
         self.step = int(meta["step"])
+        # restored params are a new serving truth even when the step counter
+        # did not move — the version counter is what serve() keys on, and an
+        # injected serve tree (set_serve_params) is superseded by the restore
+        self._serve_src = None
+        self._params_version += 1
+
+    # -------------------------------------------------------- wire streaming
+    def publish_to(self, stream_dir: str, bootstrap_every: int = 0):
+        """Attach a core/stream.py Publisher: every subsequent step_once
+        appends this round's downlink wire records to ``stream_dir`` (one
+        per transport leg, verified bit-exact against the step's own h).
+        Writes a full-state bootstrap checkpoint into the stream whenever
+        the log has no records at or past the current step, so a replica can
+        join from the stream directory alone (checkpoint + replay);
+        ``bootstrap_every`` adds periodic re-bootstraps for cheaper
+        mid-stream joins and gap resyncs. Returns the WireLog."""
+        from repro.core import stream as stream_lib
+        tr = self._ensure_train()
+        efc = tr["efc"]
+        legs = stream_lib.resolve_legs(
+            tr["params"], schedule=efc.schedule,
+            down_carrier=efc.down_carrier,
+            down_compressor=efc.down_compressor)
+        log = stream_lib.WireLog(stream_dir)
+        self._publish_log = log
+        self._bootstrap_every = int(bootstrap_every)
+        last = log.last_step()
+        if last is None or last < self.step:
+            # nothing in the log can reach this trainer's state by replay:
+            # anchor the stream here so subscribers have a join point
+            self._write_bootstrap()
+        self._publisher = stream_lib.Publisher(
+            log, self.spec.spec_hash(), legs, tr["rng"])
+        return log
+
+    def _write_bootstrap(self) -> str:
+        """One full-state checkpoint INSIDE the stream directory — what
+        replicas join from and resync to (spec embedded, foreign-spec
+        refusal included, exactly like ckpt_dir checkpoints)."""
+        tr = self._ensure_train()
+        path = self._publish_log.bootstrap_path(self.step)
+        if not os.path.exists(path):
+            state = {"params": tr["params"], "opt_state": tr["opt_state"],
+                     "ef_state": tr["ef_state"]}
+            ckpt_lib.save(path, state, step=self.step, spec=self.spec)
+        return path
 
     @classmethod
     def resume(cls, ckpt_dir: str, spec: Optional[spec_lib.RunSpec] = None,

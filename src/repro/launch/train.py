@@ -38,6 +38,14 @@ def main(argv=None) -> None:
                          "the checkpoint's")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--publish-stream", default=None, metavar="DIR",
+                    help="publish every downlink wire record to this stream "
+                         "dir (core/stream.py) so serving replicas can "
+                         "subscribe (launch/fleet.py)")
+    ap.add_argument("--bootstrap-every", type=int, default=0,
+                    help="with --publish-stream: also write a bootstrap "
+                         "checkpoint into the stream every N steps (0 = "
+                         "only the initial one)")
     args = ap.parse_args(argv)
     spec = spec_lib.RunSpec.from_args(args)
 
@@ -102,6 +110,11 @@ def main(argv=None) -> None:
     if pp["mode"] != "full":
         print(f"participation mode={pp['mode']} fraction={pp['fraction']} "
               f"seed={pp['seed']} cohort={pp['cohort']}/{pp['n']} per round")
+
+    if args.publish_stream:
+        sess.publish_to(args.publish_stream,
+                        bootstrap_every=args.bootstrap_every)
+        print(f"publishing wire records to {args.publish_stream}")
 
     sess.train(args.steps, log_every=args.log_every, verbose=True)
     if sess.spec.ckpt_dir:

@@ -73,7 +73,7 @@ def test_checked_in_bench_ledgers_validate():
     sys.path.insert(0, ROOT)
     from benchmarks.common import validate_bench
     for name in ("BENCH_kernels.json", "BENCH_fused_round.json",
-                  "BENCH_roofline.json"):
+                  "BENCH_roofline.json", "BENCH_serving.json"):
         path = os.path.join(ROOT, name)
         assert os.path.exists(path), f"{name} missing from the repo root"
         with open(path) as f:
@@ -100,17 +100,40 @@ def test_ci_runs_bench_smoke_and_ledger_validation():
     assert "fused_round_bench --tiny" in ci, (
         "CI dropped the tiny fused-round bench")
     assert "roofline --tiny" in ci, "CI dropped the tiny roofline bench"
+    assert "serve_bench --tiny" in ci, "CI dropped the tiny serving bench"
     assert "benchmarks.common --validate" in ci, (
         "CI no longer validates the BENCH ledgers")
     for name in ("BENCH_kernels.json", "BENCH_fused_round.json",
-                 "BENCH_roofline.json"):
+                 "BENCH_roofline.json", "BENCH_serving.json"):
         assert name in ci, f"CI ledger gate no longer covers {name}"
     # every checked-in ledger must exist at the repo root so the CI
     # append+validate path starts from the committed state
     for name in ("BENCH_kernels.json", "BENCH_fused_round.json",
-                 "BENCH_roofline.json"):
+                 "BENCH_roofline.json", "BENCH_serving.json"):
         assert os.path.exists(os.path.join(ROOT, name)), (
             f"{name} is not checked in at the repo root")
+
+
+def test_ci_runs_streaming_smoke_and_serving_ledger_claim():
+    """ci.yml keeps the trainer→replica streaming e2e cell (train
+    --publish-stream feeding serve --serve-stream), and the checked-in
+    serving ledger records the acceptance claim: wire bytes per sync ≥ 20×
+    under a dense f32 push at quant4 (ISSUE 8)."""
+    import json
+    with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    assert "--publish-stream" in ci, (
+        "CI dropped the trainer-side streaming smoke (train "
+        "--publish-stream)")
+    assert "--serve-stream" in ci, (
+        "CI dropped the replica-side streaming smoke (serve --serve-stream)")
+    with open(os.path.join(ROOT, "BENCH_serving.json")) as f:
+        serving = json.load(f)
+    ratios = [r["speedup_vs_ref"]["wire_bytes_vs_dense_f32"]
+              for r in serving["runs"]
+              if "wire_bytes_vs_dense_f32" in r.get("speedup_vs_ref", {})]
+    assert ratios and max(ratios) >= 20.0, (
+        f"serving wire compression below the 20x acceptance bar: {ratios}")
 
 
 def test_ci_workflow_keeps_tier_gate_and_timing_report():

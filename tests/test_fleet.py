@@ -1,0 +1,272 @@
+"""Serving-fleet tests (launch/fleet.py + the session publish hook): the
+ISSUE 8 anchor invariant — after each applied wire record a replica's served
+params are BIT-IDENTICAL to the trainer's post-step model — over
+(dense, quant8, quant4) downlink × (uniform, mixed-schedule), mid-stream
+join via checkpoint+replay, trainer kill-and-resume republish, gap →
+resync-not-drift, and the decode-budget scheduler's admission rules."""
+import collections
+import os
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import stream as stream_lib
+from repro.launch import fleet as fleet_lib
+from repro.launch.fleet import DecodeBudgetScheduler, Request
+from repro.launch.session import Session
+from repro.launch.spec import RunSpec
+
+TINY = dict(arch="smollm-360m", smoke=True, clients=2, global_batch=4,
+            seq_len=32)
+QUANT4 = dict(compressor="block_topk", ratio=0.1,
+              downlink_carrier="quant4", downlink_ratio=0.05)
+MIXED_GROUPS = [
+    {"pattern": "norm|bias", "carrier": "dense"},
+    {"pattern": "embed", "carrier": "quant4", "ratio": 0.05},
+    {"pattern": "*", "carrier": "sparse", "ratio": 0.02,
+     "downlink_carrier": "quant4", "downlink_ratio": 0.05},
+]
+
+
+def _leaves_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def _publish_run(stream_dir, steps, snapshots=True, **spec_kw):
+    """Train a publishing session, returning (session, per-step param
+    snapshots {step: tree})."""
+    sess = Session(RunSpec(**TINY, **spec_kw))
+    sess.publish_to(str(stream_dir), bootstrap_every=2)
+    snaps = {}
+    for _ in range(steps):
+        sess.step_once()
+        if snapshots:
+            snaps[sess.step] = jax.device_get(sess.params)
+    return sess, snaps
+
+
+@pytest.fixture(scope="module")
+def quant4_stream(tmp_path_factory):
+    """One quant4 stream shared by the read-only fleet tests: 5 published
+    steps, bootstraps at 0/2/4, a snapshot of the trainer's params at every
+    step."""
+    root = tmp_path_factory.mktemp("wire_q4")
+    sess, snaps = _publish_run(root, steps=5, **QUANT4)
+    return {"dir": str(root), "snaps": snaps, "spec": sess.spec}
+
+
+# ---------------------------------------------------------------------------
+# the anchor invariant: bit-identity after every applied record
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_kw", [
+    pytest.param({}, id="uniform-dense"),
+    pytest.param(dict(compressor="block_topk", ratio=0.1,
+                      downlink_carrier="quant8", downlink_ratio=0.05),
+                 id="uniform-quant8"),
+    pytest.param(dict(groups=MIXED_GROUPS), id="mixed-schedule"),
+])
+def test_replica_bit_identical_after_every_record(tmp_path, spec_kw):
+    """Replay from the step-0 bootstrap, comparing the replica against the
+    trainer's snapshot after EVERY applied step — dense push, quant8
+    downlink, and the per-group mixed schedule all land exactly."""
+    _, snaps = _publish_run(tmp_path, steps=3, **spec_kw)
+    rep = fleet_lib.ServeReplica(str(tmp_path), bootstrap_step=0)
+    assert rep.step == 0
+    for step in (1, 2, 3):
+        assert rep.sync(upto=step) == 1
+        assert rep.step == step
+        assert _leaves_equal(rep.params, snaps[step]), \
+            f"replica drifted from trainer at step {step}"
+
+
+def test_replica_bit_identical_quant4_every_step(quant4_stream):
+    rep = fleet_lib.ServeReplica(quant4_stream["dir"], bootstrap_step=0)
+    for step in range(1, 6):
+        rep.sync(upto=step)
+        assert _leaves_equal(rep.params, quant4_stream["snaps"][step])
+
+
+def test_mid_stream_join_uses_newest_bootstrap(quant4_stream):
+    """A replica joining late must NOT replay from step 0: it joins from the
+    newest bootstrap (step 4 of 5) and lands bit-identical to the head."""
+    rep = fleet_lib.ServeReplica(quant4_stream["dir"])
+    assert rep.step == 4                       # joined mid-stream
+    rep.sync()
+    assert rep.step == 5
+    assert _leaves_equal(rep.params, quant4_stream["snaps"][5])
+
+
+def test_lagged_replica_joins_behind_and_stays_behind(quant4_stream):
+    rep = fleet_lib.ServeReplica(quant4_stream["dir"], lag=3)
+    rep.sync()
+    assert rep.step == 2                       # head 5 − lag 3
+    assert _leaves_equal(rep.params, quant4_stream["snaps"][2])
+
+
+def test_trainer_kill_and_resume_republish_is_idempotent(tmp_path):
+    """Kill the trainer after publishing step 3, resume from its step-2
+    checkpoint: the resumed run REPUBLISHES step 3 (verified bit-identical →
+    no-op, a diverged record would raise) and extends the stream; a replica
+    replaying the whole log lands on the resumed trainer's head."""
+    stream = tmp_path / "wire"
+    ckpt = tmp_path / "ckpt"
+    sess = Session(RunSpec(**TINY, **QUANT4, ckpt_dir=str(ckpt)))
+    sess.publish_to(str(stream), bootstrap_every=2)
+    sess.train(2)                              # checkpoints at step 2
+    sess.step_once()                           # publishes step 3, no ckpt
+    del sess                                   # "kill" after step 3
+    resumed = Session.resume(str(ckpt))
+    assert resumed.step == 2
+    resumed.publish_to(str(stream))
+    for _ in range(3):                         # steps 3 (republish), 4, 5
+        resumed.step_once()
+    log = stream_lib.WireLog(str(stream))
+    assert log.last_step() == 5
+    rep = fleet_lib.ServeReplica(str(stream), bootstrap_step=0)
+    rep.sync()
+    assert rep.step == 5
+    assert _leaves_equal(rep.params, resumed.params)
+
+
+# ---------------------------------------------------------------------------
+# gaps and foreign streams: resync-not-drift
+# ---------------------------------------------------------------------------
+
+def _mutable_copy(stream, tmp_path):
+    dst = tmp_path / "wire_copy"
+    shutil.copytree(stream["dir"], dst)
+    return str(dst)
+
+
+def test_gap_triggers_resync_via_later_bootstrap(quant4_stream, tmp_path):
+    """Delete the step-3 record set: a replica replaying from step 0 hits the
+    gap and must RESYNC from the step-4 bootstrap (checkpoint + replay),
+    landing bit-identical at the head — never skipping the missing step."""
+    d = _mutable_copy(quant4_stream, tmp_path)
+    log = stream_lib.WireLog(d)
+    os.remove(log.record_path(3, 0))
+    rep = fleet_lib.ServeReplica(d, bootstrap_step=0)
+    advanced = rep.sync()
+    assert rep.step == 5
+    assert advanced == 5                       # 2 replayed + resync to 4 + 1
+    assert _leaves_equal(rep.params, quant4_stream["snaps"][5])
+
+
+def test_unbridgeable_gap_raises_and_keeps_consistent_params(quant4_stream,
+                                                             tmp_path):
+    """A gap with NO bootstrap past it must raise StreamGapError, leaving the
+    replica on its last consistent (stale, never drifted) model."""
+    d = _mutable_copy(quant4_stream, tmp_path)
+    log = stream_lib.WireLog(d)
+    os.remove(log.record_path(3, 0))
+    for b in (2, 4):                           # only the step-0 anchor left
+        os.remove(log.bootstrap_path(b))
+    rep = fleet_lib.ServeReplica(d, bootstrap_step=0)
+    with pytest.raises(stream_lib.StreamGapError):
+        rep.sync()
+    assert rep.step == 2                       # applied 1..2, refused to skip 3
+    assert _leaves_equal(rep.params, quant4_stream["snaps"][2])
+
+
+def test_foreign_record_refused_loudly(quant4_stream, tmp_path):
+    """A record written under a different RunSpec hash must raise
+    StreamSpecMismatch — mirrors the checkpoint foreign-spec guard."""
+    d = _mutable_copy(quant4_stream, tmp_path)
+    log = stream_lib.WireLog(d)
+    rec5 = log.read(5, 0)
+    forged = stream_lib.WireRecord(**{
+        **rec5.__dict__, "step": 6, "spec_hash": "0" * 16})
+    log.append(forged)
+    rep = fleet_lib.ServeReplica(d)            # joins at bootstrap 4
+    with pytest.raises(stream_lib.StreamSpecMismatch):
+        rep.sync()
+
+
+def test_empty_stream_refuses_replica(tmp_path):
+    with pytest.raises(stream_lib.StreamError):
+        fleet_lib.ServeReplica(str(tmp_path / "nope"))
+
+
+# ---------------------------------------------------------------------------
+# decode-budget scheduler
+# ---------------------------------------------------------------------------
+
+def _queue(*max_new):
+    return collections.deque(
+        Request(rid=i, tokens=np.zeros(4, np.int64), max_new_tokens=m)
+        for i, m in enumerate(max_new))
+
+
+def test_scheduler_respects_budget_and_batch_cap():
+    sched = DecodeBudgetScheduler(decode_budget=16, max_batch=8)
+    q = _queue(4, 4, 4, 4, 4)
+    batch, d = sched.admit(q)
+    assert [r.rid for r in batch] == [0, 1, 2, 3]   # FIFO prefix
+    assert d == 4 and len(batch) * d <= 16
+    assert [r.rid for r in q] == [4]
+
+    sched = DecodeBudgetScheduler(decode_budget=64, max_batch=2)
+    batch, d = sched.admit(_queue(4, 4, 4))
+    assert len(batch) == 2                          # max_batch binds first
+
+
+def test_scheduler_buckets_decode_to_pow2():
+    sched = DecodeBudgetScheduler(decode_budget=64, max_batch=4)
+    batch, d = sched.admit(_queue(5, 3))
+    assert d == 8                                   # bucket of max(5, 3)
+    assert len(batch) == 2
+
+
+def test_scheduler_admits_oversized_request_alone_capped():
+    sched = DecodeBudgetScheduler(decode_budget=8, max_batch=4)
+    q = _queue(100, 2)
+    batch, d = sched.admit(q)
+    assert [r.rid for r in batch] == [0]
+    assert d == 8                                   # capped at the budget
+    batch, d = sched.admit(q)
+    assert [r.rid for r in batch] == [1] and d == 2
+
+
+def test_synthetic_requests_deterministic():
+    a = fleet_lib.synthetic_requests(5, rate=10.0, seed=3)
+    b = fleet_lib.synthetic_requests(5, rate=10.0, seed=3)
+    assert all(np.array_equal(x.tokens, y.tokens) and
+               x.arrival_s == y.arrival_s for x, y in zip(a, b))
+    assert all(a[i].arrival_s < a[i + 1].arrival_s for i in range(4))
+
+
+# ---------------------------------------------------------------------------
+# the fleet serves at lags
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fleet_serves_two_lagged_replicas(quant4_stream):
+    """Two replicas on ONE wire at lags (0, 2): every request completes, each
+    replica serves exactly its lag target's params, and the summary carries
+    the latency/staleness schema serve_bench records."""
+    fleet = fleet_lib.Fleet(quant4_stream["dir"], n_replicas=2, lags=(0, 2),
+                            decode_budget=8, max_batch=2, prompt_len=8)
+    fleet.sync()
+    assert [r.step for r in fleet.replicas] == [5, 3]
+    for rep in fleet.replicas:
+        assert _leaves_equal(rep.params, quant4_stream["snaps"][rep.step])
+    reqs = fleet_lib.synthetic_requests(4, rate=50.0, prompt_len=8,
+                                        max_new_tokens=4)
+    out = fleet.run(reqs, sync_every=1)
+    assert len(out["requests"]) == 4
+    assert out["batches"] >= 2
+    assert {r.replica for r in out["requests"]} == {"r0", "r1"}
+    assert all(r.tokens_out is not None and r.latency_s >= 0
+               for r in out["requests"])
+    assert out["staleness_max"] <= 2
+    assert out["p50_ms"] <= out["p99_ms"]
+
+
+def test_fleet_rejects_mismatched_lags(quant4_stream):
+    with pytest.raises(ValueError):
+        fleet_lib.Fleet(quant4_stream["dir"], n_replicas=2, lags=(0,))

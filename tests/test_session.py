@@ -173,6 +173,36 @@ def test_serve_runs_through_build_shardings():
     assert out["cache_bytes"] > 0
 
 
+def test_serve_params_track_same_step_state_changes(tmp_path):
+    """Regression for the step-keyed serve cache: ``_serve_params`` used to
+    key on the step counter, so restoring state or injecting a subscriber
+    tree WITHOUT moving the step served stale params. The cache now keys on
+    ``_params_version`` — the single source of truth every mutation path
+    (step_once, restore_from, set_serve_params) bumps."""
+    import jax.numpy as jnp
+
+    sess = Session(RunSpec(**TINY, ckpt_dir=str(tmp_path)))
+    sess.train(2)                                # checkpoints at step 2
+    path = ckpt_lib.latest(str(tmp_path))
+    sess.serve(batch=1, prompt_len=8, decode_steps=1)
+    trained = jax.device_get(sess._serve_params[1])
+
+    # inject a different tree at the SAME step (the wire-subscriber path):
+    # the step counter does not move, the served params must
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, sess.params)
+    sess.set_serve_params(zeros)
+    sess.serve(batch=1, prompt_len=8, decode_steps=1)
+    assert all(not np.any(np.asarray(leaf)) for leaf in
+               jax.tree_util.tree_leaves(sess._serve_params[1]))
+
+    # restore at the SAME step: the injected tree is superseded and serve
+    # returns to the checkpoint's params without the step counter moving
+    sess.restore_from(path)
+    assert sess.step == 2
+    sess.serve(batch=1, prompt_len=8, decode_steps=1)
+    assert _leaves_equal(sess._serve_params[1], trained)
+
+
 def test_lower_produces_dryrun_artifact_on_smoke_mesh():
     sess = Session(RunSpec(**TINY, carrier="sparse"))
     with sess.mesh_context():

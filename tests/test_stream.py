@@ -1,0 +1,224 @@
+"""Wire-transport tests (core/stream.py): record round-trip through the npz
+log, idempotent-vs-conflicting republish, gap/partial-step/out-of-order/
+foreign-spec refusal — the integrity rules that keep a replica from ever
+serving silently-drifted weights. Session-level streaming (publisher verify,
+bit-identity, resync) lives in test_fleet.py."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stream as stream_lib
+from repro.core.stream import (StreamGapError, StreamIntegrityError,
+                               StreamOrderError, StreamSpecMismatch,
+                               WireLog, WireRecord)
+from repro.optim import optimizer as opt_lib
+
+HASH = "deadbeef"
+
+
+def _rec(step=1, group="*", gi=0, n=1, kind="dense", payload=None,
+         spec_hash=HASH):
+    if payload is None:
+        rng = np.random.RandomState(step * 7 + gi)
+        payload = (rng.randn(6).astype(np.float32),
+                   (rng.randint(-8, 8, 12).astype(np.int8),
+                    rng.randn(3).astype(np.float32)))
+    return WireRecord(step=step, spec_hash=spec_hash, group=group,
+                      group_index=gi, n_records=n, kind=kind,
+                      payload=payload)
+
+
+# ---------------------------------------------------------------------------
+# log round-trip + republish semantics
+# ---------------------------------------------------------------------------
+
+def test_record_roundtrip_preserves_bits_and_structure(tmp_path):
+    """Bare arrays and tuple-of-component payloads (quant wires carry
+    (q, scales[, idx])) come back bit-identical with dtypes intact."""
+    log = WireLog(str(tmp_path))
+    rec = _rec(kind="delta")
+    assert log.append(rec) is True
+    got = log.read(1, 0)
+    assert stream_lib.records_equal(rec, got)
+    assert isinstance(got.payload[0], np.ndarray)
+    assert isinstance(got.payload[1], tuple)
+    assert got.payload[1][0].dtype == np.int8
+    assert stream_lib.record_nbytes(got) == stream_lib.record_nbytes(rec)
+
+
+def test_roundtrip_extension_dtype_bf16(tmp_path):
+    """bfloat16 payloads (ef-state-dtype runs) survive the f32 npz detour
+    losslessly — the checkpoint.py extension-dtype idiom."""
+    log = WireLog(str(tmp_path))
+    arr = jnp.asarray(np.random.RandomState(0).randn(16),
+                      dtype=jnp.bfloat16)
+    rec = _rec(payload=(np.asarray(arr),))
+    log.append(rec)
+    got = log.read(1, 0)
+    assert got.payload[0].dtype == arr.dtype
+    assert np.array_equal(np.asarray(got.payload[0]).view(np.uint16),
+                          np.asarray(arr).view(np.uint16))
+
+
+def test_append_is_idempotent_but_refuses_conflicts(tmp_path):
+    """Kill-and-resume republish: a bit-identical re-append is a no-op; a
+    record with the same (step, group) but different bits would fork the
+    stream and must raise."""
+    log = WireLog(str(tmp_path))
+    rec = _rec()
+    assert log.append(rec) is True
+    assert log.append(rec) is False          # republish: no-op
+    evil = _rec(payload=(np.zeros(6, np.float32),
+                         (np.zeros(12, np.int8), np.zeros(3, np.float32))))
+    with pytest.raises(StreamIntegrityError):
+        log.append(evil)
+    # the original bits survived the refused overwrite
+    assert stream_lib.records_equal(log.read(1, 0), rec)
+
+
+def test_missing_record_raises_gap(tmp_path):
+    log = WireLog(str(tmp_path))
+    log.append(_rec(step=1))
+    with pytest.raises(StreamGapError):
+        log.read(2, 0)
+    with pytest.raises(StreamGapError):
+        log.read_step(2)
+
+
+def test_partial_step_refused_and_hidden_from_last_step(tmp_path):
+    """A writer killed between the group files of one step leaves a partial
+    record set: read_step must refuse it and last_step must not surface it —
+    a half-published step applied would drift every subscriber."""
+    log = WireLog(str(tmp_path))
+    for gi in range(2):
+        log.append(_rec(step=1, gi=gi, n=2, group=f"g{gi}"))
+    log.append(_rec(step=2, gi=0, n=2, group="g0"))   # g1 never landed
+    assert len(log.read_step(1)) == 2
+    with pytest.raises(StreamIntegrityError):
+        log.read_step(2)
+    assert log.last_step() == 1
+
+
+def test_tmp_partials_are_never_listed(tmp_path):
+    """The atomic-write idiom: *.tmp.npz litter from a killed writer is
+    invisible to the listing."""
+    log = WireLog(str(tmp_path))
+    log.append(_rec(step=1))
+    os.makedirs(log.records_dir, exist_ok=True)
+    with open(os.path.join(log.records_dir, "xyz.tmp.npz"), "wb") as f:
+        f.write(b"garbage")
+    assert log.steps() == [1]
+    assert log.last_step() == 1
+
+
+def test_unknown_schema_refused(tmp_path):
+    log = WireLog(str(tmp_path))
+    log.append(_rec(step=1))
+    path = log.record_path(1, 0)
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    meta = b'{"stream": "wire/v999"}'
+    flat["__meta__"] = np.frombuffer(meta, dtype=np.uint8)
+    np.savez(path, **flat)
+    with pytest.raises(StreamIntegrityError):
+        log.read(1, 0)
+
+
+def test_bootstrap_listing_and_upto(tmp_path):
+    log = WireLog(str(tmp_path))
+    os.makedirs(log.bootstrap_dir, exist_ok=True)
+    for s in (0, 4, 8):
+        with open(log.bootstrap_path(s), "wb") as f:
+            f.write(b"x")
+    assert log.bootstrap_steps() == [0, 4, 8]
+    assert log.latest_bootstrap() == log.bootstrap_path(8)
+    assert log.latest_bootstrap(upto=5) == log.bootstrap_path(4)
+    assert log.latest_bootstrap(upto=-1) is None
+
+
+# ---------------------------------------------------------------------------
+# subscriber state machine (dense transport — no carrier needed)
+# ---------------------------------------------------------------------------
+
+def _dense_world():
+    params = {"w": jnp.arange(4, dtype=jnp.float32),
+              "b": jnp.ones(2, dtype=jnp.float32)}
+    legs = stream_lib.resolve_legs(params)          # one dense leg, no h
+    opt = opt_lib.make("sgd", lr=0.5)
+    return params, legs, opt
+
+
+def _dense_rec(step, params, scale=1.0):
+    leaves = [np.asarray(x, np.float32) * scale
+              for x in jax.tree_util.tree_leaves(params)]
+    return WireRecord(step=step, spec_hash=HASH, group="*", group_index=0,
+                      n_records=1, kind="dense", payload=tuple(leaves))
+
+
+def test_subscriber_applies_dense_record_through_optimizer():
+    """A dense record IS g_est: applying it must equal one
+    optimizer.update + apply_updates at the pre-increment step."""
+    params, legs, opt = _dense_world()
+    sub = stream_lib.Subscriber(WireLog("/nonexistent"), HASH, legs,
+                                params, opt.init(params), None, 0, opt)
+    rec = _dense_rec(1, params)
+    sub.apply([rec])
+    assert sub.step == 1
+    g_est = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params),
+        [jnp.asarray(x) for x in rec.payload])
+    updates, _ = opt.update(g_est, opt.init(params), params, 0)
+    want = opt_lib.apply_updates(params, updates)
+    for a, b in zip(jax.tree_util.tree_leaves(sub.params),
+                    jax.tree_util.tree_leaves(want)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_subscriber_refuses_out_of_order():
+    params, legs, opt = _dense_world()
+    sub = stream_lib.Subscriber(WireLog("/nonexistent"), HASH, legs,
+                                params, opt.init(params), None, 0, opt)
+    with pytest.raises(StreamOrderError):
+        sub.apply([_dense_rec(3, params)])       # skipping 1..2 would drift
+    sub.apply([_dense_rec(1, params)])
+    with pytest.raises(StreamOrderError):
+        sub.apply([_dense_rec(1, params)])       # replay of an applied step
+    assert sub.step == 1
+
+
+def test_subscriber_refuses_foreign_spec_hash():
+    params, legs, opt = _dense_world()
+    sub = stream_lib.Subscriber(WireLog("/nonexistent"), HASH, legs,
+                                params, opt.init(params), None, 0, opt)
+    rec = _dense_rec(1, params)
+    foreign = WireRecord(**{**rec.__dict__, "spec_hash": "cafebabe"})
+    with pytest.raises(StreamSpecMismatch):
+        sub.apply([foreign])
+
+
+def test_subscriber_refuses_wrong_kind_and_group_set():
+    params, legs, opt = _dense_world()
+    sub = stream_lib.Subscriber(WireLog("/nonexistent"), HASH, legs,
+                                params, opt.init(params), None, 0, opt)
+    rec = _dense_rec(1, params)
+    with pytest.raises(StreamIntegrityError):
+        sub.apply([WireRecord(**{**rec.__dict__, "kind": "delta"})])
+    with pytest.raises(StreamIntegrityError):
+        sub.apply([WireRecord(**{**rec.__dict__, "group_index": 7})])
+
+
+def test_subscriber_sync_walks_the_log_and_stops_at_gap(tmp_path):
+    params, legs, opt = _dense_world()
+    log = WireLog(str(tmp_path))
+    for s in (1, 2, 4):                          # 3 is the gap
+        log.append(_dense_rec(s, params, scale=0.1 * s))
+    sub = stream_lib.Subscriber(log, HASH, legs, params,
+                                opt.init(params), None, 0, opt)
+    assert sub.sync(upto=2) == 2
+    assert sub.step == 2
+    with pytest.raises(StreamGapError):
+        sub.sync()                               # needs 3, only 4 exists
+    assert sub.step == 2                         # still consistent, not drifted
