@@ -13,7 +13,12 @@ What is measured, per arrival rate:
 * the wire accounting that justifies streaming at all: broadcast words per
   sync (``core/stream.py::legs_wire_words`` — the same accounting the
   training downlink reports) vs a dense f32 weight push, as bytes and as a
-  compression ratio. The acceptance bar is ≥ 20× at quant4.
+  compression ratio. The acceptance bar is ≥ 20× at quant4;
+* the SAME load through a ``ProcessFleet`` of replica worker PROCESSES
+  (``launch/replica_worker.py``) tailing the stream over the transport
+  layer with continuous sync during decode — recorded under
+  ``serving_multiproc`` so the process boundary's cost sits next to the
+  in-process numbers it must be compared against.
 
 Every replica in the timed fleet serves params BIT-IDENTICAL to the
 trainer's post-step model at its lag (the invariant tests/test_fleet.py
@@ -100,6 +105,39 @@ def run(tiny: bool = False) -> dict:
                     f"qps={out['qps']:.2f};p99_ms={out['p99_ms']:.0f};"
                     f"staleness_max={out['staleness_max']}")
 
+        # the multi-process fleet on the SAME stream: worker processes tail
+        # the wire over launch/transport.py and sync continuously during
+        # decode — the transport's cost is measured against the in-process
+        # numbers above, not asserted away
+        mp_rate = rates[-1]
+        serving_mp = {}
+        with fleet_lib.ProcessFleet(
+                stream_dir, n_workers=2, lags=(0, 2),
+                decode_budget=decode_budget, max_batch=max_batch,
+                prompt_len=prompt_len) as pfl:
+            pfl.sync()
+            reqs = fleet_lib.synthetic_requests(
+                n_requests, rate=mp_rate, prompt_len=prompt_len,
+                max_new_tokens=max_new)
+            mp_out = pfl.run(reqs)
+        key = f"multiproc_rate{mp_rate:g}"
+        metrics[key] = _percentiles_ns(
+            [r.latency_s for r in mp_out["requests"]])
+        serving_mp[key] = {
+            "rate_req_s": mp_rate, "qps": mp_out["qps"],
+            "p50_ms": mp_out["p50_ms"], "p99_ms": mp_out["p99_ms"],
+            "batches": mp_out["batches"],
+            "staleness_mean": mp_out["staleness_mean"],
+            "staleness_max": mp_out["staleness_max"],
+            "workers": len(mp_out["workers"]),
+            "restarts": mp_out["restarts"],
+            "mid_applied": mp_out["mid_applied"],
+        }
+        csv_row(f"serve_bench_multiproc_rate{mp_rate:g}",
+                metrics[key]["median_ns"] / 1e3,
+                f"qps={mp_out['qps']:.2f};p99_ms={mp_out['p99_ms']:.0f};"
+                f"staleness_max={mp_out['staleness_max']}")
+
         run_entry = bench_run(
             geometry={"arch": fleet.replicas[0].spec.arch, "tiny": tiny,
                       "steps": steps, "requests": n_requests,
@@ -110,6 +148,7 @@ def run(tiny: bool = False) -> dict:
             metrics=metrics,
             speedup_vs_ref={"wire_bytes_vs_dense_f32": ratio_vs_dense})
         run_entry["serving"] = serving
+        run_entry["serving_multiproc"] = serving_mp
         run_entry["wire"] = {
             "wire_bytes_per_sync": wire_bytes,
             "dense_f32_push_bytes": dense_bytes,

@@ -41,6 +41,7 @@ from repro.checkpoint import checkpoint as ckpt_lib
 from repro.core import stream as stream_lib
 from repro.launch import session as session_lib
 from repro.launch import spec as spec_lib
+from repro.launch import transport as transport_lib
 from repro.models import model as model_lib
 from repro.optim import optimizer as opt_lib
 
@@ -66,6 +67,19 @@ class Request:
     replica: str = ""
     staleness: int = 0
     tokens_out: Optional[np.ndarray] = None
+    tokens_generated: int = 0           # may be < max_new_tokens (capped)
+
+
+def finalize_request(req: Request, row) -> None:
+    """Fill a request's generated tokens from one served row: at most
+    ``max_new_tokens`` tokens, and ``tokens_generated`` records how many the
+    decode budget actually allowed — an oversized lone request admitted with
+    capped decode completes SHORT, and the shortfall must be visible on the
+    request (and in ``run()``'s summary), never silently swallowed."""
+    avail = np.asarray(row)
+    take = min(req.max_new_tokens, int(avail.size))
+    req.tokens_out = avail[:take]
+    req.tokens_generated = take
 
 
 def _bucket(n: int) -> int:
@@ -135,27 +149,27 @@ class ServeReplica:
     the replica keeps serving its last CONSISTENT model (stale is honest,
     drift is not)."""
 
-    def __init__(self, stream_dir: str, name: str = "r0", lag: int = 0,
+    def __init__(self, stream, name: str = "r0", lag: int = 0,
                  bootstrap_step: Optional[int] = None):
-        self.log = stream_lib.WireLog(stream_dir)
+        self.tail = transport_lib.make_tail(stream)
         self.name = name
         self.lag = int(lag)
         if bootstrap_step is not None:
-            path = self.log.bootstrap_path(bootstrap_step)
+            path = self.tail.bootstrap_path(bootstrap_step)
         else:
             # a lagged replica joins at a bootstrap at-or-below its target
             # (head − lag) when one exists, so it starts BEHIND and stays
             # there; fall back to the newest bootstrap otherwise
-            head = self.log.last_step()
+            head = self.tail.last_step()
             path = None
             if self.lag > 0 and head is not None:
-                path = self.log.latest_bootstrap(
+                path = self.tail.latest_bootstrap(
                     upto=max(head - self.lag, 0))
             if path is None:
-                path = self.log.latest_bootstrap()
+                path = self.tail.latest_bootstrap()
         if path is None:
             raise stream_lib.StreamError(
-                f"stream {stream_dir!r} has no bootstrap checkpoint — a "
+                f"stream {stream!r} has no bootstrap checkpoint — a "
                 "replica cannot join (params never travel on the wire); "
                 "attach the trainer with Session.publish_to first")
         meta = ckpt_lib.read_meta(path)
@@ -166,33 +180,36 @@ class ServeReplica:
         self.spec_hash = self.spec.spec_hash()
         self.session = session_lib.Session(self.spec)
         self.optimizer = opt_lib.make(self.spec.optimizer, lr=self.spec.lr)
-        self._likes = self._like_trees()
-        self.legs = stream_lib.resolve_legs(
-            self._likes["params"],
-            schedule=session_lib.make_schedule(self.spec),
-            down_carrier=self.spec.downlink_carrier,
-            down_compressor=session_lib.make_down_compressor(self.spec))
+        self._likes, self.legs = self._like_trees()
         self.sub = self._load_bootstrap(path)
         self.session.set_serve_params(self.sub.params)
 
+    @property
+    def log(self):
+        """Back-compat alias: the read side of the stream (a StreamTail)."""
+        return self.tail
+
     # -------------------------------------------------------------- loading
-    def _like_trees(self) -> Dict[str, PyTree]:
+    def _like_trees(self) -> Tuple[Dict[str, PyTree], List[Any]]:
         """Shape/dtype templates via eval_shape — a replica restore never
         pays init_params, and never materializes the per-CLIENT EF state
         (``ef_state/clients``): only params, opt_state, and the broadcast
-        memory h leave the checkpoint."""
+        memory h leave the checkpoint. The transport legs are resolved once
+        against the same template and reused everywhere (they decide whether
+        the stream carries an h at all)."""
         cfg = self.session.cfg
         params_like = jax.eval_shape(
             lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
         opt_like = jax.eval_shape(self.optimizer.init, params_like)
+        legs = stream_lib.resolve_legs(
+            params_like,
+            schedule=session_lib.make_schedule(self.spec),
+            down_carrier=self.spec.downlink_carrier,
+            down_compressor=session_lib.make_down_compressor(self.spec))
         likes = {"params": params_like, "opt_state": opt_like}
-        if any(leg.carrier is not None for leg in stream_lib.resolve_legs(
-                params_like,
-                schedule=session_lib.make_schedule(self.spec),
-                down_carrier=self.spec.downlink_carrier,
-                down_compressor=session_lib.make_down_compressor(self.spec))):
+        if any(leg.carrier is not None for leg in legs):
             likes["h"] = params_like
-        return likes
+        return likes, legs
 
     def _load_bootstrap(self, path: str) -> stream_lib.Subscriber:
         meta = ckpt_lib.read_meta(path)
@@ -208,7 +225,7 @@ class ServeReplica:
             like["ef_state"] = {"h": self._likes["h"]}
         state, meta = ckpt_lib.restore(path, like)
         return stream_lib.Subscriber(
-            self.log, self.spec_hash, self.legs, state["params"],
+            self.tail, self.spec_hash, self.legs, state["params"],
             state["opt_state"], state.get("ef_state", {}).get("h"),
             int(meta["step"]), self.optimizer)
 
@@ -222,7 +239,7 @@ class ServeReplica:
         return self.sub.params
 
     def _target(self, upto: Optional[int]) -> Optional[int]:
-        last = self.log.last_step()
+        last = self.tail.last_step()
         if last is None:
             return None
         target = max(0, last - self.lag)
@@ -230,19 +247,20 @@ class ServeReplica:
 
     def sync(self, upto: Optional[int] = None) -> int:
         """Apply every record up to (head − lag); on a gap, resync via
-        checkpoint + replay. Returns steps advanced."""
+        checkpoint + replay. Returns steps advanced. The served params are
+        refreshed exactly once per path: the in-order path pushes them here,
+        the resync path pushes them itself (it may land on a different
+        Subscriber object)."""
         target = self._target(upto)
         if target is None or target <= self.step:
             return 0
         start = self.step
         try:
-            self.sub.sync(upto=target)
+            if self.sub.sync(upto=target):
+                self.session.set_serve_params(self.sub.params)
         except stream_lib.StreamGapError:
             self.resync(target)
-        applied = self.step - start
-        if applied:
-            self.session.set_serve_params(self.sub.params)
-        return applied
+        return self.step - start
 
     def resync(self, target: int) -> int:
         """Gap recovery: reload the newest bootstrap PAST the replica's
@@ -251,10 +269,10 @@ class ServeReplica:
         ``StreamGapError`` when no bootstrap bridges the gap (the replica
         keeps its last consistent, honestly-stale model)."""
         before = self.step
-        for b in sorted(self.log.bootstrap_steps(), reverse=True):
+        for b in sorted(self.tail.bootstrap_steps(), reverse=True):
             if b <= self.step or b > target:
                 continue
-            sub = self._load_bootstrap(self.log.bootstrap_path(b))
+            sub = self._load_bootstrap(self.tail.bootstrap_path(b))
             try:
                 sub.sync(upto=target)
             except stream_lib.StreamGapError:
@@ -267,20 +285,48 @@ class ServeReplica:
             f"step {target} and no bootstrap bridges it; refusing to skip "
             "records (serving stays on the last consistent model)")
 
+    def staleness(self) -> int:
+        """Head − replica step, explicitly 0 for an empty log (no records
+        published yet means there is nothing to be stale AGAINST — the old
+        ``last_step() or 0`` falsy coercion would have made a replica at
+        step 5 look −5 stale)."""
+        last = self.tail.last_step()
+        if last is None:
+            return 0
+        return max(int(last) - self.step, 0)
+
     # ----------------------------------------------------------------- serve
     def serve_batch(self, requests: Sequence[Request], prompt_len: int,
-                    decode_steps: int) -> Dict[str, Any]:
+                    decode_steps: int,
+                    sync_during_decode: bool = False) -> Dict[str, Any]:
         """One batched prefill+decode over ``requests`` at the replica's
         current (synced) params. Prompts are right-padded/truncated to the
-        fleet's fixed ``prompt_len`` bucket."""
+        fleet's fixed ``prompt_len`` bucket; the TRUE prompt lengths travel
+        with the batch, so the first generated token is read at each row's
+        real last prompt position — a prompt containing a genuine token 0 is
+        never conflated with padding. With ``sync_during_decode`` the
+        replica polls the tail between decode steps and applies any fresh
+        records (the remaining decode runs on the updated params); the
+        result carries ``mid_applied`` = steps applied mid-decode."""
         assert requests, "serve_batch needs at least one request"
         vocab = self.session.cfg.vocab_size
         toks = np.zeros((len(requests), prompt_len), dtype=np.int64)
+        lens = np.zeros((len(requests),), dtype=np.int32)
         for j, req in enumerate(requests):
             row = np.asarray(req.tokens)[:prompt_len] % vocab
             toks[j, :row.size] = row
-        return self.session.serve(tokens=jax.numpy.asarray(toks),
-                                  decode_steps=decode_steps)
+            lens[j] = max(int(row.size), 1)
+        applied = {"n": 0}
+        hook = None
+        if sync_during_decode:
+            def hook(i):
+                applied["n"] += self.sync()
+        out = self.session.serve(tokens=jax.numpy.asarray(toks),
+                                 prompt_lens=jax.numpy.asarray(lens),
+                                 decode_steps=decode_steps,
+                                 decode_hook=hook)
+        out["mid_applied"] = applied["n"]
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -291,7 +337,7 @@ class Fleet:
     """N replicas subscribed to ONE wire stream at per-replica lags, served
     round-robin under a shared decode-budget scheduler."""
 
-    def __init__(self, stream_dir: str, n_replicas: int = 2,
+    def __init__(self, stream, n_replicas: int = 2,
                  lags: Optional[Sequence[int]] = None,
                  decode_budget: int = 64, max_batch: int = 4,
                  prompt_len: int = 32,
@@ -300,7 +346,7 @@ class Fleet:
         if len(lags) != n_replicas:
             raise ValueError(f"{n_replicas} replicas but {len(lags)} lags")
         self.replicas = [
-            ServeReplica(stream_dir, name=f"r{i}", lag=lags[i],
+            ServeReplica(stream, name=f"r{i}", lag=lags[i],
                          bootstrap_step=bootstrap_step)
             for i in range(n_replicas)]
         self.scheduler = DecodeBudgetScheduler(decode_budget=decode_budget,
@@ -310,18 +356,28 @@ class Fleet:
     def sync(self) -> List[int]:
         return [rep.sync() for rep in self.replicas]
 
-    def run(self, requests: Sequence[Request], sync_every: int = 1
-            ) -> Dict[str, Any]:
+    def run(self, requests: Sequence[Request], sync_every: int = 1,
+            sync_during_decode: bool = False) -> Dict[str, Any]:
         """Drive the request load through the fleet: arrivals are honored
-        against the wall clock, replicas sync (apply fresh wire records)
-        every ``sync_every`` batches, and each completed request records its
-        latency and the staleness (head − replica step) it was served at.
+        against the wall clock, each replica syncs (applies fresh wire
+        records) on its OWN batch cadence — every ``sync_every`` batches IT
+        serves, counted per replica, so every replica syncs before its first
+        batch and no replica can be starved of syncs by the round-robin
+        phase (the old global ``batches % sync_every`` check advanced in
+        lockstep with the round-robin index, which left whole replicas
+        never-synced for ``n_replicas == sync_every``). Each completed
+        request records its latency, the staleness (head − replica step) it
+        was served at, and ``tokens_generated``; a request whose decode was
+        capped by the budget surfaces in the ``short_requests`` /
+        ``tokens_short`` summary fields. ``sync_during_decode`` additionally
+        applies fresh records BETWEEN decode steps (continuous sync).
         Returns the completed requests plus a QPS/p50/p99 summary."""
         todo = collections.deque(sorted(requests, key=lambda r: r.arrival_s))
         pending: Deque[Request] = collections.deque()
         done: List[Request] = []
         t0 = time.time()
         batches = ri = 0
+        served = [0] * len(self.replicas)   # per-replica batch counts
         while todo or pending:
             now = time.time() - t0
             while todo and todo[0].arrival_s <= now:
@@ -329,33 +385,208 @@ class Fleet:
             if not pending:
                 time.sleep(min(0.002, max(todo[0].arrival_s - now, 1e-4)))
                 continue
-            rep = self.replicas[ri % len(self.replicas)]
+            idx = ri % len(self.replicas)
+            rep = self.replicas[idx]
             ri += 1
-            if sync_every and batches % sync_every == 0:
+            if sync_every and served[idx] % sync_every == 0:
                 rep.sync()
             batch, decode_steps = self.scheduler.admit(pending)
-            head = self.replicas[0].log.last_step() or 0
-            out = rep.serve_batch(batch, self.prompt_len, decode_steps)
+            out = rep.serve_batch(batch, self.prompt_len, decode_steps,
+                                  sync_during_decode=sync_during_decode)
             t_done = time.time() - t0
+            staleness = rep.staleness()
             for req, row in zip(batch, out["tokens"]):
                 req.t_done = t_done
                 req.latency_s = t_done - req.arrival_s
-                req.tokens_out = np.asarray(
-                    row)[:req.max_new_tokens + 1]
+                finalize_request(req, row)
                 req.replica = rep.name
-                req.staleness = head - rep.step
+                req.staleness = staleness
                 done.append(req)
             batches += 1
-        lat = np.array(sorted(r.latency_s for r in done)) if done \
-            else np.zeros(1)
-        wall = max((r.t_done for r in done), default=0.0)
-        stal = np.array([r.staleness for r in done]) if done else np.zeros(1)
-        return {
-            "requests": done,
-            "batches": batches,
-            "qps": len(done) / max(wall, 1e-9),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "staleness_mean": float(stal.mean()),
-            "staleness_max": int(stal.max()),
-        }
+            served[idx] += 1
+        return _summary(done, batches)
+
+
+def _summary(done: List[Request], batches: int, **extra) -> Dict[str, Any]:
+    """The shared run-summary schema (in-process Fleet and ProcessFleet):
+    QPS/p50/p99, staleness, and the decode-budget shortfall accounting."""
+    lat = np.array(sorted(r.latency_s for r in done)) if done \
+        else np.zeros(1)
+    wall = max((r.t_done for r in done), default=0.0)
+    stal = np.array([r.staleness for r in done]) if done else np.zeros(1)
+    short = [r for r in done if r.tokens_generated < r.max_new_tokens]
+    return {
+        "requests": done,
+        "batches": batches,
+        "qps": len(done) / max(wall, 1e-9),
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "staleness_mean": float(stal.mean()),
+        "staleness_max": int(stal.max()),
+        "short_requests": len(short),
+        "tokens_short": int(sum(r.max_new_tokens - r.tokens_generated
+                                for r in short)),
+        **extra,
+    }
+
+
+# ---------------------------------------------------------------------------
+# the multi-process fleet
+# ---------------------------------------------------------------------------
+
+class ProcessFleet:
+    """N replica WORKER PROCESSES on one wire stream (DESIGN.md §12): each
+    worker is a ``python -m repro.launch.replica_worker`` subprocess running
+    its own ``ServeReplica`` over a transport tail, reporting heartbeats to
+    this parent. The parent admits request batches under the shared
+    decode-budget scheduler and dispatches them to idle workers — batches
+    genuinely overlap across processes, which is what "past one process"
+    buys. Workers serve with CONTINUOUS sync (records applied between decode
+    steps), a crashed worker is restarted and rejoins via checkpoint +
+    replay (bit-identical — the §12 anchor invariant across a process
+    boundary), and its in-flight batch is requeued at the head of the
+    pending queue, so a crash costs latency, never a lost or
+    drifted-weights request."""
+
+    def __init__(self, stream, n_workers: int = 2,
+                 lags: Optional[Sequence[int]] = None,
+                 decode_budget: int = 64, max_batch: int = 4,
+                 prompt_len: int = 32,
+                 bootstrap_step: Optional[int] = None,
+                 heartbeat_s: float = 0.25, hb_timeout_s: float = 120.0,
+                 start_timeout_s: float = 300.0):
+        from repro.launch import replica_worker as worker_lib
+
+        lags = list(lags) if lags is not None else [0] * n_workers
+        if len(lags) != n_workers:
+            raise ValueError(f"{n_workers} workers but {len(lags)} lags")
+        self.workers = [
+            worker_lib.WorkerHandle(
+                str(stream), name=f"w{i}", lag=lags[i],
+                bootstrap_step=bootstrap_step, prompt_len=prompt_len,
+                heartbeat_s=heartbeat_s, start_timeout_s=start_timeout_s)
+            for i in range(n_workers)]
+        self.scheduler = DecodeBudgetScheduler(decode_budget=decode_budget,
+                                               max_batch=max_batch)
+        self.prompt_len = int(prompt_len)
+        self.hb_timeout_s = float(hb_timeout_s)
+        for w in self.workers:
+            w.wait_ready()
+
+    # ------------------------------------------------------------- lifecycle
+    def __enter__(self) -> "ProcessFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def stop(self) -> None:
+        for w in self.workers:
+            w.stop()
+
+    def sync(self) -> List[int]:
+        return [w.call({"cmd": "sync"})["applied"] for w in self.workers]
+
+    def digests(self) -> List[str]:
+        return [w.call({"cmd": "digest"})["digest"] for w in self.workers]
+
+    # ------------------------------------------------------------------- run
+    def _restart(self, w, inflight: Dict[Any, Any],
+                 pending: Deque[Request]) -> None:
+        """Restart a dead/hung worker; its in-flight batch (if any) goes
+        back to the FRONT of the queue so those requests are served next."""
+        entry = inflight.pop(w, None)
+        if entry is not None:
+            for req in reversed(entry["batch"]):
+                pending.appendleft(req)
+        w.restart()
+
+    def run(self, requests: Sequence[Request],
+            sync_during_decode: bool = True) -> Dict[str, Any]:
+        """Drive the load: arrivals against the wall clock, batches admitted
+        under the decode budget and dispatched to IDLE workers (true
+        multi-process overlap), results collected as they complete. Workers
+        sync continuously during decode; staleness is reported by the worker
+        at batch completion. Summary schema matches ``Fleet.run`` plus
+        ``restarts`` and ``mid_applied``."""
+        from repro.launch import replica_worker as worker_lib
+
+        todo = collections.deque(sorted(requests, key=lambda r: r.arrival_s))
+        pending: Deque[Request] = collections.deque()
+        done: List[Request] = []
+        inflight: Dict[Any, Dict[str, Any]] = {}
+        t0 = time.time()
+        batches = 0
+        mid_applied = 0
+        while todo or pending or inflight:
+            now = time.time() - t0
+            while todo and todo[0].arrival_s <= now:
+                pending.append(todo.popleft())
+            # health: restart dead (or heartbeat-silent) workers, requeueing
+            # their in-flight batch
+            for w in self.workers:
+                dead = not w.alive()
+                hung = (w in inflight and self.hb_timeout_s
+                        and w.hb_age() > self.hb_timeout_s)
+                if dead or hung:
+                    self._restart(w, inflight, pending)
+            # dispatch to every idle worker while there is work
+            for w in self.workers:
+                if not pending:
+                    break
+                if w in inflight or not w.alive():
+                    continue
+                batch, decode_steps = self.scheduler.admit(pending)
+                if not batch:
+                    break
+                cmd = {"cmd": "serve",
+                       "requests": [{"rid": r.rid,
+                                     "tokens": np.asarray(r.tokens).tolist(),
+                                     "max_new_tokens": r.max_new_tokens}
+                                    for r in batch],
+                       "decode_steps": decode_steps,
+                       "prompt_len": self.prompt_len,
+                       "sync_during_decode": sync_during_decode}
+                try:
+                    mid = w.submit(cmd)
+                except worker_lib.WorkerDied:
+                    for req in reversed(batch):
+                        pending.appendleft(req)
+                    continue                   # health pass restarts it
+                inflight[w] = {"batch": batch, "id": mid,
+                               "decode_steps": decode_steps}
+            # collect
+            got_reply = False
+            for w in list(inflight):
+                msg = w.take_reply(timeout=0.0)
+                if msg is None:
+                    continue
+                entry = inflight[w]
+                if msg.get("id") != entry["id"] or not msg.get("ok"):
+                    # a failed serve (or stale reply) — requeue and restart
+                    self._restart(w, inflight, pending)
+                    continue
+                inflight.pop(w)
+                got_reply = True
+                t_done = time.time() - t0
+                head, step = msg.get("head"), msg.get("step", 0)
+                staleness = 0 if head is None else max(int(head) - step, 0)
+                mid_applied += int(msg.get("mid_applied", 0))
+                by_rid = {r.rid: r for r in entry["batch"]}
+                for rid, toks, ngen in zip(msg["rids"], msg["tokens"],
+                                           msg["tokens_generated"]):
+                    req = by_rid[rid]
+                    req.t_done = t_done
+                    req.latency_s = t_done - req.arrival_s
+                    req.tokens_out = np.asarray(toks, dtype=np.int64)
+                    req.tokens_generated = int(ngen)
+                    req.replica = w.name
+                    req.staleness = staleness
+                    done.append(req)
+                batches += 1
+            if not got_reply:
+                time.sleep(0.002)
+        return _summary(done, batches,
+                        restarts=sum(w.restarts for w in self.workers),
+                        mid_applied=mid_applied,
+                        workers=[w.name for w in self.workers])

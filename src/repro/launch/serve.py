@@ -26,10 +26,41 @@ import argparse
 from repro.launch import spec as spec_lib
 
 
+def _print_summary(out) -> None:
+    line = (f"{len(out['requests'])} requests in {out['batches']} batches: "
+            f"qps={out['qps']:.2f} p50={out['p50_ms']:.0f}ms "
+            f"p99={out['p99_ms']:.0f}ms "
+            f"staleness mean={out['staleness_mean']:.1f} "
+            f"max={out['staleness_max']}")
+    if out.get("short_requests"):
+        line += (f" SHORT={out['short_requests']} "
+                 f"(-{out['tokens_short']} tok)")
+    if "restarts" in out:
+        line += f" restarts={out['restarts']}"
+    print(line)
+
+
 def _fleet_main(args) -> None:
     from repro.launch import fleet as fleet_lib  # defer the jax-heavy import
 
     lags = [int(x) for x in args.lags.split(",")] if args.lags else None
+    if args.processes:
+        with fleet_lib.ProcessFleet(
+                args.serve_stream, n_workers=args.replicas, lags=lags,
+                decode_budget=args.decode_budget, max_batch=args.batch,
+                prompt_len=args.prompt_len) as fl:
+            steps = [w.step for w in fl.workers]
+            print(f"fleet of {len(fl.workers)} worker PROCESSES on "
+                  f"{args.serve_stream}: "
+                  + ", ".join(f"{w.name}@{s}(lag {w.lag})"
+                              for w, s in zip(fl.workers, steps)))
+            reqs = fleet_lib.synthetic_requests(
+                args.requests, rate=args.rate, prompt_len=args.prompt_len,
+                max_new_tokens=args.max_new_tokens)
+            out = fl.run(reqs)
+        _print_summary(out)
+        return
+
     fl = fleet_lib.Fleet(args.serve_stream, n_replicas=args.replicas,
                          lags=lags, decode_budget=args.decode_budget,
                          max_batch=args.batch, prompt_len=args.prompt_len)
@@ -44,10 +75,7 @@ def _fleet_main(args) -> None:
         max_new_tokens=args.max_new_tokens,
         vocab_size=fl.replicas[0].session.cfg.vocab_size)
     out = fl.run(reqs, sync_every=args.sync_every)
-    print(f"{len(out['requests'])} requests in {out['batches']} batches: "
-          f"qps={out['qps']:.2f} p50={out['p50_ms']:.0f}ms "
-          f"p99={out['p99_ms']:.0f}ms staleness mean={out['staleness_mean']:.1f} "
-          f"max={out['staleness_max']}")
+    _print_summary(out)
 
 
 def main(argv=None) -> None:
@@ -71,7 +99,13 @@ def main(argv=None) -> None:
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--decode-budget", type=int, default=64)
     ap.add_argument("--sync-every", type=int, default=1,
-                    help="apply fresh wire records every N serving batches")
+                    help="apply fresh wire records every N serving batches "
+                         "(per replica; in-process fleet only)")
+    ap.add_argument("--processes", action="store_true",
+                    help="run each replica as its own worker PROCESS "
+                         "(repro.launch.replica_worker) tailing the stream "
+                         "over the transport layer, with continuous sync "
+                         "during decode")
     args = ap.parse_args(argv)
 
     if args.serve_stream:

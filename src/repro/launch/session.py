@@ -462,12 +462,22 @@ class Session:
         self._params_version += 1
 
     def serve(self, tokens=None, batch: int = 4, prompt_len: int = 128,
-              decode_steps: int = 32) -> Dict[str, Any]:
+              decode_steps: int = 32, prompt_lens=None,
+              decode_hook=None) -> Dict[str, Any]:
         """Batched prefill + greedy decode THROUGH launch/build.py on the
         session mesh: inputs/params/cache are placed onto the
         ``build_prefill``/``build_decode`` shardings (trivial on the 1-device
         smoke mesh, real placement on pod meshes) instead of jitting
-        unsharded lambdas. Returns token ids + timings."""
+        unsharded lambdas. Returns token ids + timings.
+
+        ``prompt_lens`` (per-row true lengths, ≤ S) makes prefill read each
+        row's logits at its LAST REAL token instead of the padded tail, so
+        right-padding never contaminates the first generated token (padding
+        with id 0 is indistinguishable from a real vocab-0 token otherwise).
+        ``decode_hook(i)`` is called between decode steps — the continuous
+        wire-sync point (launch/fleet.py): if the hook moves the params
+        version (set_serve_params), the remaining steps decode with the
+        fresh tree."""
         cfg, mesh, spec = self.cfg, self.mesh, self.spec
         rng = jax.random.PRNGKey(spec.seed)
         if tokens is None:
@@ -513,7 +523,13 @@ class Session:
             params = self._serve_params[1]
             raw = pipe_lib.with_prefix_embeds(cfg, {"tokens": tokens},
                                               pad_to=pad)
-            batch_in = jax.device_put(raw, shard_of(b_spec))
+            batch_in = dict(jax.device_put(raw, shard_of(b_spec)))
+            if prompt_lens is not None:
+                # not part of b_spec (the lowered sharding tree) — a small
+                # replicated int32 vector placed with default sharding; the
+                # jitted prefill retraces once for the extra pytree key
+                batch_in["prompt_lens"] = jax.device_put(
+                    jnp.asarray(prompt_lens, jnp.int32))
             cache = jax.device_put(
                 model_lib.init_cache(cfg, B, n_prefix + S + decode_steps),
                 shard_of(c_spec))
@@ -528,6 +544,16 @@ class Session:
             out_tokens = [tok]
             t0 = time.time()
             for i in range(decode_steps):
+                if decode_hook is not None:
+                    # continuous sync: the hook may apply fresh wire records
+                    # (bumping the params version) between decode steps
+                    decode_hook(i)
+                    if self._serve_params[0] != self._params_version:
+                        self._serve_params = (
+                            self._params_version,
+                            jax.device_put(self.serve_source(),
+                                           shard_of(p_spec)))
+                        params = self._serve_params[1]
                 pos = jnp.asarray(n_prefix + S + i, jnp.int32)
                 logits, cache = decode(params, cache, tok, pos)
                 tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]

@@ -1,0 +1,386 @@
+"""Stream transports — how a replica TAILS the wire log across process (and
+host) boundaries (DESIGN.md §12).
+
+PR 8's ``ServeReplica`` read the ``WireLog`` directory directly, which quietly
+assumed every replica lives in the publisher's process (or at least shares a
+cwd-relative path). This module makes the read side a first-class interface:
+
+  * ``StreamTail`` — the read-only transport contract a subscriber needs:
+    ``last_step`` / ``read_step`` (exactly the surface
+    ``core/stream.py::Subscriber`` consumes) plus the bootstrap listing and a
+    LOCAL filesystem path to any bootstrap checkpoint (``bootstrap_path`` —
+    remote backends download into a cache so ``checkpoint.restore`` never
+    learns about sockets).
+  * ``FileTail`` — the shared-filesystem backend: a file-watch poller over a
+    ``WireLog`` that caches the verified head keyed on the record listing, so
+    a replica polling between decode steps pays one ``listdir`` per poll, not
+    a re-verification of the newest step's npz files.
+  * ``SocketTail`` / ``TailServer`` — the RPC backend: a line-JSON +
+    length-prefixed-binary protocol over TCP. The server ships record and
+    bootstrap FILES verbatim; the client mirrors them into a local cache
+    directory and parses through its own ``WireLog``, so both backends run
+    the identical decode path and every integrity rule (partial-step refusal,
+    schema checks, idempotent overwrite refusal) is enforced by the same
+    code. Records are immutable once complete, which makes the mirror safe:
+    a fetched file never needs re-fetching.
+
+``make_tail`` picks the backend from the address: ``tcp://host:port`` → RPC,
+anything else → a stream directory. ``python -m repro.launch.transport DIR
+--port P`` exposes a stream directory to remote tails.
+"""
+from __future__ import annotations
+
+import abc
+import json
+import os
+import re
+import socket
+import socketserver
+import struct
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import stream as stream_lib
+
+
+# ---------------------------------------------------------------------------
+# the interface
+# ---------------------------------------------------------------------------
+
+class StreamTail(abc.ABC):
+    """Read-side transport of one wire stream. The record methods mirror
+    ``WireLog`` exactly (a ``Subscriber`` takes either); the bootstrap
+    methods always resolve to LOCAL paths so checkpoint restore stays
+    transport-agnostic."""
+
+    @abc.abstractmethod
+    def last_step(self) -> Optional[int]:
+        """Newest step whose record set is complete (None = no records)."""
+
+    @abc.abstractmethod
+    def read_step(self, step: int) -> List[stream_lib.WireRecord]:
+        """Every group record of one step (StreamGapError when absent)."""
+
+    @abc.abstractmethod
+    def bootstrap_steps(self) -> List[int]:
+        """Steps with a bootstrap checkpoint, sorted ascending."""
+
+    @abc.abstractmethod
+    def bootstrap_path(self, step: int) -> str:
+        """LOCAL filesystem path to the bootstrap for ``step`` (remote
+        backends fetch into their cache first)."""
+
+    def latest_bootstrap(self, upto: Optional[int] = None) -> Optional[str]:
+        steps = [s for s in self.bootstrap_steps()
+                 if upto is None or s <= upto]
+        return self.bootstrap_path(steps[-1]) if steps else None
+
+    def close(self) -> None:
+        """Release transport resources (sockets, cache dirs stay)."""
+
+
+# ---------------------------------------------------------------------------
+# file backend — the shared-filesystem poller
+# ---------------------------------------------------------------------------
+
+class FileTail(StreamTail):
+    """Poll a ``WireLog`` directory. ``last_step`` caches the verified head
+    keyed on the newest step's record listing: an unchanged directory costs
+    one ``listdir``, never a re-load of record files — cheap enough to call
+    between decode steps (the continuous-sync path in launch/fleet.py)."""
+
+    def __init__(self, root: str):
+        self.log = stream_lib.WireLog(root)
+        self._key: Optional[Tuple[int, Tuple[int, ...]]] = None
+        self._head: Optional[int] = None
+
+    def last_step(self) -> Optional[int]:
+        listing = self.log._listing()
+        if not listing:
+            self._key = self._head = None
+            return None
+        newest = max(listing)
+        key = (newest, tuple(sorted(listing[newest])))
+        if key != self._key:
+            self._head = self.log.last_step()
+            self._key = key
+        return self._head
+
+    def read_step(self, step: int) -> List[stream_lib.WireRecord]:
+        return self.log.read_step(step)
+
+    def bootstrap_steps(self) -> List[int]:
+        return self.log.bootstrap_steps()
+
+    def bootstrap_path(self, step: int) -> str:
+        return self.log.bootstrap_path(step)
+
+
+# ---------------------------------------------------------------------------
+# socket RPC backend
+# ---------------------------------------------------------------------------
+#
+# Framing: each request is one JSON line. Each response is one JSON header
+# line ({"ok": bool, ...}; on ok=False an "error" field) followed, for file
+# ops, by the raw bytes of every file in header["files"] order, each
+# prefixed with an 8-byte big-endian length. Connections are persistent.
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise stream_lib.StreamError("transport connection closed "
+                                         "mid-frame")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def _recv_line(sock: socket.socket, buf: bytearray) -> bytes:
+    while b"\n" not in buf:
+        chunk = sock.recv(65536)
+        if not chunk:
+            raise stream_lib.StreamError("transport connection closed "
+                                         "mid-line")
+        buf.extend(chunk)
+    line, _, rest = bytes(buf).partition(b"\n")
+    buf.clear()
+    buf.extend(rest)
+    return line
+
+
+class _TailHandler(socketserver.StreamRequestHandler):
+    def handle(self):
+        tail: FileTail = self.server.tail            # type: ignore[attr-defined]
+        log = tail.log
+        for raw in self.rfile:
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                req = json.loads(raw.decode())
+                op = req.get("op")
+                if op == "head":
+                    self._reply({"ok": True, "head": tail.last_step()})
+                elif op == "bootstraps":
+                    self._reply({"ok": True, "steps": tail.bootstrap_steps()})
+                elif op == "step_files":
+                    step = int(req["step"])
+                    present = sorted(log._listing().get(step, []))
+                    paths = [log.record_path(step, gi) for gi in present]
+                    self._reply_files([(os.path.basename(p), p)
+                                       for p in paths])
+                elif op == "bootstrap_file":
+                    path = log.bootstrap_path(int(req["step"]))
+                    if not os.path.exists(path):
+                        self._reply({"ok": False,
+                                     "error": f"no bootstrap {path}"})
+                    else:
+                        self._reply_files([(os.path.basename(path), path)])
+                else:
+                    self._reply({"ok": False, "error": f"unknown op {op!r}"})
+            except BrokenPipeError:
+                return
+            except Exception as e:                   # noqa: BLE001 — RPC edge
+                try:
+                    self._reply({"ok": False, "error": repr(e)})
+                except OSError:
+                    return
+
+    def _reply(self, header: Dict[str, Any]) -> None:
+        self.wfile.write(json.dumps(header).encode() + b"\n")
+        self.wfile.flush()
+
+    def _reply_files(self, files: List[Tuple[str, str]]) -> None:
+        blobs = []
+        meta = []
+        for name, path in files:
+            with open(path, "rb") as f:
+                data = f.read()
+            blobs.append(data)
+            meta.append({"name": name, "size": len(data)})
+        self._reply({"ok": True, "files": meta})
+        for data in blobs:
+            self.wfile.write(struct.pack(">Q", len(data)))
+            self.wfile.write(data)
+        self.wfile.flush()
+
+
+class TailServer:
+    """Expose one stream directory to ``SocketTail`` clients. Threaded —
+    each replica keeps a persistent connection."""
+
+    def __init__(self, root: str, host: str = "127.0.0.1", port: int = 0):
+        self._srv = socketserver.ThreadingTCPServer(
+            (host, port), _TailHandler, bind_and_activate=True)
+        self._srv.daemon_threads = True
+        self._srv.tail = FileTail(root)              # type: ignore[attr-defined]
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def address(self) -> str:
+        host, port = self._srv.server_address[:2]
+        return f"tcp://{host}:{port}"
+
+    def start(self) -> "TailServer":
+        self._thread = threading.Thread(target=self._srv.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._srv.shutdown()
+        self._srv.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+
+
+class SocketTail(StreamTail):
+    """Tail a remote stream over the TailServer RPC, mirroring fetched
+    record/bootstrap files into ``cache_dir`` and parsing them through a
+    local ``WireLog`` — one decode path, both transports."""
+
+    def __init__(self, host: str, port: int,
+                 cache_dir: Optional[str] = None):
+        self.addr = (host, int(port))
+        self.cache_dir = cache_dir or tempfile.mkdtemp(prefix="wire_tail_")
+        self.mirror = stream_lib.WireLog(self.cache_dir)
+        self._sock: Optional[socket.socket] = None
+        self._buf = bytearray()
+        self._complete: set = set()
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ rpc
+    def _connect(self) -> socket.socket:
+        if self._sock is None:
+            self._sock = socket.create_connection(self.addr, timeout=30)
+            self._buf.clear()
+        return self._sock
+
+    def _call(self, op: str, **kw) -> Tuple[Dict[str, Any], List[bytes]]:
+        with self._lock:
+            try:
+                return self._call_once(op, **kw)
+            except (OSError, stream_lib.StreamError):
+                # one reconnect: the server may have restarted between polls
+                self.close_socket()
+                return self._call_once(op, **kw)
+
+    def _call_once(self, op: str, **kw) -> Tuple[Dict[str, Any], List[bytes]]:
+        sock = self._connect()
+        sock.sendall(json.dumps({"op": op, **kw}).encode() + b"\n")
+        header = json.loads(_recv_line(sock, self._buf).decode())
+        if not header.get("ok"):
+            raise stream_lib.StreamError(
+                f"tail rpc {op!r} failed: {header.get('error')}")
+        blobs: List[bytes] = []
+        for meta in header.get("files", []):
+            # the length prefix and the size in the header must agree — a
+            # mismatch means a corrupt frame, never silently resync
+            n = struct.unpack(">Q", self._pull(8))[0]
+            if n != meta["size"]:
+                raise stream_lib.StreamIntegrityError(
+                    f"tail rpc frame size {n} != header size {meta['size']}")
+            blobs.append(self._pull(n))
+        return header, blobs
+
+    def _pull(self, n: int) -> bytes:
+        if len(self._buf) >= n:
+            out = bytes(self._buf[:n])
+            del self._buf[:n]
+            return out
+        need = n - len(self._buf)
+        out = bytes(self._buf) + _recv_exact(self._sock, need)
+        self._buf.clear()
+        return out
+
+    def _mirror_file(self, subdir: str, name: str, data: bytes) -> str:
+        d = os.path.join(self.cache_dir, subdir)
+        os.makedirs(d, exist_ok=True)
+        path = os.path.join(d, name)
+        if not os.path.exists(path):
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp.npz")
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        return path
+
+    # ------------------------------------------------------------ interface
+    def last_step(self) -> Optional[int]:
+        header, _ = self._call("head")
+        return header["head"]
+
+    def read_step(self, step: int) -> List[stream_lib.WireRecord]:
+        if step not in self._complete:
+            header, blobs = self._call("step_files", step=step)
+            for meta, data in zip(header["files"], blobs):
+                self._mirror_file("records", meta["name"], data)
+        recs = self.mirror.read_step(step)     # gap/partial raise here
+        self._complete.add(step)
+        return recs
+
+    def bootstrap_steps(self) -> List[int]:
+        header, _ = self._call("bootstraps")
+        return list(header["steps"])
+
+    def bootstrap_path(self, step: int) -> str:
+        path = self.mirror.bootstrap_path(step)
+        if not os.path.exists(path):
+            header, blobs = self._call("bootstrap_file", step=step)
+            path = self._mirror_file("bootstrap", header["files"][0]["name"],
+                                     blobs[0])
+        return path
+
+    def close_socket(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            finally:
+                self._sock = None
+                self._buf.clear()
+
+    def close(self) -> None:
+        self.close_socket()
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+_TCP_RE = re.compile(r"^tcp://([^:/]+):(\d+)$")
+
+
+def make_tail(stream, cache_dir: Optional[str] = None) -> StreamTail:
+    """Resolve a stream address to a tail: a ``StreamTail`` passes through,
+    ``tcp://host:port`` opens the RPC backend, anything else is a stream
+    directory on a (shared) filesystem."""
+    if isinstance(stream, StreamTail):
+        return stream
+    m = _TCP_RE.match(str(stream))
+    if m:
+        return SocketTail(m.group(1), int(m.group(2)), cache_dir=cache_dir)
+    return FileTail(str(stream))
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        "repro.launch.transport",
+        description="Serve a wire-stream directory to remote SocketTails")
+    ap.add_argument("root", help="stream directory (WireLog root)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    args = ap.parse_args(argv)
+    srv = TailServer(args.root, host=args.host, port=args.port)
+    print(f"serving {args.root} at {srv.address}", flush=True)
+    srv.start()
+    try:
+        threading.Event().wait()
+    except KeyboardInterrupt:
+        srv.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -572,14 +572,27 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
 
 def prefill(cfg: ArchConfig, params: Dict, batch: Dict, cache: Dict
             ) -> Tuple[Array, Dict]:
-    """Process the full prompt; returns (last-token logits, filled cache)."""
+    """Process the full prompt; returns (last-token logits, filled cache).
+
+    ``batch["prompt_lens"]`` (optional, (B,) int32 true lengths) selects each
+    row's logits at its last REAL token, ``n_prefix + len − 1``, instead of
+    the rightmost column — right-padded rows otherwise read logits computed
+    on pad tokens, and pad id 0 is a legal vocab token. Causal attention
+    makes the gathered position's activations independent of the padding to
+    its right, so the first generated token is exact."""
     tokens = batch["tokens"]
     h, n_prefix = _embed(cfg, params, tokens, batch.get("prefix_embeds"))
     positions = jnp.broadcast_to(jnp.arange(h.shape[1])[None], h.shape[:2])
     h, new_cache, _ = _run_stack(cfg, params, h, positions, cache=cache,
                                  train=False)
     h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
-    return _logits(cfg, params, h[:, -1:]), new_cache
+    lens = batch.get("prompt_lens")
+    if lens is None:
+        h_last = h[:, -1:]
+    else:
+        idx = n_prefix + lens.astype(jnp.int32) - 1          # (B,)
+        h_last = h[jnp.arange(h.shape[0])[:, None], idx[:, None]]  # (B,1,d)
+    return _logits(cfg, params, h_last), new_cache
 
 
 def decode_step(cfg: ArchConfig, params: Dict, cache: Dict, tokens: Array,

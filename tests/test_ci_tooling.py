@@ -136,6 +136,30 @@ def test_ci_runs_streaming_smoke_and_serving_ledger_claim():
         f"serving wire compression below the 20x acceptance bar: {ratios}")
 
 
+def test_ci_runs_multiprocess_smoke_and_ledger_records_it():
+    """ci.yml keeps the TWO-PROCESS streaming smoke (serve --processes: a
+    worker process per replica tailing the wire over launch/transport.py),
+    and the checked-in serving ledger carries a full-geometry
+    ``serving_multiproc`` section with the QPS/p50/p99/staleness the
+    multi-process fleet actually measured (ISSUE 9)."""
+    import json
+    with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    assert "--processes" in ci, (
+        "CI dropped the multi-process streaming smoke (serve --processes)")
+    with open(os.path.join(ROOT, "BENCH_serving.json")) as f:
+        serving = json.load(f)
+    mp = [r["serving_multiproc"] for r in serving["runs"]
+          if "serving_multiproc" in r and not r["geometry"].get("tiny")]
+    assert mp, ("no full-geometry multi-process serving run recorded in "
+                "BENCH_serving.json")
+    for section in mp:
+        for key, stats in section.items():
+            for field in ("qps", "p50_ms", "p99_ms", "staleness_max",
+                          "workers", "restarts"):
+                assert field in stats, (key, field)
+
+
 def test_ci_workflow_keeps_tier_gate_and_timing_report():
     """The CI yaml must keep (a) the tier-1 PR gate and (b) the
     --durations=15 timing report that makes slow-test creep visible in every

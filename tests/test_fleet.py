@@ -263,6 +263,9 @@ def test_fleet_serves_two_lagged_replicas(quant4_stream):
     assert {r.replica for r in out["requests"]} == {"r0", "r1"}
     assert all(r.tokens_out is not None and r.latency_s >= 0
                for r in out["requests"])
+    assert all(r.tokens_generated == r.max_new_tokens
+               for r in out["requests"])       # nothing was budget-capped
+    assert out["short_requests"] == 0
     assert out["staleness_max"] <= 2
     assert out["p50_ms"] <= out["p99_ms"]
 
@@ -270,3 +273,119 @@ def test_fleet_serves_two_lagged_replicas(quant4_stream):
 def test_fleet_rejects_mismatched_lags(quant4_stream):
     with pytest.raises(ValueError):
         fleet_lib.Fleet(quant4_stream["dir"], n_replicas=2, lags=(0,))
+
+
+# ---------------------------------------------------------------------------
+# sync cadence + shortfall accounting (stubbed replicas — no compiles)
+# ---------------------------------------------------------------------------
+
+class _FakeReplica:
+    """Stand-in for ServeReplica with the exact surface Fleet.run drives.
+    All fakes share one ``head`` dict emulating the trainer: it advances one
+    step per completed round-robin ROUND (every fake's serve in a round
+    bumps ``served``; a full round bumps ``v``), so staleness dynamics are
+    real without a single jitted serve."""
+
+    def __init__(self, name, lag, head, n_replicas):
+        self.name, self.lag, self.head = name, int(lag), head
+        self._n = n_replicas
+        self.step = max(head["v"] - self.lag, 0)
+        self.sync_calls = 0
+
+    def sync(self, upto=None):
+        self.sync_calls += 1
+        target = max(self.head["v"] - self.lag, 0)
+        advanced = max(target - self.step, 0)
+        self.step = max(self.step, target)
+        return advanced
+
+    def staleness(self):
+        return max(self.head["v"] - self.step, 0)
+
+    def serve_batch(self, batch, prompt_len, decode_steps,
+                    sync_during_decode=False):
+        self.head["served"] += 1
+        if self.head["served"] % self._n == 0:
+            self.head["v"] += 1                # one trainer step per round
+        return {"tokens": np.zeros((len(batch), decode_steps + 1), np.int64),
+                "mid_applied": 0}
+
+
+def _fake_fleet(n_replicas, lags, head0=0, decode_budget=8, max_batch=1):
+    fl = fleet_lib.Fleet.__new__(fleet_lib.Fleet)
+    head = {"v": head0, "served": 0}
+    fl.replicas = [_FakeReplica(f"r{i}", lags[i], head, n_replicas)
+                   for i in range(n_replicas)]
+    fl.scheduler = DecodeBudgetScheduler(decode_budget=decode_budget,
+                                         max_batch=max_batch)
+    fl.prompt_len = 8
+    return fl
+
+
+def test_every_replica_syncs_regression():
+    """THE cadence regression: with n_replicas == sync_every the old global
+    ``batches % sync_every`` check advanced in lockstep with the round-robin
+    index, so r1 was NEVER synced (sync_calls == 0, staleness unbounded).
+    The per-replica cadence must sync every replica."""
+    fl = _fake_fleet(2, [0, 0])
+    out = fl.run(fleet_lib.synthetic_requests(8, max_new_tokens=4),
+                 sync_every=2)
+    assert out["batches"] == 8
+    for rep in fl.replicas:                    # old code: r1 had 0 syncs
+        assert rep.sync_calls >= 2, (rep.name, rep.sync_calls)
+    assert out["staleness_max"] <= 0 + 2       # lag + sync_every
+
+
+@pytest.mark.parametrize("n_replicas", [1, 2, 3])
+@pytest.mark.parametrize("sync_every", [1, 2, 3])
+def test_staleness_bounded_for_every_replica(n_replicas, sync_every):
+    """The grid: for every (n_replicas, sync_every) and per-replica lags,
+    EVERY request's recorded staleness stays ≤ that replica's lag +
+    sync_every while the trainer head keeps moving."""
+    lags = list(range(n_replicas))
+    fl = _fake_fleet(n_replicas, lags, head0=4)
+    out = fl.run(fleet_lib.synthetic_requests(6 * n_replicas,
+                                              max_new_tokens=4),
+                 sync_every=sync_every)
+    assert len(out["requests"]) == 6 * n_replicas
+    by_name = {rep.name: rep for rep in fl.replicas}
+    for r in out["requests"]:
+        rep = by_name[r.replica]
+        assert r.staleness <= rep.lag + sync_every, \
+            (r.replica, r.staleness, rep.lag, sync_every)
+    for rep in fl.replicas:
+        assert rep.sync_calls >= 1, rep.name
+
+
+def test_capped_request_surfaces_shortfall():
+    """An oversized lone request is admitted with decode capped at the
+    budget; it must complete SHORT and say so — ``tokens_generated`` on the
+    request, ``short_requests``/``tokens_short`` in the summary — instead of
+    silently returning fewer tokens than asked."""
+    sched = DecodeBudgetScheduler(decode_budget=8, max_batch=4)
+    q = _queue(100, 2)
+    batch, d = sched.admit(q)                  # rid 0 alone, capped at 8
+    row = np.arange(d + 1)                     # prefill token + d decodes
+    fleet_lib.finalize_request(batch[0], row)
+    assert batch[0].tokens_generated == 9
+    assert np.array_equal(batch[0].tokens_out, row)
+
+    batch2, d2 = sched.admit(q)                # rid 1 fits its budget
+    fleet_lib.finalize_request(batch2[0], np.arange(d2 + 1))
+    assert batch2[0].tokens_generated == 2     # == max_new_tokens, not short
+
+    summary = fleet_lib._summary([batch[0], batch2[0]], batches=2)
+    assert summary["short_requests"] == 1
+    assert summary["tokens_short"] == 100 - 9
+
+
+def test_run_summary_reports_capped_shortfall():
+    fl = _fake_fleet(1, [0], decode_budget=8, max_batch=4)
+    reqs = [Request(rid=0, tokens=np.zeros(4, np.int64), max_new_tokens=100),
+            Request(rid=1, tokens=np.zeros(4, np.int64), max_new_tokens=4)]
+    out = fl.run(reqs)
+    assert out["short_requests"] == 1
+    assert out["tokens_short"] == 100 - 9
+    by_rid = {r.rid: r for r in out["requests"]}
+    assert by_rid[0].tokens_generated == 9
+    assert by_rid[1].tokens_generated == 4

@@ -103,6 +103,37 @@ def test_prefill_decode_matches_full_forward(arch):
                                rtol=2e-2, atol=2e-2)
 
 
+def test_prefill_prompt_lens_ignores_right_padding():
+    """Serving pads short prompts on the right with token id 0, which is a
+    LEGAL vocab token: without true lengths, prefill reads the logits
+    computed on padding. With ``batch["prompt_lens"]`` each row's logits
+    come from its last REAL token — a prompt ENDING in a genuine 0 must
+    yield exactly the logits of the unpadded prompt (causal attention makes
+    the gathered position blind to the padding after it)."""
+    cfg = dataclasses.replace(cb.get_smoke("smollm_360m"), dtype="float32",
+                              param_dtype="float32")
+    rng = jax.random.PRNGKey(7)
+    params = M.init_params(cfg, rng)
+    S, L = 8, 5
+    row = jax.random.randint(rng, (1, L), 1, cfg.vocab_size)
+    row = row.at[0, L - 1].set(0)              # real token 0, not padding
+    padded = jnp.zeros((1, S), row.dtype).at[:, :L].set(row)
+
+    cache = M.init_cache(cfg, 1, S, dtype=jnp.float32)
+    lg_len, _ = M.prefill(cfg, params,
+                          {"tokens": padded,
+                           "prompt_lens": jnp.asarray([L], jnp.int32)}, cache)
+    cache = M.init_cache(cfg, 1, L, dtype=jnp.float32)
+    lg_exact, _ = M.prefill(cfg, params, {"tokens": row}, cache)
+    np.testing.assert_allclose(np.asarray(lg_len), np.asarray(lg_exact),
+                               rtol=1e-5, atol=1e-5)
+    # and the old behavior (read the padded tail) is genuinely different —
+    # the bug this pins was a REAL conflation, not a no-op
+    cache = M.init_cache(cfg, 1, S, dtype=jnp.float32)
+    lg_pad, _ = M.prefill(cfg, params, {"tokens": padded}, cache)
+    assert np.abs(np.asarray(lg_pad) - np.asarray(lg_exact)).max() > 1e-3
+
+
 def test_sliding_window_attention_is_banded():
     """A token beyond the window must not influence attention output."""
     from repro.models import layers as L

@@ -1,0 +1,165 @@
+"""Transport-tail tests (launch/transport.py): the FileTail poller must be an
+exact stand-in for reading the WireLog directly, the SocketTail RPC backend
+must mirror records/bootstraps byte-for-byte through the same local decode
+path, and a ServeReplica joining over ``tcp://`` must land bit-identical to
+one on the shared filesystem — the transport moves bytes, never meaning."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import stream as stream_lib
+from repro.launch import fleet as fleet_lib
+from repro.launch import transport as transport_lib
+from repro.launch.session import Session
+from repro.launch.spec import RunSpec
+
+TINY = dict(arch="smollm-360m", smoke=True, clients=2, global_batch=4,
+            seq_len=32)
+QUANT4 = dict(compressor="block_topk", ratio=0.1,
+              downlink_carrier="quant4", downlink_ratio=0.05)
+
+
+@pytest.fixture(scope="module")
+def wire(tmp_path_factory):
+    """One quant4 stream shared by the transport tests: 4 published steps,
+    bootstraps at 0/2/4, the trainer session kept alive so tests can extend
+    the stream, plus per-step param snapshots."""
+    root = tmp_path_factory.mktemp("wire_tp")
+    sess = Session(RunSpec(**TINY, **QUANT4))
+    sess.publish_to(str(root), bootstrap_every=2)
+    snaps = {}
+    for _ in range(4):
+        sess.step_once()
+        snaps[sess.step] = jax.device_get(sess.params)
+    return {"dir": str(root), "sess": sess, "snaps": snaps}
+
+
+@pytest.fixture(scope="module")
+def server(wire):
+    srv = transport_lib.TailServer(wire["dir"]).start()
+    yield srv
+    srv.stop()
+
+
+def _records_equal(a, b):
+    if len(a) != len(b):
+        return False
+    for ra, rb in zip(a, b):
+        da, db = ra.__dict__, rb.__dict__
+        if da.keys() != db.keys():
+            return False
+        for k in da:
+            la = jax.tree_util.tree_leaves(da[k])
+            lb = jax.tree_util.tree_leaves(db[k])
+            if len(la) != len(lb) or not all(
+                    np.array_equal(np.asarray(x), np.asarray(y))
+                    for x, y in zip(la, lb)):
+                return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# file backend
+# ---------------------------------------------------------------------------
+
+def test_file_tail_matches_wirelog(wire):
+    log = stream_lib.WireLog(wire["dir"])
+    tail = transport_lib.make_tail(wire["dir"])
+    assert isinstance(tail, transport_lib.FileTail)
+    assert tail.last_step() == log.last_step()
+    assert tail.bootstrap_steps() == log.bootstrap_steps()
+    assert tail.bootstrap_path(0) == log.bootstrap_path(0)
+    assert tail.latest_bootstrap(upto=3) == log.bootstrap_path(2)
+    for step in (1, tail.last_step()):
+        assert _records_equal(tail.read_step(step), log.read_step(step))
+
+
+def test_file_tail_head_cache_tracks_new_records(wire):
+    """The cached head must advance when the trainer publishes — the cache
+    key is the newest step's record listing, so an unchanged directory is
+    one listdir and a grown one re-verifies."""
+    tail = transport_lib.FileTail(wire["dir"])
+    before = tail.last_step()
+    assert tail.last_step() == before          # cache hit, same answer
+    sess = wire["sess"]
+    sess.step_once()
+    wire["snaps"][sess.step] = jax.device_get(sess.params)
+    assert tail.last_step() == before + 1      # cache invalidated by growth
+
+
+def test_file_tail_empty_dir_is_none(tmp_path):
+    tail = transport_lib.FileTail(str(tmp_path))
+    assert tail.last_step() is None
+    assert tail.latest_bootstrap() is None
+    with pytest.raises(stream_lib.StreamError):
+        tail.read_step(0)
+
+
+# ---------------------------------------------------------------------------
+# socket RPC backend
+# ---------------------------------------------------------------------------
+
+def test_socket_tail_parity_with_file(wire, server, tmp_path):
+    log = stream_lib.WireLog(wire["dir"])
+    tail = transport_lib.make_tail(server.address,
+                                   cache_dir=str(tmp_path / "mirror"))
+    assert isinstance(tail, transport_lib.SocketTail)
+    assert tail.last_step() == log.last_step()
+    assert tail.bootstrap_steps() == log.bootstrap_steps()
+    for step in (1, 2):
+        assert _records_equal(tail.read_step(step), log.read_step(step))
+    # the mirrored bootstrap is byte-identical to the server's file
+    bp = tail.bootstrap_path(2)
+    assert os.path.exists(bp) and bp != log.bootstrap_path(2)
+    with open(bp, "rb") as fa, open(log.bootstrap_path(2), "rb") as fb:
+        assert fa.read() == fb.read()
+    tail.close()
+
+
+def test_socket_tail_missing_step_raises_gap(server, tmp_path):
+    tail = transport_lib.make_tail(server.address,
+                                   cache_dir=str(tmp_path / "mirror"))
+    with pytest.raises(stream_lib.StreamGapError):
+        tail.read_step(999)
+    tail.close()
+
+
+def test_socket_tail_reconnects_after_drop(wire, server, tmp_path):
+    """A dropped connection between polls must be survived transparently —
+    the client reconnects once and repeats the call."""
+    tail = transport_lib.make_tail(server.address,
+                                   cache_dir=str(tmp_path / "mirror"))
+    head = tail.last_step()
+    tail.close_socket()                        # simulate a dropped transport
+    assert tail.last_step() == head
+    tail.close()
+
+
+def test_make_tail_passthrough_and_dispatch(wire):
+    ft = transport_lib.FileTail(wire["dir"])
+    assert transport_lib.make_tail(ft) is ft
+    assert isinstance(transport_lib.make_tail(wire["dir"]),
+                      transport_lib.FileTail)
+
+
+# ---------------------------------------------------------------------------
+# a replica over tcp:// is the same replica
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_replica_over_tcp_bit_identical(wire, server, tmp_path):
+    """ServeReplica(tcp://…) must land on exactly the trainer's params —
+    checkpoint + replay through the mirrored files is the SAME decode path
+    as the shared-filesystem tail, so identity survives the transport."""
+    tail = transport_lib.make_tail(server.address,
+                                   cache_dir=str(tmp_path / "mirror"))
+    rep = fleet_lib.ServeReplica(tail, bootstrap_step=0, name="tcp0")
+    rep.sync()
+    head = stream_lib.WireLog(wire["dir"]).last_step()
+    assert rep.step == head
+    la = jax.tree_util.tree_leaves(rep.params)
+    lb = jax.tree_util.tree_leaves(wire["snaps"][head])
+    assert all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
