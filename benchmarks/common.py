@@ -172,6 +172,46 @@ def save_bench(topic: str, run: Dict, path: str = None,
     return path
 
 
+def check_no_regression(topic: str, metric: str, bar: float,
+                        full_geometry_only: bool = False) -> float:
+    """The acceptance gate over a checked-in ledger: the NEWEST eligible run
+    in BENCH_<topic>.json must carry ``metric`` in its ``speedup_vs_ref`` at
+    or above ``bar``. ``full_geometry_only`` restricts to runs whose
+    geometry is not ``tiny`` — the CI bench smoke appends tiny runs in the
+    workspace before pytest, and a tiny CPU geometry must never be read as
+    a regression of a full-geometry claim. Returns the value. Raises
+    ValueError when the ledger or metric is absent/malformed — a missing
+    number must never read as a pass — and AssertionError below the bar, so
+    pytest reports it as the perf regression it is."""
+    path = bench_path(topic)
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ValueError(f"{path}: missing/unreadable ledger ({e})")
+    errs = validate_bench(payload)
+    if errs:
+        raise ValueError(f"{path}: malformed ledger:\n  - "
+                         + "\n  - ".join(errs))
+    runs = payload["runs"]
+    if full_geometry_only:
+        runs = [r for r in runs if not r["geometry"].get("tiny")]
+        if not runs:
+            raise ValueError(f"{path}: no full-geometry run recorded")
+    run = runs[-1]
+    sp = run.get("speedup_vs_ref") or {}
+    if metric not in sp:
+        raise ValueError(
+            f"{path}: newest eligible run has no speedup_vs_ref[{metric!r}] "
+            f"(has {sorted(sp)})")
+    val = float(sp[metric])
+    if not val >= bar:
+        raise AssertionError(
+            f"perf regression: {topic}.{metric} = {val:.2f}x is below the "
+            f"{bar:g}x bar ({path})")
+    return val
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.time()

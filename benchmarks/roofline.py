@@ -100,6 +100,47 @@ def ef_wire_terms(rec: Dict) -> Optional[Dict]:
     return out
 
 
+def ef_hierarchy_wire_terms(rec: Dict) -> Optional[Dict]:
+    """Per-HOP wire accounting of the two-tier EF topology (DESIGN.md §13)
+    at the production pod geometry for a train record: under
+    ``--hops pods=P`` the n = P·data client messages ride in-pod ICI
+    (``wire_words_intra_per_round`` — the ×n rule) while the cross-pod hop
+    ships ONE error-fed innovation per pod (``wire_words_cross_per_round``
+    — the ×P rule) on the quant4 cross carrier re-budgeted to the same 1%
+    innovation ratio as the uplink. The flat baseline pays its whole
+    n-client quant8 wire ACROSS the pod boundary (the server lives in one
+    pod), so ``cross_pod_reduction_vs_flat`` is the byte ratio the
+    hierarchy buys on the slow links — the number
+    benchmarks/hierarchy_bench.py measures and CI gates at ≥ 8×. Same
+    accounting functions as the runtimes (``hierarchy.wire_words_cross``),
+    so the roofline rows cannot drift from what the simulator reports."""
+    from repro.core import carriers as carrier_lib
+    from repro.core import compressors as comp_lib
+    from repro.core import hierarchy as hier_lib
+    from repro.launch import mesh as mesh_lib
+    shape = cb.INPUT_SHAPES[rec["shape"]]
+    if shape.kind != "train":
+        return None
+    cfg = cb.get(rec["arch"])
+    d = int(cfg.active_param_count())
+    word = 4.0
+    pods = mesh_lib.PROD_PODS
+    n = pods * mesh_lib.PROD_DATA
+    up_words = carrier_lib.make("quant8").wire_words(
+        comp_lib.BlockTopK(block=1024, ratio=0.01), d)
+    hops = hier_lib.Hops(
+        pods=pods, cross_carrier="quant4",
+        cross_compressor=comp_lib.BlockTopK(block=1024, ratio=0.01))
+    cross_words = hier_lib.wire_words_cross(hops, None, None, d)
+    flat_cross = n * up_words
+    return {
+        "wire_words_intra_per_round": n * up_words,
+        "wire_words_cross_per_round": cross_words,
+        "ef_wire_cross_s": cross_words * word / LINK_BW,
+        "cross_pod_reduction_vs_flat": flat_cross / cross_words,
+    }
+
+
 def model_flops_per_device(rec: Dict) -> float:
     cfg = cb.get(rec["arch"])
     shape = cb.INPUT_SHAPES[rec["shape"]]
@@ -159,6 +200,9 @@ def analyze_record(rec: Dict) -> Optional[Dict]:
     wire_terms = ef_wire_terms(rec)
     if wire_terms:
         row.update(wire_terms)
+    hier_terms = ef_hierarchy_wire_terms(rec)
+    if hier_terms:
+        row.update(hier_terms)
     return row
 
 

@@ -18,7 +18,11 @@ What is measured, per arrival rate:
   (``launch/replica_worker.py``) tailing the stream over the transport
   layer with continuous sync during decode — recorded under
   ``serving_multiproc`` so the process boundary's cost sits next to the
-  in-process numbers it must be compared against.
+  in-process numbers it must be compared against;
+* the SAME load with the fleet tailing a REMOTE stream over ``tcp://``
+  (``launch/transport.py::TailServer`` RPC — the wire a cross-machine
+  replica actually rides) — recorded under ``serving_remote`` so the
+  socket transport's cost is a measured row, not a claim.
 
 Every replica in the timed fleet serves params BIT-IDENTICAL to the
 trainer's post-step model at its lag (the invariant tests/test_fleet.py
@@ -35,6 +39,7 @@ import numpy as np
 from benchmarks.common import bench_run, bench_session, csv_row, save_bench
 from repro.core import stream as stream_lib
 from repro.launch import fleet as fleet_lib
+from repro.launch import transport as transport_lib
 
 # CPU-bench-sized trainer: EF21-SGDM uplink + quant4 downlink at the reduced
 # smollm geometry — the same production step the train driver runs
@@ -138,6 +143,39 @@ def run(tiny: bool = False) -> dict:
                 f"qps={mp_out['qps']:.2f};p99_ms={mp_out['p99_ms']:.0f};"
                 f"staleness_max={mp_out['staleness_max']}")
 
+        # the remote tail on the SAME stream: the fleet subscribes through
+        # tcp:// (TailServer RPC + local mirror) instead of the filesystem —
+        # identical decode path, the socket hop is the only variable
+        serving_remote = {}
+        srv = transport_lib.TailServer(stream_dir).start()
+        try:
+            rfl = fleet_lib.Fleet(srv.address, n_replicas=2, lags=(0, 2),
+                                  decode_budget=decode_budget,
+                                  max_batch=max_batch, prompt_len=prompt_len)
+            rfl.sync()
+            reqs = fleet_lib.synthetic_requests(
+                n_requests, rate=mp_rate, prompt_len=prompt_len,
+                max_new_tokens=max_new,
+                vocab_size=rfl.replicas[0].session.cfg.vocab_size)
+            r_out = rfl.run(reqs, sync_every=1)
+        finally:
+            srv.stop()
+        key = f"remote_rate{mp_rate:g}"
+        metrics[key] = _percentiles_ns(
+            [r.latency_s for r in r_out["requests"]])
+        serving_remote[key] = {
+            "rate_req_s": mp_rate, "qps": r_out["qps"],
+            "p50_ms": r_out["p50_ms"], "p99_ms": r_out["p99_ms"],
+            "batches": r_out["batches"],
+            "staleness_mean": r_out["staleness_mean"],
+            "staleness_max": r_out["staleness_max"],
+            "transport": srv.address.split("://")[0],
+        }
+        csv_row(f"serve_bench_remote_rate{mp_rate:g}",
+                metrics[key]["median_ns"] / 1e3,
+                f"qps={r_out['qps']:.2f};p99_ms={r_out['p99_ms']:.0f};"
+                f"staleness_max={r_out['staleness_max']}")
+
         run_entry = bench_run(
             geometry={"arch": fleet.replicas[0].spec.arch, "tiny": tiny,
                       "steps": steps, "requests": n_requests,
@@ -149,6 +187,7 @@ def run(tiny: bool = False) -> dict:
             speedup_vs_ref={"wire_bytes_vs_dense_f32": ratio_vs_dense})
         run_entry["serving"] = serving
         run_entry["serving_multiproc"] = serving_mp
+        run_entry["serving_remote"] = serving_remote
         run_entry["wire"] = {
             "wire_bytes_per_sync": wire_bytes,
             "dense_f32_push_bytes": dense_bytes,

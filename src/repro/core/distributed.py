@@ -53,6 +53,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import carriers as carrier_lib
 from repro.core import compressors as comp_lib
 from repro.core import ef as ef_lib
+from repro.core import hierarchy as hier_lib
 from repro.core import participation as part_lib
 from repro.core import schedule as sched_lib
 
@@ -60,6 +61,7 @@ PyTree = Any
 
 # re-exported for callers that only import the runtime module
 DOWNLINK_FOLD = carrier_lib.DOWNLINK_FOLD
+CROSS_FOLD = hier_lib.CROSS_FOLD
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +96,17 @@ class EFConfig:
     # bit-identical to it (tests/test_participation.py). mode='async' never
     # runs here — core/participation.py::run_async is the async simulator.
     participation: Optional[part_lib.Participation] = None
+    # two-tier hierarchical aggregation (DESIGN.md §13): clients → pod
+    # aggregator → global server. The intra hop runs this config's existing
+    # carrier/schedule over the intra-pod axes only; each pod keeps its own
+    # EF memory (ef_state['pods'] = {t, b}) and ships the compressed
+    # cross-pod innovation via hops.cross_carrier/cross_compressor. None or
+    # pods=1 runs ZERO hierarchical machinery (bit-identical legacy jaxpr).
+    hops: Optional[hier_lib.Hops] = None
+
+    @property
+    def effective_hops(self) -> Optional[hier_lib.Hops]:
+        return hier_lib.effective(self.hops)
 
     @property
     def has_downlink(self) -> bool:
@@ -158,6 +171,14 @@ def init_ef_state(efc: EFConfig, params: PyTree, dp: int,
         # the broadcast memory h⁰ = g⁰ rides along as a state sibling; the
         # unidirectional state tree stays byte-for-byte what it always was
         state["h"] = ef_lib.downlink_init(server)
+    hops = efc.effective_hops
+    if hops is not None:
+        # per-pod EF memory on a leading pods axis (sharded over the 'pod'
+        # mesh axis on the production path) — a flat config's state tree is
+        # untouched, exactly like the downlink's 'h' sibling
+        hier_lib.check_pods(hops, dp)
+        state["pods"] = jax.vmap(lambda _: hier_lib.pod_init(params))(
+            jnp.arange(hops.pods))
     return state
 
 
@@ -224,6 +245,35 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
     m_cohort = efc.participation.cohort_size(n_total) \
         if mask_full is not None else n_total
 
+    # two-tier hierarchical aggregation (DESIGN.md §13): the intra hop
+    # aggregates over the intra-pod axes only, then each pod's aggregator
+    # runs the cross hop. A trivial cross (dense + identity) keeps the
+    # legacy global collective verbatim — the flat-equivalence anchor.
+    hops = efc.effective_hops
+    trivial_cross = hops is None or hier_lib.cross_is_trivial(hops, sched)
+    if hops is not None:
+        if "pod" not in c_axes:
+            raise ValueError(
+                "hierarchical aggregation needs a 'pod' client axis; "
+                f"got data_axes={c_axes}")
+        if hops.pods != mesh.shape["pod"]:
+            raise ValueError(
+                f"hops.pods={hops.pods} must equal the mesh pod axis "
+                f"({mesh.shape['pod']})")
+        if mask_full is not None:
+            raise ValueError(
+                "sampled participation does not compose with hierarchical "
+                "aggregation (guarded at spec/build construction)")
+        if plan == "fused_wire":
+            raise ValueError(
+                "fused_wire carriers aggregate all clients inside the "
+                "mega-kernel — there is no per-pod message to re-aggregate "
+                "(guarded at spec/build construction)")
+    # the collective axes of the intra hop: everything when flat or when the
+    # cross hop is trivial (legacy bits), the non-pod axes otherwise
+    intra_axes = c_axes if trivial_cross \
+        else tuple(a for a in c_axes if a != "pod")
+
     def client_index():
         # this device's global client index over the client axes
         idx = 0
@@ -243,14 +293,14 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
             # grouped engine: one wire (and one aggregation collective) per
             # group, each on its group's carrier/compressor
             msg_mean, new_cl = sched_lib.round_local(
-                sched, method, g, cl, c_axes, rng_l, eta,
+                sched, method, g, cl, intra_axes, rng_l, eta,
                 overlap=efc.overlap, mask=mask_m)
         elif plan == "fused":
             c_tree, new_cl = carrier.fused_update(method, g, cl, eta=eta)
             if mask_m is not None:
                 c_tree = part_lib.apply_mask(mask_m, c_tree)
             msg_mean = jax.tree_util.tree_map(
-                lambda c: jax.lax.pmean(c, c_axes), c_tree)
+                lambda c: jax.lax.pmean(c, intra_axes), c_tree)
         elif plan == "fused_wire":
             if mask_m is not None:
                 # unreachable behind the spec/build construction errors: the
@@ -261,13 +311,13 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
             # EF-invariant integration; the aggregated mean comes back with
             # the new client state (aggregation needs the wire)
             msg_mean, new_cl = carrier.fused_wire_round(
-                method, g, cl, eta=eta, axes=c_axes)
+                method, g, cl, eta=eta, axes=intra_axes)
         elif plan == "wire":
             deltas, ctx = method.pre_compress(g, cl, eta=eta)
             if mask_m is not None:
                 deltas = part_lib.apply_mask(mask_m, deltas)
             c_tree, msg_mean = carrier_lib.wire_round_local(
-                carrier, method.compressor, deltas, c_axes, rng_l)
+                carrier, method.compressor, deltas, intra_axes, rng_l)
             _, new_cl = method.post_compress(c_tree, ctx)
         else:
             # dense plan: aggregate the method's actual MESSAGE (for
@@ -278,7 +328,7 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
             if mask_m is not None:
                 msg = part_lib.apply_mask(mask_m, msg)
             msg_mean = jax.tree_util.tree_map(
-                lambda m: jax.lax.pmean(m, c_axes), msg)
+                lambda m: jax.lax.pmean(m, intra_axes), msg)
         if mask_m is not None:
             # Bells & Whistles: delta methods fold (1/n)Σ_S as-is, absolute
             # methods rescale to the cohort mean; non-sampled clients keep
@@ -295,20 +345,57 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
         return jax.random.fold_in(rng_l, client_index())
 
     server_specs = state_specs["server"]
-    # the cohort mask rides into shard_map as one replicated (n,) array —
-    # arity is unchanged on the legacy path, keeping its jaxpr byte-stable
+    # conditional shard_map operands (same arity pattern for both: the
+    # legacy path's jaxpr stays byte-stable) — the cohort mask as one
+    # replicated (n,) array, or the pod EF memory sharded over the pod axis.
+    # Mutually exclusive: sampled × hops is a construction error above.
     extra_args = () if mask_full is None else (mask_full,)
     extra_specs = () if mask_full is None else (P(),)
+    if hops is not None:
+        extra_args = (ef_state["pods"],)
+        extra_specs = (state_specs["pods"],)
+    pod_out_specs = () if hops is None else (state_specs["pods"],)
+
+    def split_rest(rest):
+        if hops is not None:
+            return rest[0], None
+        return None, (rest[0] if rest else None)
+
+    def pod_leg(msg_mean, pods_l, rng_l):
+        """The pod tier, per device: fold the intra-hop mean into this pod's
+        target, run the cross hop (per-pod rng = fold_in(fold_in(rng,
+        CROSS_FOLD), pod_index) — off the ROUND rng, like the downlink
+        fold), and return the server-bound message — pmean over the pod
+        axis of each pod's contribution — plus the new pod memory. Under a
+        trivial cross msg_mean is already the legacy GLOBAL mean and the
+        pod memory is bookkeeping only."""
+        sq = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
+        ex = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
+        st = sq(pods_l)
+        if trivial_cross:
+            return msg_mean, ex(
+                hier_lib.trivial_bookkeeping(method, st, msg_mean))
+        r_pod = None if rng_l is None else jax.random.fold_in(
+            jax.random.fold_in(rng_l, CROSS_FOLD),
+            jax.lax.axis_index("pod"))
+        t_new = hier_lib.pod_target(method, st["t"], msg_mean)
+        b_new = hier_lib.cross_sync(hops, sched, t_new, st["b"], r_pod)
+        pod_msg = hier_lib.pod_message(method, st["b"], b_new)
+        server_msg = jax.tree_util.tree_map(
+            lambda m: jax.lax.pmean(m, ("pod",)), pod_msg)
+        return server_msg, ex({"t": t_new, "b": b_new})
 
     if efc.has_downlink:
-        def body(grads_l, clients_l, server_l, h_l, rng_l, *mask_rest):
+        def body(grads_l, clients_l, server_l, h_l, rng_l, *rest):
+            pods_l, mask_l = split_rest(rest)
             # the downlink key comes off the round rng BEFORE the per-client
             # fold: the broadcast must be one identical message everywhere
             r_down = None if rng_l is None \
                 else jax.random.fold_in(rng_l, DOWNLINK_FOLD)
             new_cl, msg_mean = client_leg(
-                grads_l, clients_l, fold_client(rng_l),
-                mask_rest[0] if mask_rest else None)
+                grads_l, clients_l, fold_client(rng_l), mask_l)
+            if hops is not None:
+                msg_mean, new_pods = pod_leg(msg_mean, pods_l, rng_l)
             new_server = ef_lib.server_step(method, server_l, msg_mean)
             # every device runs the same encode of the replicated-in-value
             # new_server (that IS the broadcast — the encoded wire is what
@@ -321,7 +408,8 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
             else:
                 g_est, h_new = ef_lib.downlink_sync(
                     down_carrier, down_comp, new_server, h_l, rng=r_down)
-            return new_cl, new_server, h_new, g_est
+            out = (new_cl, new_server, h_new, g_est)
+            return out + ((new_pods,) if hops is not None else ())
 
         h_specs = state_specs.get("h", server_specs)
         fn = shard_map(
@@ -329,30 +417,42 @@ def ef_round_sharded(efc: EFConfig, grads: PyTree, ef_state: Dict,
             in_specs=(grads_specs, state_specs["clients"], server_specs,
                       h_specs, P()) + extra_specs,
             out_specs=(state_specs["clients"], server_specs, h_specs,
-                       server_specs),
+                       server_specs) + pod_out_specs,
             check_rep=False)
-        new_clients, new_server, h_new, g_est = fn(
+        out = fn(
             grads, ef_state["clients"], ef_state["server"], ef_state["h"],
             rng, *extra_args)
-        return g_est, {"clients": new_clients, "server": new_server,
-                       "h": h_new}
+        new_clients, new_server, h_new, g_est = out[:4]
+        new_state = {"clients": new_clients, "server": new_server,
+                     "h": h_new}
+        if hops is not None:
+            new_state["pods"] = out[4]
+        return g_est, new_state
 
-    def body(grads_l, clients_l, server_l, rng_l, *mask_rest):
+    def body(grads_l, clients_l, server_l, rng_l, *rest):
+        pods_l, mask_l = split_rest(rest)
         new_cl, msg_mean = client_leg(
-            grads_l, clients_l, fold_client(rng_l),
-            mask_rest[0] if mask_rest else None)
+            grads_l, clients_l, fold_client(rng_l), mask_l)
+        if hops is not None:
+            msg_mean, new_pods = pod_leg(msg_mean, pods_l, rng_l)
         new_server = ef_lib.server_step(method, server_l, msg_mean)
-        return new_cl, new_server, msg_mean
+        out = (new_cl, new_server, msg_mean)
+        return out + ((new_pods,) if hops is not None else ())
 
-    out_specs = (state_specs["clients"], server_specs, server_specs)
+    out_specs = (state_specs["clients"], server_specs, server_specs) \
+        + pod_out_specs
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(grads_specs, state_specs["clients"], server_specs, P())
         + extra_specs,
         out_specs=out_specs, check_rep=False)
-    new_clients, new_server, msg_mean = fn(
-        grads, ef_state["clients"], ef_state["server"], rng, *extra_args)
-    return new_server, {"clients": new_clients, "server": new_server}
+    out = fn(grads, ef_state["clients"], ef_state["server"], rng,
+             *extra_args)
+    new_clients, new_server = out[0], out[1]
+    new_state = {"clients": new_clients, "server": new_server}
+    if hops is not None:
+        new_state["pods"] = out[3]
+    return new_server, new_state
 
 
 def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
@@ -367,15 +467,38 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
     rngs = jax.random.split(rng, dp) if rng is not None else None
     mask = _participation_mask(efc, dp, step)
 
+    # two-tier hierarchy (DESIGN.md §13): under a NON-trivial cross hop the
+    # intra aggregation produces per-pod means (pods on a leading axis —
+    # pod-major contiguous client blocks) instead of the global mean; a
+    # trivial cross keeps the legacy global aggregation ops verbatim
+    hops = efc.effective_hops
+    trivial_cross = hops is None or hier_lib.cross_is_trivial(
+        hops, efc.schedule)
+    want_pods = hops is not None and not trivial_cross
+    if hops is not None:
+        hier_lib.check_pods(hops, dp)
+        if mask is not None:
+            raise ValueError(
+                "sampled participation does not compose with hierarchical "
+                "aggregation (guarded at spec/build construction)")
+        if plan == "fused_wire":
+            raise ValueError(
+                "fused_wire carriers aggregate all clients inside the "
+                "mega-kernel — there is no per-pod message to re-aggregate "
+                "(guarded at spec/build construction)")
+    agg = (lambda t: hier_lib.pod_mean(t, hops.pods)) if want_pods \
+        else (lambda t: jax.tree_util.tree_map(lambda m: m.mean(0), t))
+
     if efc.schedule is not None:
         msg_mean, new_clients = sched_lib.round_batched(
-            efc.schedule, method, grads, clients, dp, rng, eta, mask=mask)
+            efc.schedule, method, grads, clients, dp, rng, eta, mask=mask,
+            pods=hops.pods if want_pods else 1)
     elif plan == "fused":
         c_tree, new_clients = carrier.fused_update(
             method, grads, clients, eta=eta, batched=True)
         if mask is not None:
             c_tree = part_lib.apply_mask(mask, c_tree)
-        msg_mean = jax.tree_util.tree_map(lambda c: c.mean(0), c_tree)
+        msg_mean = agg(c_tree)
     elif plan == "fused_wire":
         if mask is not None:
             # unreachable behind the spec/build construction errors: the
@@ -391,8 +514,11 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
             # zero-masked wires: C(0) = 0 exactly, so the carrier's own
             # aggregation folds only the sampled cohort
             deltas = part_lib.apply_mask(mask, deltas)
-        c_tree, msg_mean = carrier_lib.wire_round_batched(
+        c_tree, wire_mean = carrier_lib.wire_round_batched(
             carrier, method.compressor, deltas, dp)
+        # non-trivial hops pod-mean the per-client messages (local_c IS the
+        # decode of what traveled); the unused global aggregate is DCE'd
+        msg_mean = agg(c_tree) if want_pods else wire_mean
         _, new_clients = jax.vmap(method.post_compress)(c_tree, ctxs)
     else:
         def upd(g, s, r):
@@ -404,7 +530,7 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
             msgs, new_clients = jax.vmap(upd)(grads, clients, rngs)
         if mask is not None:
             msgs = part_lib.apply_mask(mask, msgs)
-        msg_mean = jax.tree_util.tree_map(lambda m: m.mean(0), msgs)
+        msg_mean = agg(msgs)
 
     if mask is not None:
         # Bells & Whistles: delta methods fold (1/n)Σ_S as-is, absolute
@@ -413,8 +539,16 @@ def ef_round(efc: EFConfig, grads: PyTree, ef_state: Dict,
         msg_mean = part_lib.rescale_message(
             method, msg_mean, dp, efc.participation.cohort_size(dp))
         new_clients = part_lib.freeze_tree(mask, new_clients, clients)
-    new_server = ef_lib.server_step(method, server, msg_mean)
+    if want_pods:
+        new_pods, new_server = hier_lib.round_pods_batched(
+            hops, efc.schedule, method, msg_mean, ef_state["pods"], server,
+            rng)
+    else:
+        new_server = ef_lib.server_step(method, server, msg_mean)
     new_state = {"clients": new_clients, "server": new_server}
+    if hops is not None:
+        new_state["pods"] = new_pods if want_pods else \
+            hier_lib.trivial_bookkeeping(method, ef_state["pods"], msg_mean)
     if not efc.has_downlink:
         return new_server, new_state
     r_down = None if rng is None else jax.random.fold_in(rng, DOWNLINK_FOLD)

@@ -106,6 +106,13 @@ class Group:
     down_carrier: str = "dense"
     down_compressor: Optional[comp_lib.Compressor] = None
     state_dtype: Optional[str] = None   # None → inherit the method's
+    # per-hop fields (DESIGN.md §13): under a hierarchical topology
+    # (EFConfig.hops) the CROSS-pod hop of this group's leaves ships
+    # C_cross(t_pod − b_pod) on its own carrier/compressor. The defaults are
+    # the trivial cross (dense + identity): the pod aggregator is
+    # transparent for this group and the flat bits are preserved.
+    cross_carrier: str = "dense"
+    cross_compressor: Optional[comp_lib.Compressor] = None
 
     @property
     def name(self) -> str:
@@ -117,6 +124,15 @@ class Group:
 
     def down_comp(self) -> comp_lib.Compressor:
         return (self.down_compressor if self.down_compressor is not None
+                else comp_lib.Identity())
+
+    @property
+    def trivial_cross(self) -> bool:
+        return (self.cross_carrier == "dense"
+                and isinstance(self.cross_comp(), comp_lib.Identity))
+
+    def cross_comp(self) -> comp_lib.Compressor:
+        return (self.cross_compressor if self.cross_compressor is not None
                 else comp_lib.Identity())
 
 
@@ -161,6 +177,12 @@ class CompressionSchedule:
                     errs.append(f"group {g.pattern!r}: downlink carrier "
                                 f"{g.down_carrier!r} is not a thing (the "
                                 "fused kernel is the uplink client update)")
+                if g.cross_carrier not in carrier_lib.REGISTRY \
+                        or g.cross_carrier == "fused":
+                    errs.append(f"group {g.pattern!r}: cross-pod carrier "
+                                f"{g.cross_carrier!r} is not a thing (the "
+                                "cross hop is one message per pod — same "
+                                "rules as the downlink broadcast)")
                 if g.state_dtype not in GROUP_STATE_DTYPES:
                     errs.append(f"group {g.pattern!r}: state_dtype "
                                 f"{g.state_dtype!r} not in "
@@ -173,13 +195,18 @@ class CompressionSchedule:
     def uniform(cls, compressor: comp_lib.Compressor, carrier: str = "dense",
                 down_carrier: str = "dense",
                 down_compressor: Optional[comp_lib.Compressor] = None,
-                state_dtype: Optional[str] = None) -> "CompressionSchedule":
+                state_dtype: Optional[str] = None,
+                cross_carrier: str = "dense",
+                cross_compressor: Optional[comp_lib.Compressor] = None
+                ) -> "CompressionSchedule":
         """The one-group schedule equivalent to today's single-knob config —
         the regression anchor (bit-identical to the legacy path)."""
         return cls((Group(pattern="*", compressor=compressor, carrier=carrier,
                           down_carrier=down_carrier,
                           down_compressor=down_compressor,
-                          state_dtype=state_dtype),))
+                          state_dtype=state_dtype,
+                          cross_carrier=cross_carrier,
+                          cross_compressor=cross_compressor),))
 
     @property
     def has_downlink(self) -> bool:
@@ -341,28 +368,46 @@ def _grouped_round(schedule: CompressionSchedule, method, grads: PyTree,
 
 
 def round_batched(schedule: CompressionSchedule, method, grads: PyTree,
-                  states: Dict, dp: int, rng, eta=None, mask=None
-                  ) -> Tuple[PyTree, Dict]:
+                  states: Dict, dp: int, rng, eta=None, mask=None,
+                  pods: int = 1) -> Tuple[PyTree, Dict]:
     """Per-group client legs with clients on a leading axis (the vmap
     runtimes). Each group independently picks its carrier's plan and builds
     its own wire; results merge back onto the full treedef. ``mask`` is an
     optional (dp,) cohort mask (DESIGN.md §11): each group zeroes the
     non-sampled clients' contribution before its own aggregation — the
     freeze/rescale postlude stays at the CALLER (one method/mode across all
-    groups). Returns ``(msg_mean, new_states)``."""
+    groups). ``pods > 1`` (DESIGN.md §13) returns PER-POD means on a leading
+    pods axis (pod-major client blocks) instead of the global mean — the
+    intra hop of the hierarchical topology; the caller's pod tier owns the
+    cross hop. Returns ``(msg_mean, new_states)``."""
+    if pods > 1 and dp % pods:
+        raise ValueError(f"pods={pods} must divide the client count {dp}")
+
+    def agg(leaves_list):
+        if pods > 1:
+            m = dp // pods
+            return jax.tree_util.tree_map(
+                lambda c: c.reshape(pods, m, *c.shape[1:]).mean(1),
+                leaves_list)
+        return jax.tree_util.tree_map(lambda c: c.mean(0), leaves_list)
+
     def leg(m_g, carrier, plan, grads_g, states_g, r_g):
         if plan == "fused":
             c_tree, new_st = carrier.fused_update(
                 m_g, grads_g, states_g, eta=eta, batched=True)
             if mask is not None:
                 c_tree = part_lib.apply_mask(mask, c_tree)
-            return jax.tree_util.tree_map(lambda c: c.mean(0),
-                                          c_tree), new_st
+            return agg(c_tree), new_st
         if plan == "fused_wire":
             if mask is not None:
                 # unreachable behind the spec/build construction errors
                 raise ValueError("sampled participation cannot run the "
                                  "fused_wire plan")
+            if pods > 1:
+                # unreachable behind the spec/build construction errors
+                raise ValueError("the fused_wire plan cannot run under a "
+                                 "hierarchical topology (its wire IS the "
+                                 "global aggregation)")
             return carrier.fused_wire_round(
                 m_g, grads_g, states_g, eta=eta, batched=True, dp=dp)
         if plan == "wire":
@@ -374,7 +419,9 @@ def round_batched(schedule: CompressionSchedule, method, grads: PyTree,
             c_tree, agg_g = carrier_lib.wire_round_batched(
                 carrier, m_g.compressor, deltas, dp)
             _, new_st = jax.vmap(m_g.post_compress)(c_tree, ctxs)
-            return agg_g, new_st
+            # per-pod means of the decoded client messages; the global
+            # aggregate the carrier built is unused and DCE'd under jit
+            return (agg(c_tree) if pods > 1 else agg_g), new_st
         if r_g is None:
             msgs, new_st = jax.vmap(
                 lambda g, s, m=m_g: m.update(g, s, None, eta=eta))(
@@ -386,7 +433,7 @@ def round_batched(schedule: CompressionSchedule, method, grads: PyTree,
                 grads_g, states_g, rngs)
         if mask is not None:
             msgs = part_lib.apply_mask(mask, msgs)
-        return jax.tree_util.tree_map(lambda m: m.mean(0), msgs), new_st
+        return agg(msgs), new_st
 
     return _grouped_round(schedule, method, grads, states, rng, eta, leg)
 
@@ -477,6 +524,42 @@ def downlink_round_grouped(schedule: CompressionSchedule, g_server: PyTree,
 
 
 # ---------------------------------------------------------------------------
+# grouped cross-pod hop (pod aggregator → server, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def cross_round_grouped(schedule: CompressionSchedule, t_new: PyTree,
+                        b: PyTree, rng) -> PyTree:
+    """Per-group CROSS-pod hop for ONE pod aggregator: groups with a
+    non-trivial cross carrier ship C_cross(t' − b) and integrate the decode
+    (the exact ``ef.downlink_sync`` semantics — the uplink twin of the §8
+    broadcast memory); trivial groups are transparent, ``b' = t'``
+    bit-exactly. ``rng`` is the pod's cross rng (already folded with
+    CROSS_FOLD and the pod index by the caller); groups decorrelate via the
+    same ``_group_rng`` fold every other grouped leg uses. Returns the new
+    broadcast state ``b'`` on the full treedef."""
+    treedef = jax.tree_util.tree_structure(t_new)
+    n_leaves = treedef.num_leaves
+    idx = _group_indices(schedule, t_new)
+    ng = len(schedule.groups)
+
+    out: List = [None] * n_leaves
+    for gi, grp in enumerate(schedule.groups):
+        ii = idx[gi]
+        if not ii:
+            continue
+        t_g = _take(t_new, ii)
+        if grp.trivial_cross:
+            _scatter(out, ii, t_g)
+            continue
+        car = carrier_lib.make(grp.cross_carrier)
+        _, b_new_g = ef_lib.downlink_sync(car, grp.cross_comp(), t_g,
+                                          _take(b, ii),
+                                          rng=_group_rng(rng, gi, ng))
+        _scatter(out, ii, b_new_g)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
 # accounting — per-group wire words (DESIGN.md §9 rules)
 # ---------------------------------------------------------------------------
 
@@ -487,7 +570,9 @@ def wire_words_tree(schedule: CompressionSchedule, method, tree: PyTree,
     group and in total. Follows the plan that would EXECUTE: a group whose
     carrier degrades to the dense plan (or fuses — the fused wire is dense)
     ships its dense word count. ``direction='down'`` counts the broadcast
-    instead (a group with no downlink honestly ships its dense leaves)."""
+    instead (a group with no downlink honestly ships its dense leaves);
+    ``direction='cross'`` counts ONE pod aggregator's cross-pod message
+    (DESIGN.md §13 — callers multiply by pods)."""
     idx = _group_indices(schedule, tree)
     leaves = _leaves(tree)
     per: List[float] = []
@@ -500,6 +585,13 @@ def wire_words_tree(schedule: CompressionSchedule, method, tree: PyTree,
                 d = int(leaves[i].size)
                 total += (carrier_lib.downlink_words(car, comp, d)
                           if grp.has_downlink else float(d))
+        elif direction == "cross":
+            car = carrier_lib.make(grp.cross_carrier)
+            comp = grp.cross_comp()
+            for i in idx[gi]:
+                d = int(leaves[i].size)
+                total += (float(d) if grp.trivial_cross
+                          else carrier_lib.downlink_words(car, comp, d))
         else:
             m_g = group_method(method, grp)
             car = carrier_lib.make(grp.carrier)

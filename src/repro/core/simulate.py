@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.core import carriers as carrier_lib
 from repro.core import compressors as comp_lib
 from repro.core import ef as ef_lib
+from repro.core import hierarchy as hier_lib
 from repro.core import participation as part_lib
 from repro.core import schedule as sched_lib
 
@@ -64,6 +65,16 @@ class SimConfig:
     # mode='async' never runs here — core/participation.py::run_async is the
     # event-driven simulator.
     participation: Optional[part_lib.Participation] = None
+    # two-tier hierarchical aggregation (DESIGN.md §13): clients → pod
+    # aggregator → global server, with the cross-pod hop on its own
+    # carrier/compressor and its own EF memory per pod. None or pods=1 is
+    # the flat loop, bit-identical to today. Mirrors EFConfig.hops exactly
+    # (same Hops knob, same trivial-cross flat-equivalence regime).
+    hops: Optional[hier_lib.Hops] = None
+
+    @property
+    def effective_hops(self) -> Optional[hier_lib.Hops]:
+        return hier_lib.effective(self.hops)
 
     @property
     def has_downlink(self) -> bool:
@@ -121,13 +132,34 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
     sampling = part is not None and part.is_sampling
     m_cohort = part.cohort_size(cfg.n) if sampling else cfg.n
 
+    # two-tier hierarchy (DESIGN.md §13): mirrors ef_round exactly — a
+    # non-trivial cross hop pod-means the intra aggregation (pod-major
+    # client blocks) and runs the per-pod cross sync; a trivial cross keeps
+    # the legacy global aggregation ops verbatim (flat-equivalence anchor)
+    hops = cfg.effective_hops
+    trivial_cross = hops is None or hier_lib.cross_is_trivial(
+        hops, cfg.schedule)
+    want_pods = hops is not None and not trivial_cross
+    if hops is not None:
+        hier_lib.check_pods(hops, cfg.n)
+        if sampling:
+            raise ValueError(
+                "sampled participation does not compose with hierarchical "
+                "aggregation (guarded at spec/build construction)")
+
+    def agg_mean(tree):
+        if want_pods:
+            return hier_lib.pod_mean(tree, hops.pods)
+        return jax.tree_util.tree_map(lambda m: m.mean(0), tree)
+
     def step(carry, t):
+        pods_st = carry[-1] if hops is not None else None
         if has_down:
             # g_est is what the clients reconstructed last round — the
             # broadcast memory h under EF21-BC, or the latest naive decode
-            x, states, g_server, g_est, rng = carry
+            x, states, g_server, g_est, rng = carry[:5]
         else:
-            x, states, g_server, rng = carry
+            x, states, g_server, rng = carry[:4]
             g_est = g_server        # implicit dense broadcast
         rng, r_grad, r_comp = jax.random.split(rng, 3)
         eta0 = cfg.eta if cfg.eta is not None else getattr(method, "eta", 1.0)
@@ -163,20 +195,25 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
             grads = jax.vmap(client_grads)(clients, r_grads)
             msg_mean, states_new = sched_lib.round_batched(
                 cfg.schedule, method, grads, states, cfg.n, r_comp, eta_t,
-                mask=mask)
+                mask=mask, pods=hops.pods if want_pods else 1)
         elif plan == "fused":
             grads = jax.vmap(client_grads)(clients, r_grads)
             c_tree, states_new = carrier.fused_update(
                 method, grads, states, eta=eta_t, batched=True)
             if mask is not None:
                 c_tree = part_lib.apply_mask(mask, c_tree)
-            msg_mean = jax.tree_util.tree_map(lambda c: c.mean(0), c_tree)
+            msg_mean = agg_mean(c_tree)
         elif plan == "fused_wire":
             if mask is not None:
                 # unreachable behind the spec/build construction errors: the
                 # mega-kernel aggregates inside, no per-client wire to mask
                 raise ValueError(
                     "sampled participation cannot run the fused_wire plan")
+            if hops is not None:
+                raise ValueError(
+                    "fused_wire carriers aggregate all clients inside the "
+                    "mega-kernel — there is no per-pod message to "
+                    "re-aggregate (guarded at spec/build construction)")
             grads = jax.vmap(client_grads)(clients, r_grads)
             msg_mean, states_new = carrier.fused_wire_round(
                 method, grads, states, eta=eta_t, batched=True, dp=cfg.n)
@@ -189,8 +226,11 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
                 # zero-masked wires: C(0) = 0 exactly, the carrier's own
                 # aggregation then folds only the sampled cohort
                 deltas = part_lib.apply_mask(mask, deltas)
-            c_tree, msg_mean = carrier_lib.wire_round_batched(
+            c_tree, wire_mean = carrier_lib.wire_round_batched(
                 carrier, method.compressor, deltas, cfg.n)
+            # non-trivial hops pod-mean the per-client messages (local_c IS
+            # the decode of what traveled); the global aggregate is DCE'd
+            msg_mean = agg_mean(c_tree) if want_pods else wire_mean
             _, states_new = jax.vmap(method.post_compress)(c_tree, ctxs)
         else:
             def client_update(c, st, rg, rc):
@@ -199,7 +239,7 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
                 clients, states, r_grads, _client_rngs(r_comp, cfg.n))
             if mask is not None:
                 msgs = part_lib.apply_mask(mask, msgs)
-            msg_mean = jax.tree_util.tree_map(lambda m: m.mean(0), msgs)
+            msg_mean = agg_mean(msgs)
         if mask is not None:
             # Bells & Whistles: delta methods fold (1/n)Σ_S as-is, absolute
             # methods rescale to the cohort mean; non-sampled clients keep
@@ -207,7 +247,17 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
             msg_mean = part_lib.rescale_message(
                 method, msg_mean, cfg.n, m_cohort)
             states_new = part_lib.freeze_tree(mask, states_new, states)
-        g_server_new = ef_lib.server_step(method, g_server, msg_mean)
+        if want_pods:
+            # the pod tier: per-pod target update + cross hop + server
+            # integration, rng off the round key exactly like ef_round
+            pods_new, g_server_new = hier_lib.round_pods_batched(
+                hops, cfg.schedule, method, msg_mean, pods_st, g_server,
+                r_comp)
+        else:
+            g_server_new = ef_lib.server_step(method, g_server, msg_mean)
+            pods_new = None if hops is None else \
+                hier_lib.trivial_bookkeeping(method, pods_st, msg_mean)
+        pods_tail = (pods_new,) if hops is not None else ()
 
         gn = ef_lib.tree_norm_sq(problem.full_grad(x_next))
         fl = problem.loss(x_next)
@@ -221,12 +271,18 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
                 g_est_new, _ = ef_lib.downlink_sync(
                     down_car, down_comp, g_server_new, g_est, rng=r_down,
                     memory=cfg.down_memory)
-            return (x_next, states_new, g_server_new, g_est_new, rng), (gn, fl)
-        return (x_next, states_new, g_server_new, rng), (gn, fl)
+            return (x_next, states_new, g_server_new, g_est_new,
+                    rng) + pods_tail, (gn, fl)
+        return (x_next, states_new, g_server_new, rng) + pods_tail, (gn, fl)
 
     # h⁰ = g⁰ (downlink_init): the init handshake ships dense state once
     carry0 = (x0, states, g_server, ef_lib.downlink_init(g_server), rng) \
         if has_down else (x0, states, g_server, rng)
+    if hops is not None:
+        # per-pod EF memory rides the scan carry (kill-and-resume of the
+        # production runtimes carries the same tree via ef_state['pods'])
+        carry0 = carry0 + (jax.vmap(lambda _: hier_lib.pod_init(x0))(
+            jnp.arange(hops.pods)),)
     (x_fin, *_), (gns, fls) = jax.lax.scan(
         step, carry0, jnp.arange(cfg.steps))
     d_total = ef_lib.tree_dim(x0)
@@ -264,6 +320,16 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
         down_words = down_each * cfg.n
         coords = method.coords_per_message(d_total) * m_cohort
         group_words = {}
+    # per-hop accounting (DESIGN.md §13): under a flat topology the only
+    # client→server hop IS the cross-pod wire (cross := up, intra := 0);
+    # under hops the n client messages ride the fast intra-pod links and the
+    # slow cross-pod links carry one compressed innovation per pod
+    if hops is None:
+        intra_words, cross_words = 0.0, up_words
+    else:
+        intra_words = up_words
+        cross_words = hier_lib.wire_words_cross(hops, cfg.schedule, method,
+                                                x0)
     return {
         "grad_norm_sq": gns,
         "loss": fls,
@@ -277,7 +343,11 @@ def run(problem, method: ef_lib.Method, cfg: SimConfig, rng: jax.Array) -> Dict:
         "wire_words_per_round": up_words,
         "wire_words_up_per_round": up_words,
         "wire_words_down_per_round": down_words,
-        "wire_words_total_per_round": up_words + down_words,
+        "wire_words_total_per_round": intra_words + cross_words + down_words,
+        # per-hop split (DESIGN.md §13): intra = per-message words × n
+        # clients, cross = per-pod innovation words × pods
+        "wire_words_intra_per_round": intra_words,
+        "wire_words_cross_per_round": cross_words,
         **group_words,
     }
 

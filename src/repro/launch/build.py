@@ -95,7 +95,7 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
                       down_carrier: str = "dense",
                       down_compressor: Optional[comp_lib.Compressor] = None,
                       schedule=None, overlap: bool = False,
-                      participation=None) -> dist.EFConfig:
+                      participation=None, hops=None) -> dist.EFConfig:
     """EFConfig assembly + the authoritative carrier-plan checks. Pass a
     prebuilt ``method`` (launch/session.py builds one from the RunSpec,
     including method_kw/compressor_kw) to skip the name-based construction
@@ -144,6 +144,46 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
                 f"({', '.join(bad)}): the mega-kernel aggregates all clients "
                 "inside, leaving no per-client wire to mask — use "
                 "carrier='quant8'/'quant4'")
+    # two-tier topology (DESIGN.md §13): the authoritative construction
+    # checks mirroring RunSpec._validate_hops — pod clients are already one
+    # level of hierarchy, a sampled cohort has no pod-stable membership, the
+    # fused wire IS the global aggregation, and on a real mesh the pod count
+    # must be the mesh's pod axis (the sharded runtime reduces over it)
+    from repro.core import hierarchy as hier_lib
+    hops_eff = hier_lib.effective(hops)
+    if hops_eff is not None:
+        if plan.client_granularity == "pod":
+            raise ValueError(
+                "hops with client_granularity='pod' stacks two pod "
+                "hierarchies: pod-granularity clients ARE one EF client per "
+                "pod already — pick one level")
+        if participation is not None and participation.is_sampling:
+            raise ValueError(
+                "sampled participation cannot run under a hierarchical "
+                "topology: a per-round cohort has no stable pod membership "
+                "for the pod aggregator's EF memory")
+        fused_wire_carriers = ("fused_quant8", "fused_quant4")
+        bad = [f"carrier={carrier!r}"] \
+            if schedule is None and carrier in fused_wire_carriers else []
+        if schedule is not None:
+            bad += [f"group {g.pattern!r} carrier={g.carrier!r}"
+                    for g in schedule.groups
+                    if g.carrier in fused_wire_carriers]
+        if bad:
+            raise ValueError(
+                f"the fused quantized wire cannot run under a hierarchical "
+                f"topology ({', '.join(bad)}): its wire IS the global "
+                "aggregation — there is no per-pod innovation to re-compress")
+        if mesh.size > 1:
+            if "pod" not in mesh.axis_names:
+                raise ValueError(
+                    f"hops.pods={hops_eff.pods} needs a mesh with a 'pod' "
+                    f"axis (got {mesh.axis_names}) — use --mesh multi_pod")
+            if mesh.shape["pod"] != hops_eff.pods:
+                raise ValueError(
+                    f"hops.pods={hops_eff.pods} != mesh pod axis "
+                    f"{mesh.shape['pod']}: the sharded runtime reduces the "
+                    "intra-pod hop over the mesh's pod blocks")
     # the carrier itself is the source of truth for what it can execute; an
     # explicitly requested fused carrier that would silently degrade to the
     # unfused dense plan is a misconfiguration worth failing fast on, and any
@@ -194,7 +234,8 @@ def default_ef_config(mesh, plan: sh.ShardPlan,
     return dist.EFConfig(method=method, carrier=carrier,
                          data_axes=tuple(c_ax), down_carrier=down_carrier,
                          down_compressor=down_compressor, schedule=schedule,
-                         overlap=overlap, participation=participation)
+                         overlap=overlap, participation=participation,
+                         hops=hops)
 
 
 def _replicated(mesh, x):
@@ -229,7 +270,7 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh,
             efc, model_lib.init_params(cfg, jax.random.PRNGKey(0)), n))
     ef_specs_p = sh.ef_state_pspecs(cfg, mesh, plan, efc.method,
                                     downlink=efc.has_downlink,
-                                    schedule=efc.schedule)
+                                    schedule=efc.schedule, hops=efc.hops)
     ef_state = sh._sds(ef_shapes, ef_specs_p, mesh)
 
     # per-client grads share the client-state layout (leading client axis)

@@ -37,17 +37,54 @@ PROD_MODEL = 16
 PROD_PODS = 2
 
 
+def _shrink_shape(shape: Tuple[int, ...], n_devices: int) -> Tuple[int, ...]:
+    """Fit a production mesh shape onto fewer devices, left-to-right
+    (pod-major): each axis takes the largest divisor of the remaining device
+    count no bigger than its production size. The pod axis is first, so a
+    forced-host-device run keeps the full pod count whenever it can —
+    (2, 16, 16) on 8 devices becomes (2, 4, 1), preserving the two-pod
+    topology the hierarchical tests exercise."""
+    rem = n_devices
+    out = []
+    for want in shape:
+        for d in range(min(want, rem), 0, -1):
+            if rem % d == 0:
+                out.append(d)
+                rem //= d
+                break
+    return tuple(out)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
-    Multi-pod:  (pod=2, data=16, model=16) = 512 chips across DCI."""
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips across DCI.
+    On hosts with fewer devices (CI's forced-8-device CPU runs) the shape
+    shrinks pod-major (``_shrink_shape``) instead of failing, so
+    ``--mesh multi_pod`` is portable to any device count."""
     shape = (PROD_PODS, PROD_DATA, PROD_MODEL) if multi_pod \
         else (PROD_DATA, PROD_MODEL)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n_dev = len(jax.devices())
+    need = 1
+    for s in shape:
+        need *= s
+    if n_dev < need:
+        shape = _shrink_shape(shape, n_dev)
     return make_mesh(shape, axes)
 
 
+def client_axes(mesh) -> Tuple[str, ...]:
+    """The client axes in POD-MAJOR order — ('pod', 'data') whenever the pod
+    axis exists, regardless of the mesh's own axis order. This is the order
+    ``shardings.ef_state_pspecs`` shards client state with and the order the
+    hierarchical runtimes compose client_index with (client i belongs to pod
+    i // (n/pods), core/hierarchy.pod_mean) — both runtimes must agree on
+    who is in which pod."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
 def data_axes(mesh) -> Tuple[str, ...]:
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return client_axes(mesh)
 
 
 def dp_size(mesh) -> int:

@@ -87,9 +87,12 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--decode-steps", type=int, default=32)
     # fleet mode
-    ap.add_argument("--serve-stream", default=None, metavar="DIR",
-                    help="subscribe a replica fleet to this wire stream "
-                         "(spec comes from its bootstrap, not from flags)")
+    ap.add_argument("--serve-stream", default=None, metavar="DIR|tcp://H:P",
+                    help="subscribe a replica fleet to this wire stream — a "
+                         "stream directory on a (shared) filesystem, or "
+                         "tcp://host:port of a remote TailServer "
+                         "(python -m repro.launch.transport DIR --port P); "
+                         "spec comes from the stream's bootstrap, not flags")
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--lags", default=None,
                     help="comma-separated per-replica lags, e.g. '0,4'")

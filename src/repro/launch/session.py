@@ -130,6 +130,48 @@ def _group_down_compressor(entry: Dict[str, Any]
     return cls(**kw)
 
 
+def _group_cross_compressor(entry: Dict[str, Any]
+                            ) -> Optional[comp_lib.Compressor]:
+    """The group's CROSS-POD compressor: None for a dense cross carrier (the
+    trivial cross — the pod target ships exactly), otherwise the group's
+    compressor class re-budgeted to the group's cross_ratio
+    (absolute-budget kwargs dropped — the make_down_compressor rule, per
+    group, applied to the pod→server hop)."""
+    if entry["cross_carrier"] == "dense":
+        return None
+    cls = comp_lib.REGISTRY[entry["compressor"]]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    kw = {k: v for k, v in entry["compressor_kw"].items()
+          if k in fields and k not in ("k", "k_per_block", "ratio")}
+    if "ratio" in fields:
+        kw["ratio"] = entry["cross_ratio"]
+    return cls(**kw)
+
+
+def make_hops(spec: spec_lib.RunSpec):
+    """The two-tier topology named by the spec's ``hops`` (DESIGN.md §13),
+    or None when absent / pods == 1 (the flat path — bit-identical, zero
+    hierarchical machinery). The cross compressor follows the
+    make_down_compressor rule: None for a dense cross carrier, otherwise the
+    uplink compressor class re-budgeted to ``cross_ratio`` — the cross hop
+    is one message per pod, integrated exactly like a broadcast."""
+    h = spec_lib.hops_preview(spec)
+    if not h["hierarchical"]:
+        return None
+    from repro.core import hierarchy as hier_lib
+    cross_comp = None
+    if h["cross_carrier"] != "dense":
+        cls = comp_lib.REGISTRY[spec.compressor]
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in spec.compressor_kw.items()
+              if k in fields and k not in ("k", "k_per_block", "ratio")}
+        if "ratio" in fields:
+            kw["ratio"] = h["cross_ratio"]
+        cross_comp = cls(**kw)
+    return hier_lib.Hops(pods=h["pods"], cross_carrier=h["cross_carrier"],
+                         cross_compressor=cross_comp)
+
+
 def make_schedule(spec: spec_lib.RunSpec):
     """The CompressionSchedule named by the spec's ``groups``, or None when
     the spec has no explicit groups (the legacy single-compressor path — a
@@ -146,7 +188,9 @@ def make_schedule(spec: spec_lib.RunSpec):
             carrier=entry["carrier"],
             down_carrier=entry["downlink_carrier"],
             down_compressor=_group_down_compressor(entry),
-            state_dtype=entry["ef_state_dtype"]))
+            state_dtype=entry["ef_state_dtype"],
+            cross_carrier=entry["cross_carrier"],
+            cross_compressor=_group_cross_compressor(entry)))
     return sched_lib.CompressionSchedule(tuple(groups))
 
 
@@ -198,7 +242,17 @@ def ef_config(spec: spec_lib.RunSpec, mesh, plan: sh.ShardPlan
         method=make_method(spec), down_carrier=spec.downlink_carrier,
         down_compressor=make_down_compressor(spec),
         schedule=make_schedule(spec), overlap=spec.overlap,
-        participation=make_participation(spec))
+        participation=make_participation(spec), hops=make_hops(spec))
+
+
+def distributed_init(coordinator: str, num_processes: int,
+                     process_id: int) -> bool:
+    """Facade re-export of launch/multiproc.distributed_init: join the
+    multi-process jax.distributed fleet BEFORE constructing a Session (jax
+    must not have created backends yet). Idempotent; see launch/multiproc.py
+    for the CLI smoke that proves the fabric."""
+    from repro.launch import multiproc
+    return multiproc.distributed_init(coordinator, num_processes, process_id)
 
 
 # ---------------------------------------------------------------------------
@@ -314,7 +368,8 @@ class Session:
                 sh.params_pspecs(cfg, mesh))
             state_specs = sh.ef_state_pspecs(cfg, mesh, plan, efc.method,
                                              downlink=efc.has_downlink,
-                                             schedule=efc.schedule)
+                                             schedule=efc.schedule,
+                                             hops=efc.hops)
             step_fn = jax.jit(dist.make_train_step(
                 loss_fn, efc, opt, n, mesh=mesh, grads_specs=grads_specs,
                 state_specs=state_specs))

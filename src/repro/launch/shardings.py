@@ -80,14 +80,20 @@ def _spec_map(fn, tree):
 
 
 def ef_state_pspecs(cfg: ArchConfig, mesh, plan: ShardPlan, method,
-                    downlink: bool = False, schedule=None) -> Dict:
+                    downlink: bool = False, schedule=None,
+                    hops=None) -> Dict:
     """Mirror of distributed.init_ef_state structure. ``downlink`` adds the
     server broadcast memory h (DESIGN.md §8) — replicated-in-value like the
     server estimate, so it shares the server's param pspecs. With a
     ``schedule`` (core/schedule.py) the state-key sample comes from the
     grouped init, so per-group EF-state dtypes (and any future per-group
     state shape) flow through exactly the trees the runtime will build —
-    pspecs themselves are per-leaf and identical across groups."""
+    pspecs themselves are per-leaf and identical across groups. ``hops``
+    (core/hierarchy.Hops with pods > 1) adds the pod-aggregator memory
+    {'t', 'b'} (DESIGN.md §13) — one slot per pod, leading dim sharded over
+    the 'pod' axis, body sharded exactly like the server params (each pod's
+    target/broadcast pair is a param-shaped tree living on that pod's
+    chips)."""
     pspecs = params_pspecs(cfg, mesh)
     c_ax = client_axis(mesh, plan)
     d_ax = mesh_lib.data_axes(mesh)
@@ -125,6 +131,14 @@ def ef_state_pspecs(cfg: ArchConfig, mesh, plan: ShardPlan, method,
     out = {"clients": client_specs, "server": pspecs}
     if downlink:
         out["h"] = pspecs
+    from repro.core import hierarchy as hier_lib
+    if hier_lib.effective(hops) is not None:
+        if "pod" not in mesh.axis_names:
+            raise ValueError(
+                "hops.pods > 1 needs a mesh with a 'pod' axis "
+                f"(got axes {mesh.axis_names}) — use --mesh multi_pod")
+        pod_tree = _spec_map(lambda s: P("pod", *s), pspecs)
+        out["pods"] = {"t": pod_tree, "b": pod_tree}
     return out
 
 

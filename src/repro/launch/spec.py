@@ -74,7 +74,15 @@ from repro.configs import base as cb
 # every v3 spec always executed), and the empty dict is the default, excluded
 # from the sparse spec_hash, so v3 checkpoints stay resumable. v2 chains
 # through the v3 upgrade first.
-SCHEMA_VERSION = 4
+# v5: two-tier hierarchical aggregation — the ``hops`` field selects the
+# pod topology ({pods, cross_carrier, cross_ratio}, DESIGN.md §13): clients
+# → pod aggregator → global server, the cross-pod hop on its own carrier.
+# v4 specs are AUTO-UPGRADED on read: an absent ``hops`` IS the flat
+# topology (pods=1, zero hierarchical machinery — exactly what every v4
+# spec always executed), and the empty dict is the default, excluded from
+# the sparse spec_hash, so v4 checkpoints stay resumable (byte-stable
+# hashes). v2/v3 chain through the earlier upgrades first.
+SCHEMA_VERSION = 5
 
 # ---------------------------------------------------------------------------
 # jax-free mirrors of the jax-importing registries (sync-tested in
@@ -117,7 +125,7 @@ MOE_IMPLS = ("dispatch", "dense")
 # reserves (a pattern containing one could never round-trip)
 GROUP_KEYS = frozenset({"pattern", "carrier", "compressor", "ratio",
                         "compressor_kw", "downlink_carrier", "downlink_ratio",
-                        "ef_state_dtype"})
+                        "ef_state_dtype", "cross_carrier", "cross_ratio"})
 GROUP_STATE_DTYPES = (None, "bfloat16", "float32")
 PATTERN_RESERVED = set("=,:@")
 
@@ -129,6 +137,13 @@ PATTERN_RESERVED = set("=,:@")
 # on the synchronous runtimes (launch/build.py).
 PART_MODES = ("full", "sampled", "async")
 PART_KEYS = frozenset({"mode", "fraction", "seed"})
+
+# two-tier hierarchical aggregation surface (mirror of core/hierarchy.py,
+# sync-tested): the keys a ``hops`` dict may carry. The cross-pod hop is one
+# message per pod integrated like a broadcast, so its carrier universe is
+# the downlink's (no fused — the fused kernel is the uplink client update).
+HOP_KEYS = frozenset({"pods", "cross_carrier", "cross_ratio"})
+CROSS_CARRIERS = DOWN_CARRIERS
 
 
 def pattern_token_errors(pattern: str) -> List[str]:
@@ -305,13 +320,20 @@ def resolved_groups(spec: "RunSpec") -> List[Dict[str, Any]]:
     ``norm=dense``) and to the spec's compressor otherwise, and
     ``compressor_kw``, which only carries over when the group runs the
     spec's own compressor class."""
+    # per-group cross-hop defaults come from the spec's hops (--hops sets
+    # the uniform cross; a group entry overrides it for its own leaves)
+    hop_car = spec.hops.get("cross_carrier", "dense") \
+        if isinstance(spec.hops, dict) else "dense"
+    hop_ratio = spec.hops.get("cross_ratio", spec.ratio) \
+        if isinstance(spec.hops, dict) else spec.ratio
     if not spec.groups:
         return [{"pattern": "*", "carrier": spec.carrier,
                  "compressor": spec.compressor, "ratio": spec.ratio,
                  "compressor_kw": dict(spec.compressor_kw),
                  "downlink_carrier": spec.downlink_carrier,
                  "downlink_ratio": spec.downlink_ratio,
-                 "ef_state_dtype": spec.ef_state_dtype}]
+                 "ef_state_dtype": spec.ef_state_dtype,
+                 "cross_carrier": hop_car, "cross_ratio": hop_ratio}]
     out = []
     for e in spec.groups:
         carrier = e.get("carrier", "dense")
@@ -330,6 +352,8 @@ def resolved_groups(spec: "RunSpec") -> List[Dict[str, Any]]:
                                       spec.downlink_carrier),
             "downlink_ratio": e.get("downlink_ratio", spec.downlink_ratio),
             "ef_state_dtype": e.get("ef_state_dtype", spec.ef_state_dtype),
+            "cross_carrier": e.get("cross_carrier", hop_car),
+            "cross_ratio": e.get("cross_ratio", hop_ratio),
         })
     return out
 
@@ -412,6 +436,78 @@ def participation_preview(spec: "RunSpec") -> Dict[str, Any]:
             "n": n, "cohort": cohort}
 
 
+# ---------------------------------------------------------------------------
+# two-tier hierarchical aggregation: jax-free grammar + preview (§13)
+# ---------------------------------------------------------------------------
+
+def parse_hops_flag(s: str) -> Dict[str, Any]:
+    """Parse the ``--hops`` value into a hops dict. Two forms:
+
+      grammar   ``"pods=2,cross=quant4:0.05"`` — comma-separated
+                ``pods=<int>`` and ``cross=carrier[:ratio]`` entries
+      JSON      a ``{...}`` dict, for exact round-trips of any keyset
+
+    ``format_hops_flag`` is the inverse; grammar-expressible dicts
+    round-trip exactly (tier-1 tested)."""
+    if s.lstrip().startswith("{"):
+        return json.loads(s)
+    out: Dict[str, Any] = {}
+    for part in s.split(","):
+        part = part.strip()
+        key, sep, rhs = part.partition("=")
+        if not sep or not rhs:
+            raise ValueError(f"bad --hops entry {part!r}: want "
+                             "'pods=<int>' or 'cross=carrier[:ratio]'")
+        if key == "pods":
+            out["pods"] = int(rhs)
+        elif key == "cross":
+            carrier, sep, ratio = rhs.partition(":")
+            out["cross_carrier"] = carrier
+            if sep:
+                out["cross_ratio"] = float(ratio)
+        else:
+            raise ValueError(f"bad --hops key {key!r}: want 'pods' or "
+                             "'cross'")
+    return out
+
+
+def format_hops_flag(h: Dict[str, Any]) -> str:
+    """The canonical ``--hops`` value for a hops dict: the compact grammar
+    when the keyset is grammar-expressible, JSON otherwise."""
+    if not set(h) <= HOP_KEYS:
+        return json.dumps(h, sort_keys=True)
+    parts = []
+    if "pods" in h:
+        parts.append(f"pods={h['pods']}")
+    if "cross_carrier" in h:
+        s = f"cross={h['cross_carrier']}"
+        if "cross_ratio" in h:
+            s += f":{h['cross_ratio']}"
+        parts.append(s)
+    elif "cross_ratio" in h:
+        return json.dumps(h, sort_keys=True)
+    return ",".join(parts)
+
+
+def hops_preview(spec: "RunSpec") -> Dict[str, Any]:
+    """Jax-free resolved hop topology: pods/cross carrier/ratio with
+    defaults filled in, the per-pod client count, and the flat-equivalence
+    predicate (``trivial_cross`` — a dense cross ships the exact pod target,
+    so the round is bit-identical to the flat path). Mirrors
+    ``core.hierarchy.Hops`` semantics exactly (sync-tested in
+    tests/test_hierarchy.py)."""
+    h = spec.hops
+    pods = int(h.get("pods", 1)) if h else 1
+    cross_carrier = h.get("cross_carrier", "dense") if h else "dense"
+    cross_ratio = float(h.get("cross_ratio", spec.ratio)) if h else spec.ratio
+    n = spec.n_clients_preview()
+    return {"pods": pods, "cross_carrier": cross_carrier,
+            "cross_ratio": cross_ratio, "n": n,
+            "clients_per_pod": n // pods if pods and n % pods == 0 else None,
+            "hierarchical": pods > 1,
+            "trivial_cross": cross_carrier == "dense"}
+
+
 def _known_arch(arch: str) -> bool:
     return arch in cb.ARCH_ALIASES or arch in cb.ARCH_IDS
 
@@ -483,6 +579,17 @@ class RunSpec:
     # names the event-driven simulator and never runs the synchronous
     # drivers. Keys ⊆ PART_KEYS.
     participation: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # two-tier hierarchical aggregation (DESIGN.md §13): clients → pod
+    # aggregator → global server, the cross-pod hop on its own carrier.
+    # Empty dict = the flat topology (pods=1, zero hierarchical machinery —
+    # the v4 meaning, bit-identical, excluded from the sparse spec_hash).
+    # {"pods": 2, "cross_carrier": "quant4", "cross_ratio": 0.05} keeps the
+    # intra-pod hop on the spec's carrier/schedule and ships one quant4
+    # innovation per pod across the slow links, error-fed by a per-pod EF
+    # memory (--hops pods=2,cross=quant4:0.05). Keys ⊆ HOP_KEYS. The cross
+    # compressor is the uplink compressor class re-budgeted to cross_ratio
+    # (launch/session.py::make_hops), exactly like the downlink's.
+    hops: Dict[str, Any] = dataclasses.field(default_factory=dict)
     method_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
     compressor_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -561,6 +668,7 @@ class RunSpec:
                             f"got {kw!r}")
         errs.extend(self._validate_groups())
         errs.extend(self._validate_participation())
+        errs.extend(self._validate_hops())
         # the (batch % clients) divisibility the runtime would assert
         # mid-step — checked for BOTH batch geometries a spec can run: the
         # interactive train geometry (global_batch, Session.train) and,
@@ -645,11 +753,15 @@ class RunSpec:
                 errs.append(f"groups[{i}]: downlink carrier "
                             f"{e['downlink_carrier']!r} not in "
                             f"{sorted(DOWN_CARRIERS)}")
+            if e.get("cross_carrier", "dense") not in CROSS_CARRIERS:
+                errs.append(f"groups[{i}]: cross carrier "
+                            f"{e['cross_carrier']!r} not in "
+                            f"{sorted(CROSS_CARRIERS)}")
             if e.get("ef_state_dtype") not in GROUP_STATE_DTYPES:
                 errs.append(f"groups[{i}]: ef_state_dtype "
                             f"{e['ef_state_dtype']!r} not in "
                             f"{list(GROUP_STATE_DTYPES)}")
-            for key in ("ratio", "downlink_ratio"):
+            for key in ("ratio", "downlink_ratio", "cross_ratio"):
                 if key in e and not (isinstance(e[key], (int, float))
                                      and 0.0 < e[key] <= 1.0):
                     errs.append(f"groups[{i}]: {key} must be in (0, 1], "
@@ -731,6 +843,77 @@ class RunSpec:
                     "wire to mask — use carrier='quant8'/'quant4'")
         return errs
 
+    def _validate_hops(self) -> List[str]:
+        """Construction-time hop-topology validation, jax-free (the real
+        Hops re-validates authoritatively in session.make_hops /
+        launch/build.py)."""
+        h = self.hops
+        if not isinstance(h, dict):
+            return [f"hops must be a dict, got {h!r}"]
+        if not h:
+            return []
+        errs: List[str] = []
+        unknown = sorted(set(h) - HOP_KEYS)
+        if unknown:
+            errs.append(f"hops: unknown keys {unknown}; have "
+                        f"{sorted(HOP_KEYS)}")
+        pods = h.get("pods", 1)
+        if not isinstance(pods, int) or isinstance(pods, bool) or pods < 1:
+            errs.append(f"hops: pods must be an int >= 1, got {pods!r}")
+            return errs
+        cross = h.get("cross_carrier", "dense")
+        if cross not in CROSS_CARRIERS:
+            errs.append(f"hops: unknown cross carrier {cross!r}; have "
+                        f"{sorted(CROSS_CARRIERS)}")
+        ratio = h.get("cross_ratio", self.ratio)
+        if not (isinstance(ratio, (int, float))
+                and not isinstance(ratio, bool) and 0.0 < ratio <= 1.0):
+            errs.append(f"hops: cross_ratio must be in (0, 1], got {ratio!r}")
+        if pods == 1:
+            return errs
+        # pods > 1: the topology constraints
+        n = self.n_clients_preview() if self.mesh in MESHES else pods
+        if n % pods != 0:
+            errs.append(f"hops: pods={pods} must divide the {n} EF clients "
+                        f"of mesh={self.mesh!r} "
+                        f"granularity={self.client_granularity!r}")
+        if self.mesh == "pod":
+            errs.append("hops: mesh='pod' has no pod axis — hierarchical "
+                        "aggregation (pods > 1) needs mesh='multi_pod' or "
+                        "the single-device smoke mesh (vmap emulation)")
+        if self.mesh == "multi_pod" \
+                and pods != MESH_GEOM["multi_pod"]["pod"]:
+            errs.append(f"hops: pods={pods} must equal the multi_pod mesh's "
+                        f"pod axis ({MESH_GEOM['multi_pod']['pod']})")
+        if self.client_granularity == "pod":
+            errs.append("hops: client_granularity='pod' makes each pod ONE "
+                        "client — there is no intra-pod hop left to "
+                        "aggregate; use granularity='group'")
+        mode = self.participation.get("mode", "full") \
+            if isinstance(self.participation, dict) else "full"
+        if mode in ("sampled", "async"):
+            errs.append(
+                f"hops: participation mode {mode!r} does not compose with "
+                "hierarchical aggregation (a partial cohort breaks the "
+                "pod-major client blocks) — use mode='full'")
+        # the fused wire aggregates all clients inside the mega-kernel:
+        # there is no per-pod message left to re-aggregate
+        fused_wire_carriers = {"fused_quant8", "fused_quant4"}
+        bad = []
+        if self.carrier in fused_wire_carriers:
+            bad.append(f"carrier={self.carrier!r}")
+        for i, e in enumerate(self.groups):
+            if isinstance(e, dict) \
+                    and e.get("carrier") in fused_wire_carriers:
+                bad.append(f"groups[{i}] (pattern={e.get('pattern')!r})")
+        if bad:
+            errs.append(
+                f"hops: hierarchical aggregation cannot run the fused "
+                f"quantized wire ({', '.join(bad)}): the mega-kernel "
+                "aggregates all clients inside, leaving no per-pod message "
+                "— use carrier='quant8'/'quant4'")
+        return errs
+
     # -------------------------------------------------------------- previews
     def plan(self) -> Tuple[str, str]:
         """(execution plan, degradation reason) for this spec's carrier —
@@ -783,16 +966,19 @@ class RunSpec:
         if "version" not in d:
             raise ValueError("spec dict has no 'version' key — refusing to "
                              "guess the schema")
-        # v2 → v3 → v4 chained auto-upgrade: each bump is purely additive
-        # (v3's ``groups`` defaults to the uniform one-group schedule of the
-        # single-knob fields; v4's ``participation`` defaults to mode 'full'
-        # — exactly what every older spec always executed), so old dicts
-        # upgrade mechanically and round-trip at the current schema. v1
-        # (pre-downlink) stays rejected: its absence of downlink fields
+        # v2 → v3 → v4 → v5 chained auto-upgrade: each bump is purely
+        # additive (v3's ``groups`` defaults to the uniform one-group
+        # schedule of the single-knob fields; v4's ``participation``
+        # defaults to mode 'full'; v5's ``hops`` defaults to the flat
+        # topology — exactly what every older spec always executed), so old
+        # dicts upgrade mechanically and round-trip at the current schema.
+        # v1 (pre-downlink) stays rejected: its absence of downlink fields
         # changed execution.
         if d.get("version") == 2 and "groups" not in d:
             d = dict(d, version=3)
         if d.get("version") == 3 and "participation" not in d:
+            d = dict(d, version=4)
+        if d.get("version") == 4 and "hops" not in d:
             d = dict(d, version=SCHEMA_VERSION)
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = sorted(set(d) - known)
@@ -854,6 +1040,8 @@ class RunSpec:
                 out.extend([flag, format_schedule_flag(val)])
             elif kind == "participation":
                 out.extend([flag, format_participation_flag(val)])
+            elif kind == "hops":
+                out.extend([flag, format_hops_flag(val)])
             else:
                 out.extend([flag, str(val)])
         return out
@@ -908,6 +1096,7 @@ _FLAGS: List[Tuple[str, str, str]] = [
     ("--schedule", "groups", "schedule"),
     ("--overlap", "overlap", "bool"),
     ("--participation", "participation", "participation"),
+    ("--hops", "hops", "hops"),
     ("--method-kw", "method_kw", "json"),
     ("--compressor-kw", "compressor_kw", "json"),
     ("--tp-pad-heads", "tp_pad_heads", "int"),
@@ -954,6 +1143,14 @@ _FLAG_HELP = {
                        "JSON {...} dict; 'async' names the event-driven "
                        "simulator (core/participation.py) and refuses the "
                        "synchronous drivers",
+    "--hops": "two-tier hierarchical aggregation (DESIGN.md §13): "
+              "'pods=<int>,cross=carrier[:ratio]' — clients aggregate over "
+              "the fast intra-pod links on the spec's carrier/schedule, "
+              "then each pod's aggregator error-feeds one compressed "
+              "innovation per round across the slow cross-pod links, e.g. "
+              "'pods=2,cross=quant4:0.05'; 'cross=dense' (or pods=1) is "
+              "bit-identical to the flat path; a JSON {...} dict also "
+              "round-trips",
     "--clients": "emulated EF clients on the single-device mesh",
     "--method-kw": "JSON dict of extra Method kwargs (e.g. "
                    "'{\"gamma\": 0.01}')",
@@ -1001,6 +1198,8 @@ def add_flags(ap: argparse.ArgumentParser) -> None:
             kw["type"] = parse_schedule_flag
         elif kind == "participation":
             kw["type"] = parse_participation_flag
+        elif kind == "hops":
+            kw["type"] = parse_hops_flag
         else:
             kw["type"] = _TYPES[kind]
             if flag in _FLAG_CHOICES:
@@ -1058,6 +1257,14 @@ GOLDEN_SPECS: Dict[str, Dict[str, Any]] = {
                         "seq_len": 64,
                         "participation": {"mode": "sampled",
                                           "fraction": 0.25, "seed": 7}},
+    # v5: two-tier hierarchical aggregation — 2 pods of 4 clients, dense
+    # intra hop, quant4 cross-pod hop with its own EF memory per pod
+    # (DESIGN.md §13; `--hops pods=2,cross=quant4:0.05`)
+    "hierarchy_quant4_cross": {"smoke": True, "clients": 8, "global_batch": 8,
+                               "seq_len": 64,
+                               "hops": {"pods": 2,
+                                        "cross_carrier": "quant4",
+                                        "cross_ratio": 0.05}},
 }
 
 

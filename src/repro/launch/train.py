@@ -46,8 +46,23 @@ def main(argv=None) -> None:
                     help="with --publish-stream: also write a bootstrap "
                          "checkpoint into the stream every N steps (0 = "
                          "only the initial one)")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="join a multi-process jax.distributed fleet at this "
+                         "coordinator (process 0 hosts it) before any jax "
+                         "device access; needs --num-processes/--process-id "
+                         "(launch/multiproc.py)")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
     args = ap.parse_args(argv)
     spec = spec_lib.RunSpec.from_args(args)
+
+    if args.coordinator is not None:
+        if args.num_processes is None or args.process_id is None:
+            ap.error("--coordinator needs --num-processes and --process-id")
+        # BEFORE the session import chain touches jax device state
+        from repro.launch import multiproc
+        multiproc.distributed_init(args.coordinator, args.num_processes,
+                                   args.process_id)
 
     from repro.launch.session import Session  # defer the jax-heavy import
 
@@ -110,6 +125,13 @@ def main(argv=None) -> None:
     if pp["mode"] != "full":
         print(f"participation mode={pp['mode']} fraction={pp['fraction']} "
               f"seed={pp['seed']} cohort={pp['cohort']}/{pp['n']} per round")
+    hp = spec_lib.hops_preview(sess.spec)
+    if hp["hierarchical"]:
+        print(f"hops pods={hp['pods']} cross={hp['cross_carrier']}"
+              f":{hp['cross_ratio']} "
+              f"clients_per_pod={hp['clients_per_pod']}"
+              + (" (trivial cross: flat-equivalent)"
+                 if hp["trivial_cross"] else ""))
 
     if args.publish_stream:
         sess.publish_to(args.publish_stream,

@@ -325,33 +325,41 @@ def test_from_json_rejects_unknown_keys_and_bad_version():
         RunSpec.from_dict({k: v for k, v in good.items() if k != "version"})
     # the v2 schema bump (downlink fields change what a spec EXECUTES):
     # pre-downlink v1 specs are rejected loudly, never silently upgraded
-    assert spec_lib.SCHEMA_VERSION == 4
+    assert spec_lib.SCHEMA_VERSION == 5
     v1 = {k: v for k, v in good.items()
           if k not in ("downlink_carrier", "downlink_ratio", "groups",
-                       "participation")}
+                       "participation", "hops")}
     with pytest.raises(ValueError, match="version"):
         RunSpec.from_dict({**v1, "version": 1})
 
 
 def test_old_specs_auto_upgrade_and_roundtrip():
     """v3 is purely additive over v2 (``groups`` defaults to the uniform
-    one-group schedule) and v4 over v3 (``participation`` defaults to mode
-    'full') — exactly what every older spec always meant — so old dicts
-    upgrade mechanically (v2 chains through v3), round-trip at the current
-    schema, and hash identically: every old checkpoint stays resumable."""
+    one-group schedule), v4 over v3 (``participation`` defaults to mode
+    'full'), and v5 over v4 (``hops`` defaults to the flat topology) —
+    exactly what every older spec always meant — so old dicts upgrade
+    mechanically (chaining through the intermediate versions), round-trip
+    at the current schema, and hash identically: every old checkpoint
+    stays resumable."""
     now = RunSpec(arch="gemma2-9b", carrier="quant4", eta=0.3)
-    v3 = {k: v for k, v in now.to_dict().items() if k != "participation"}
+    v4 = {k: v for k, v in now.to_dict().items() if k != "hops"}
+    v4["version"] = 4
+    up4 = RunSpec.from_dict(v4)
+    assert up4 == now and up4.version == 5 and up4.hops == {}
+    assert up4.spec_hash() == now.spec_hash()
+    v3 = {k: v for k, v in now.to_dict().items()
+          if k not in ("participation", "hops")}
     v3["version"] = 3
     up = RunSpec.from_dict(v3)
-    assert up == now and up.version == 4 and up.participation == {}
+    assert up == now and up.version == 5 and up.participation == {}
     assert RunSpec.from_json(up.to_json()) == up
     assert up.spec_hash() == now.spec_hash()
-    # v2 chains v2 → v3 → v4
+    # v2 chains v2 → v3 → v4 → v5
     v2 = {k: v for k, v in now.to_dict().items()
-          if k not in ("groups", "participation")}
+          if k not in ("groups", "participation", "hops")}
     v2["version"] = 2
     up2 = RunSpec.from_dict(v2)
-    assert up2 == now and up2.version == 4 and up2.groups == []
+    assert up2 == now and up2.version == 5 and up2.groups == []
     assert up2.spec_hash() == now.spec_hash()
     # an old dict that somehow carries the newer field is NOT silently
     # upgraded (it was written by something claiming an impossible schema)
@@ -359,8 +367,10 @@ def test_old_specs_auto_upgrade_and_roundtrip():
         RunSpec.from_dict({**now.to_dict(), "version": 2})
     with pytest.raises(ValueError, match="version"):
         RunSpec.from_dict(
-            {**now.to_dict(), "version": 3,
+            {**v3, "version": 3,
              "participation": {"mode": "sampled", "fraction": 0.5}})
+    with pytest.raises(ValueError, match="version"):
+        RunSpec.from_dict({**v4, "version": 4, "hops": {"pods": 2}})
 
 
 # ---------------------------------------------------------------------------
